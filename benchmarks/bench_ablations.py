@@ -1,0 +1,66 @@
+"""Ablations (beyond-paper): which Lumina component buys what.
+
+Five variants, 20-eval budget on the compass tier, 3 seeds:
+  full            — QualE + QuanE + SE(enhanced) + TM reflection + refinement
+  no-enhanced     — SE corrective rules off (RuleOracle(enhanced=False))
+  noisy-llm       — 30% error-injected oracle (refinement must recover)
+  no-proxy        — QuanE sensitivity runs on the expensive tier (the paper's
+                    §3.2.2 fallback, costs budget-equivalent evals; here we
+                    emulate by shrinking the exploration budget accordingly)
+  no-refine       — refinement loop disabled (static AHK, like white-box DSE)
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.loop import LuminaDSE
+from repro.core.llm import RuleOracle, DegradedOracle
+from repro.core.refine import RefinementLoop
+from repro.perfmodel import (gpt3_layer_prefill, gpt3_layer_decode,
+                             RooflineModel, CompassModel)
+
+
+class _NoRefine(RefinementLoop):
+    def update(self, sens, tm, sample):
+        return ""
+
+    def maybe_reanchor(self, sens, tm, mt, mp, step):
+        return sens
+
+
+def run(budget: int = 20, trials: int = 3) -> List[str]:
+    pre, dec = gpt3_layer_prefill(), gpt3_layer_decode()
+    ct, cp = CompassModel(pre), CompassModel(dec)
+    rt, rp = RooflineModel(pre), RooflineModel(dec)
+
+    def campaign(seed, llm=None, refine=True, proxy=True, b=budget):
+        dse = LuminaDSE(ct, cp,
+                        proxy_models=(rt, rp) if proxy else None,
+                        llm=llm, seed=seed)
+        if not refine:
+            dse.refiner = _NoRefine()
+        return dse.run(budget=b)
+
+    variants = {
+        "full": dict(),
+        "no_enhanced": dict(llm=RuleOracle(enhanced=False)),
+        "noisy_llm": dict(llm=DegradedOracle(0.3, seed=7)),
+        "no_proxy": dict(proxy=False, b=max(budget - 4, 4)),
+        "no_refine": dict(refine=False),
+    }
+    lines = []
+    for name, kw in variants.items():
+        sups, phvs = [], []
+        for t in range(trials):
+            r = campaign(t, **kw)
+            sups.append(r.superior_count)
+            phvs.append(r.phv)
+        lines.append(f"ablation,{name}_superior_mean,{np.mean(sups):.1f}")
+        lines.append(f"ablation,{name}_phv_mean,{np.mean(phvs):.4g}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

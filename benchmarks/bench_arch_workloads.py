@@ -1,0 +1,36 @@
+"""Framework-specific table: every assigned architecture as a DSE workload.
+
+For each of the 10 archs, evaluate the A100 reference point on the
+arch-derived operator graph (prefill b8 s2048 / decode at kv 3072, TP=8,
+mirroring the paper's GPT-3 setup) and report TTFT / TPOT / dominant stall.
+This is the bridge between the model zoo and the Lumina core: any of these
+rows can seed a DSE campaign (examples/explore_design_space.py).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import ARCHS
+from repro.perfmodel import RooflineModel, attribute_stalls
+from repro.perfmodel.designspace import SPACE, A100_REFERENCE
+from repro.perfmodel.workload import from_arch
+
+
+def run() -> List[str]:
+    idx = SPACE.encode_nearest(A100_REFERENCE)
+    lines = []
+    for name, cfg in ARCHS.items():
+        mt = RooflineModel(from_arch(cfg, batch=8, seq=2048, decode=False))
+        mp = RooflineModel(from_arch(cfg, batch=8, seq=2048, decode=True,
+                                     kv_len=3072))
+        rt = attribute_stalls(mt, idx)
+        rp = attribute_stalls(mp, idx)
+        lines.append(f"archs,{name}_ttft_ms,{rt.latency * 1e3:.2f},"
+                     f"stall={rt.dominant}")
+        lines.append(f"archs,{name}_tpot_us,{rp.latency * 1e6:.1f},"
+                     f"stall={rp.dominant}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,50 @@
+"""Paper Table 4: Lumina's Designs A/B vs the A100 reference, on the
+calibrated compass model.  Reports normalized TTFT / TPOT / Area and the
+TTFT/Area, TPOT/Area efficiency products next to the paper's values.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.perfmodel import gpt3_layer_prefill, gpt3_layer_decode, CompassModel
+from repro.perfmodel.designspace import (SPACE, A100_REFERENCE, DESIGN_A,
+                                         DESIGN_B)
+from repro.perfmodel.hardware import area_mm2
+
+PAPER = {  # (ttft, tpot, area, ttft/area, tpot/area)
+    "A": (0.717, 0.947, 0.772, 1.805, 1.770),
+    "B": (0.592, 0.948, 0.952, 1.366, 1.107),
+}
+
+
+def _area(des) -> float:
+    v = {k: jnp.asarray([float(des[k])]) for k in SPACE.names}
+    return float(area_mm2(v)[0])
+
+
+def run() -> List[str]:
+    mt = CompassModel(gpt3_layer_prefill())
+    mp = CompassModel(gpt3_layer_decode())
+    vals = {}
+    for tag, des in (("A100", A100_REFERENCE), ("A", DESIGN_A), ("B", DESIGN_B)):
+        idx = SPACE.encode_nearest(des)
+        vals[tag] = (float(mt.latency(idx)[0]), float(mp.latency(idx)[0]),
+                     _area(des))
+    ref = vals["A100"]
+    lines = []
+    for tag in ("A", "B"):
+        t, p, a = (vals[tag][i] / ref[i] for i in range(3))
+        ta, pa = 1.0 / (t * a), 1.0 / (p * a)
+        pt = PAPER[tag]
+        lines.append(f"table4,design{tag}_ttft,{t:.3f} (paper {pt[0]})")
+        lines.append(f"table4,design{tag}_tpot,{p:.3f} (paper {pt[1]})")
+        lines.append(f"table4,design{tag}_area,{a:.3f} (paper {pt[2]})")
+        lines.append(f"table4,design{tag}_ttft_per_area,{ta:.3f} (paper {pt[3]})")
+        lines.append(f"table4,design{tag}_tpot_per_area,{pa:.3f} (paper {pt[4]})")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,44 @@
+"""Quickstart: run a 20-sample Lumina DSE campaign against the A100
+reference and print the Pareto-optimal designs it finds.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.perfmodel import (gpt3_layer_prefill, gpt3_layer_decode,
+                             RooflineModel, CompassModel)
+from repro.perfmodel.designspace import SPACE
+from repro.core.loop import LuminaDSE
+
+
+def main() -> None:
+    # the paper's evaluation workload: one GPT-3 175B layer, TP=8,
+    # batch 8, seq 2048 (TTFT) / 1024th output token (TPOT), FP16
+    prefill, decode = gpt3_layer_prefill(), gpt3_layer_decode()
+
+    # high-fidelity tier pays the budget; roofline tier is the free proxy
+    dse = LuminaDSE(
+        CompassModel(prefill), CompassModel(decode),
+        proxy_models=(RooflineModel(prefill), RooflineModel(decode)),
+        seed=0)
+
+    result = dse.run(budget=20)
+
+    print(f"evaluations: {len(result.samples)}  "
+          f"designs dominating the A100: {result.superior_count}  "
+          f"PHV: {result.phv:.4g}")
+    print("\nPareto front (vs A100 = 1.0):")
+    ref = dse.ref_point
+    for s in result.pareto:
+        vals = SPACE.decode_np(s.idx)
+        cfgstr = " ".join(f"{k}={int(v)}" for k, v in vals.items())
+        print(f"  TTFT {s.ttft / ref[0]:.3f}  TPOT {s.tpot / ref[1]:.3f}  "
+              f"Area {s.area / ref[2]:.3f}   [{cfgstr}]")
+    if result.trajectory_notes:
+        print("\nreflection notes (refinement loop):")
+        for n in result.trajectory_notes[:5]:
+            print("  " + n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpoint import (save_checkpoint, restore_checkpoint,
+                                         AsyncCheckpointer, latest_step)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "AsyncCheckpointer",
+           "latest_step"]

@@ -1,0 +1,23 @@
+"""Lumina core: LLM-guided DSE framework (the paper's primary contribution).
+
+Components (paper Figure 2):
+  QualE  — :mod:`repro.core.quale`   influence-map acquisition
+  QuanE  — :mod:`repro.core.quane`   sensitivity quantification
+  SE     — :mod:`repro.core.strategy` bottleneck-mitigation strategy
+  EE     — :mod:`repro.core.explore`  simulator integration layer
+  TM     — :mod:`repro.core.memory`   trajectory memory + reflection
+  Refine — :mod:`repro.core.refine`   AHK recalibration loop
+  Loop   — :mod:`repro.core.loop`     the orchestrated DSE campaign
+plus the DSE Benchmark (:mod:`repro.core.bench`), the LLM backends
+(:mod:`repro.core.llm`), Pareto/PHV metrics (:mod:`repro.core.pareto`) and
+the black-box baselines (:mod:`repro.core.baselines`).
+"""
+
+from repro.core.loop import LuminaDSE, DSEResult
+from repro.core.llm import RuleOracle, DegradedOracle, MCQuery
+from repro.core.pareto import (hypervolume, pareto_front, pareto_mask,
+                               sample_efficiency, dominates_ref)
+
+__all__ = ["LuminaDSE", "DSEResult", "RuleOracle", "DegradedOracle",
+           "MCQuery", "hypervolume", "pareto_front", "pareto_mask",
+           "sample_efficiency", "dominates_ref"]

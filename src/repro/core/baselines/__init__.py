@@ -1,0 +1,18 @@
+from repro.core.baselines.common import BaseOptimizer, run_method, MethodResult
+from repro.core.baselines.grid import GridSearch
+from repro.core.baselines.random_walk import RandomWalker
+from repro.core.baselines.bo import BayesianOptimization
+from repro.core.baselines.ga import GeneticAlgorithm
+from repro.core.baselines.aco import AntColony
+
+METHODS = {
+    "GS": GridSearch,
+    "RW": RandomWalker,
+    "BO": BayesianOptimization,
+    "GA": GeneticAlgorithm,
+    "ACO": AntColony,
+}
+
+__all__ = ["BaseOptimizer", "run_method", "MethodResult", "GridSearch",
+           "RandomWalker", "BayesianOptimization", "GeneticAlgorithm",
+           "AntColony", "METHODS"]

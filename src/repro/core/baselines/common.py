@@ -1,0 +1,82 @@
+"""Ask/tell interface shared by all black-box DSE baselines (Table 2)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Type
+
+import numpy as np
+
+from repro.core.pareto import hypervolume, sample_efficiency, pareto_mask
+from repro.perfmodel.designspace import DesignSpace, SPACE
+
+
+class BaseOptimizer:
+    """Black-box multi-objective optimizer over the index-coded space.
+
+    ask(n) -> (n, n_params) candidate designs;
+    tell(X, Y) -> observe objectives (minimize, shape (n, 3)).
+    """
+
+    def __init__(self, space: DesignSpace = SPACE, seed: int = 0):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+        self.X: List[np.ndarray] = []
+        self.Y: List[np.ndarray] = []
+
+    def ask(self, n: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def tell(self, X: np.ndarray, Y: np.ndarray) -> None:
+        for x, y in zip(np.atleast_2d(X), np.atleast_2d(Y)):
+            self.X.append(np.asarray(x, dtype=np.int32))
+            self.Y.append(np.asarray(y, dtype=np.float64))
+
+    # -------- helpers shared by subclasses --------
+    def _norm_y(self) -> np.ndarray:
+        y = np.stack(self.Y)
+        lo, hi = y.min(axis=0), y.max(axis=0)
+        return (y - lo) / np.maximum(hi - lo, 1e-12)
+
+    def _norm_x(self, X: np.ndarray) -> np.ndarray:
+        return np.asarray(X, dtype=np.float64) / (self.space.cardinalities - 1)
+
+
+@dataclasses.dataclass
+class MethodResult:
+    name: str
+    X: np.ndarray
+    Y: np.ndarray
+    phv: float
+    sample_efficiency: float
+    superior_count: int
+    phv_curve: np.ndarray          # PHV after each evaluation
+
+
+def run_method(opt_cls: Type[BaseOptimizer], evaluator, budget: int,
+               ref_point: np.ndarray, space: DesignSpace = SPACE,
+               seed: int = 0, batch: int = 1, curve_stride: int = 25,
+               name: Optional[str] = None, **kw) -> MethodResult:
+    """Drive one baseline for `budget` evaluations.
+
+    evaluator(X: (n, n_params) int) -> (n, 3) objectives [ttft, tpot, area].
+    """
+    opt = opt_cls(space=space, seed=seed, **kw)
+    ref = np.asarray(ref_point, dtype=np.float64)
+    phv_curve = []
+    while len(opt.X) < budget:
+        n = min(batch, budget - len(opt.X))
+        X = np.atleast_2d(opt.ask(n))[:n]
+        Y = evaluator(X)
+        opt.tell(X, Y)
+        if len(opt.X) % curve_stride == 0 or len(opt.X) >= budget:
+            phv_curve.append(hypervolume(np.stack(opt.Y), ref))
+    X = np.stack(opt.X)
+    Y = np.stack(opt.Y)
+    from repro.core.pareto import dominates_ref
+    return MethodResult(
+        name=name or opt_cls.__name__, X=X, Y=Y,
+        phv=hypervolume(Y, ref),
+        sample_efficiency=sample_efficiency(Y, ref),
+        superior_count=int(dominates_ref(Y, ref).sum()),
+        phv_curve=np.asarray(phv_curve),
+    )

@@ -1,0 +1,49 @@
+"""Exploration Engine (EE): directive -> simulator evaluation -> sample.
+
+The EE is the integration layer (§3.3.2): it serializes the SE's directive
+into the simulator's design format (choice-index vector), issues the
+evaluation, and returns the structured sample for the Trajectory Memory.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.memory import Sample
+from repro.core.strategy import Directive
+from repro.perfmodel.critical_path import attribute_stalls, StallReport
+
+
+class ExplorationEngine:
+    """Wraps the (ttft_model, tpot_model) pair as the evaluation backend."""
+
+    def __init__(self, ttft_model, tpot_model):
+        self.ttft_model = ttft_model
+        self.tpot_model = tpot_model
+        self.evals = 0        # simulator invocations (the sampling budget)
+
+    def evaluate(self, idx: np.ndarray, step: int,
+                 directive: Optional[Directive] = None) -> Sample:
+        idx = np.asarray(idx, dtype=np.int32)
+        rep_t = attribute_stalls(self.ttft_model, idx)
+        rep_p = attribute_stalls(self.tpot_model, idx)
+        self.evals += 1
+        # the design's dominant stall = the larger absolute stall across the
+        # two latency objectives (what the SE will attack next)
+        dom = rep_t if rep_t.latency >= rep_p.latency * 50 else self._merge(rep_t, rep_p)
+        return Sample(
+            step=step, idx=idx.copy(),
+            ttft=rep_t.latency, tpot=rep_p.latency, area=rep_t.area,
+            dominant_stall=dom.dominant,
+            directive=directive.as_dict() if directive else None,
+        )
+
+    def reports(self, idx: np.ndarray):
+        """Fresh critical-path reports for both latency objectives."""
+        return (attribute_stalls(self.ttft_model, idx),
+                attribute_stalls(self.tpot_model, idx))
+
+    @staticmethod
+    def _merge(rep_t: StallReport, rep_p: StallReport) -> StallReport:
+        return rep_t if rep_t.dominant_fraction >= rep_p.dominant_fraction else rep_p

@@ -1,0 +1,113 @@
+"""The Lumina DSE loop (Figure 2): AHK acquisition -> iterate
+(evaluate -> bottleneck analysis -> strategy -> explore) -> refine.
+
+Budget accounting follows the paper: only *simulation-environment*
+evaluations (EE calls on the target-fidelity models) count against the
+sampling budget.  QualE probing and QuanE sensitivity run on the cheap
+proxy tier (§3.2.2: "the QuanE can focus on estimating only power and area,
+which are faster to evaluate") — pass ``proxy_models`` to enable this; by
+default the target models are also the proxies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.explore import ExplorationEngine
+from repro.core.llm import LLMBackend, RuleOracle
+from repro.core.memory import Sample, TrajectoryMemory
+from repro.core.quale import derive_influence_map, InfluenceMap
+from repro.core.quane import sensitivity_analysis
+from repro.core.refine import RefinementLoop
+from repro.core.strategy import StrategyEngine
+from repro.perfmodel.designspace import DesignSpace, SPACE, A100_REFERENCE
+
+
+@dataclasses.dataclass
+class DSEResult:
+    samples: List[Sample]
+    phv: float
+    sample_efficiency: float
+    superior_count: int
+    pareto: List[Sample]
+    trajectory_notes: List[str]
+
+
+class LuminaDSE:
+    def __init__(self, ttft_model, tpot_model,
+                 proxy_models: Optional[Tuple] = None,
+                 llm: Optional[LLMBackend] = None,
+                 space: DesignSpace = SPACE,
+                 ref_point: Optional[np.ndarray] = None,
+                 area_budget: Optional[float] = None,
+                 seed: int = 0):
+        self.space = space
+        self.ee = ExplorationEngine(ttft_model, tpot_model)
+        self.proxy_ttft, self.proxy_tpot = proxy_models or (ttft_model, tpot_model)
+        self.llm = llm or RuleOracle(enhanced=True)
+        self.refiner = RefinementLoop()
+        self.seed = seed
+        if ref_point is None:
+            ref_idx = space.encode_nearest(A100_REFERENCE)
+            r = self.ee.evaluate(ref_idx, step=-1)
+            self.ee.evals = 0        # reference evaluation is free (given)
+            ref_point = r.objectives
+        self.ref_point = np.asarray(ref_point, dtype=np.float64)
+        self.area_budget = area_budget if area_budget is not None else float(self.ref_point[2])
+
+    # ------------------------------------------------------------------
+    def run(self, budget: int = 20,
+            init: Optional[np.ndarray] = None) -> DSEResult:
+        space = self.space
+        tm = TrajectoryMemory(self.ref_point)
+        notes: List[str] = []
+
+        # ---- AHK acquisition (proxy tier, not budgeted) ----
+        imap = derive_influence_map(self.proxy_ttft, self.proxy_tpot, space,
+                                    seed=self.seed)
+        se = StrategyEngine(self.llm, imap, space)
+
+        idx = np.asarray(init if init is not None
+                         else space.encode_nearest(A100_REFERENCE), dtype=np.int32)
+        sens = sensitivity_analysis(self.proxy_ttft, self.proxy_tpot, idx, space)
+
+        sample = self.ee.evaluate(idx, step=0)
+        tm.add(sample)
+        visited = {tuple(idx)}
+
+        focus_cycle = ("ttft", "tpot", "area")
+        step = 0
+        while self.ee.evals < budget:
+            step += 1
+            focus = focus_cycle[(step - 1) % len(focus_cycle)]
+            base = tm.best(weights=_focus_weights(focus)) or tm.samples[-1]
+            rep_t, rep_p = self.ee.reports(base.idx)  # cached-model calls, cheap
+            report = rep_t if focus == "ttft" else rep_p if focus == "tpot" else rep_t
+            directive = se.propose(base.idx, report, sens, tm, focus,
+                                   area_budget=self.area_budget,
+                                   visited=visited)
+            visited.add(tuple(directive.new_idx))
+            sample = self.ee.evaluate(directive.new_idx, step=step,
+                                      directive=directive)
+            tm.add(sample)
+            note = self.refiner.update(sens, tm, sample)
+            if note:
+                notes.append(f"step {step}: {note}")
+            sens = self.refiner.maybe_reanchor(sens, tm, self.proxy_ttft,
+                                               self.proxy_tpot, step)
+
+        return DSEResult(
+            samples=list(tm.samples),
+            phv=tm.phv(),
+            sample_efficiency=tm.sample_efficiency(),
+            superior_count=tm.superior_count(),
+            pareto=tm.pareto(),
+            trajectory_notes=notes,
+        )
+
+
+def _focus_weights(focus: str):
+    return {"ttft": (3.0, 1.0, 1.0), "tpot": (1.0, 3.0, 1.0),
+            "area": (1.0, 1.0, 3.0)}[focus]

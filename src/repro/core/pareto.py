@@ -1,0 +1,114 @@
+"""Pareto-front utilities: dominance, exact hypervolume (2D/3D), metrics.
+
+Conventions: ALL objectives are minimized.  The Pareto Hypervolume (PHV,
+paper Definition 3) is the m-dimensional volume of the region dominated by
+the front and bounded above by the reference point; points not strictly
+better than the reference in every objective contribute nothing.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def pareto_mask(y: np.ndarray) -> np.ndarray:
+    """Boolean mask of nondominated rows of y (n, m), minimization."""
+    y = np.asarray(y, dtype=np.float64)
+    n = y.shape[0]
+    mask = np.ones(n, dtype=bool)
+    for i in range(n):
+        if not mask[i]:
+            continue
+        dominated_by_i = np.all(y >= y[i], axis=1) & np.any(y > y[i], axis=1)
+        mask &= ~dominated_by_i
+        mask[i] = True
+        # anything that dominates i kills i
+        dominates_i = np.all(y <= y[i], axis=1) & np.any(y < y[i], axis=1)
+        if dominates_i.any():
+            mask[i] = False
+    return mask
+
+
+def pareto_front(y: np.ndarray) -> np.ndarray:
+    return np.asarray(y)[pareto_mask(y)]
+
+
+def dominates_ref(y: np.ndarray, ref: np.ndarray) -> np.ndarray:
+    """Mask of points strictly better than the reference in ALL objectives."""
+    return np.all(np.asarray(y) < np.asarray(ref)[None, :], axis=1)
+
+
+def _hv2d(pts: np.ndarray, ref: np.ndarray) -> float:
+    """Exact 2D hypervolume (minimization)."""
+    pts = pts[np.all(pts < ref[None, :], axis=1)]
+    if len(pts) == 0:
+        return 0.0
+    order = np.argsort(pts[:, 0])
+    pts = pts[order]
+    hv, y_best = 0.0, ref[1]
+    for x, y in pts:
+        if y < y_best:
+            hv += (ref[0] - x) * (y_best - y)
+            y_best = y
+    return float(hv)
+
+
+def _hv3d(pts: np.ndarray, ref: np.ndarray) -> float:
+    """Exact 3D hypervolume via z-sweep over 2D slabs (minimization).
+
+    Sort by z; between consecutive z levels the dominated xy-area is the 2D
+    hypervolume of all points at or below the slab.  O(n^2 log n) — the
+    fronts here are <= a few hundred points.
+    """
+    pts = pts[np.all(pts < ref[None, :], axis=1)]
+    if len(pts) == 0:
+        return 0.0
+    order = np.argsort(pts[:, 2])
+    pts = pts[order]
+    zs = np.concatenate([pts[:, 2], [ref[2]]])
+    hv = 0.0
+    for i in range(len(pts)):
+        dz = zs[i + 1] - zs[i]
+        if dz <= 0:
+            continue
+        hv += _hv2d(pts[: i + 1, :2], ref[:2]) * dz
+    return float(hv)
+
+
+def hypervolume(points: np.ndarray, ref: Sequence[float]) -> float:
+    """Exact hypervolume for 2 or 3 objectives (minimization)."""
+    points = np.asarray(points, dtype=np.float64)
+    ref = np.asarray(ref, dtype=np.float64)
+    if points.ndim != 2 or points.shape[0] == 0:
+        return 0.0
+    points = points[pareto_mask(points)]
+    m = points.shape[1]
+    if m == 2:
+        return _hv2d(points, ref)
+    if m == 3:
+        return _hv3d(points, ref)
+    raise NotImplementedError(f"hypervolume for m={m}")
+
+
+def hypervolume_mc(points: np.ndarray, ref: Sequence[float], lo: Sequence[float],
+                   n: int = 200_000, seed: int = 0) -> float:
+    """Monte-Carlo hypervolume estimate (oracle for property tests)."""
+    rng = np.random.default_rng(seed)
+    ref = np.asarray(ref, dtype=np.float64)
+    lo = np.asarray(lo, dtype=np.float64)
+    pts = np.asarray(points, dtype=np.float64)
+    samples = rng.uniform(lo, ref, size=(n, len(ref)))
+    dominated = np.zeros(n, dtype=bool)
+    for p in pts:
+        dominated |= np.all(samples >= p[None, :], axis=1)
+    return float(dominated.mean() * np.prod(ref - lo))
+
+
+def sample_efficiency(y: np.ndarray, ref: np.ndarray) -> float:
+    """Paper metric: fraction of evaluated designs strictly better than the
+    reference point in all objectives."""
+    y = np.asarray(y)
+    if len(y) == 0:
+        return 0.0
+    return float(dominates_ref(y, ref).mean())

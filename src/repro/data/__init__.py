@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMDataset, PrefetchIterator, make_batch_iter
+
+__all__ = ["SyntheticLMDataset", "PrefetchIterator", "make_batch_iter"]

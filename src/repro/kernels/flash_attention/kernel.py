@@ -1,0 +1,99 @@
+"""Flash attention forward kernel (TPU Pallas).
+
+Tiling: grid = (batch*heads, n_q_blocks, n_k_blocks); the k-block dimension
+is grid-minor, i.e. sequential on TPU, so the online-softmax running state
+(m, l, acc) lives in VMEM scratch and persists across k steps.  Q/K/V tiles
+are (block, head_dim) VMEM blocks; head_dim is MXU-lane aligned (128) for
+all assigned archs except whisper/llama3.2 (64, still lane-aligned).
+
+Causal blocks strictly above the diagonal are skipped via @pl.when (the
+kernel still visits the grid point but does no compute or DMA-dependent
+work — Pallas TPU prefetches the block, the FLOP cost is skipped).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, block_q: int, block_k: int,
+               n_k_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (not causal) or (ki * block_k <= qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                           (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                           (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, block_q: int = 256,
+                        block_k: int = 256,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q, k, v: (BH, S, hd) — heads pre-flattened into the batch dim."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    n_q, n_k = sq // block_q, sk // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_k_blocks=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            # online-softmax running state (fp32, persists across k blocks)
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

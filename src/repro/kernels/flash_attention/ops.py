@@ -1,0 +1,38 @@
+"""Public flash-attention op: jit'd wrapper + interpret fallback.
+
+On TPU the Pallas kernel runs compiled; on CPU (this container) it runs in
+interpret mode, which executes the kernel body in Python and validates the
+exact tiling/indexing logic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 256,
+                    block_k: int = 256,
+                    interpret: bool = None) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, H, hd) — heads already repeated for
+    GQA. Returns (B, Sq, H, hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, hd)
+    of = flash_attention_fwd(qf, kf, vf, causal=causal, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    return of.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,35 @@
+"""Public ppa_eval op: decode indices -> kernel -> metrics dict."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ppa_eval.kernel import ppa_eval_fwd
+from repro.kernels.ppa_eval.ref import op_table
+from repro.perfmodel.designspace import DesignSpace, SPACE
+from repro.perfmodel.workload import Workload
+
+
+def ppa_eval(idx: np.ndarray, wl: Workload, space: DesignSpace = SPACE, *,
+             block_b: int = 256, interpret: bool = None) -> dict:
+    """Evaluate a batch of design-index vectors with the Pallas kernel.
+
+    Returns {"latency": (B,), "stall": (B,4), "area": (B,)}.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    idx = np.atleast_2d(np.asarray(idx, dtype=np.int32))
+    b = idx.shape[0]
+    pad = (-b) % block_b if b > block_b else (block_b - b if b < block_b else 0)
+    if pad:
+        idx = np.concatenate([idx, np.repeat(idx[-1:], pad, axis=0)], axis=0)
+    vals = space.decode(jnp.asarray(idx))
+    dv = jnp.stack([vals[n] for n in space.names], axis=1).astype(jnp.float32)
+    tab = jnp.asarray(op_table(wl), jnp.float32)
+    out = ppa_eval_fwd(dv, tab, tp=float(wl.tp),
+                       block_b=min(block_b, dv.shape[0]), interpret=interpret)
+    out = np.asarray(out)[:b]
+    return {"latency": out[:, 0], "stall": out[:, 1:5], "area": out[:, 5]}

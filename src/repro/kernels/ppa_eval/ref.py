@@ -1,0 +1,30 @@
+"""Oracle for ppa_eval: the vectorized RooflineModel itself."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.perfmodel.roofline import RooflineModel
+from repro.perfmodel.designspace import DesignSpace, SPACE
+from repro.perfmodel.workload import Workload
+
+
+def op_table(wl: Workload) -> np.ndarray:
+    """Workload -> (n_ops, 8) float table in the kernel's column order."""
+    a = wl.arrays()
+    return np.stack([
+        a["kind"].astype(np.float64), a["flops"], a["bytes"],
+        a["m"], a["n"], a["k"], a["comm_bytes"], a["count"],
+    ], axis=1)
+
+
+def ppa_eval_ref(idx: np.ndarray, wl: Workload,
+                 space: DesignSpace = SPACE) -> np.ndarray:
+    """idx: (B, n_params) choice indices. Returns (B, 8) like the kernel."""
+    model = RooflineModel(wl, space)
+    out = model.eval_ppa(idx)
+    b = out["latency"].shape[0]
+    return np.concatenate([
+        out["latency"][:, None], out["stall"], out["area"][:, None],
+        np.zeros((b, 2)),
+    ], axis=1).astype(np.float32)

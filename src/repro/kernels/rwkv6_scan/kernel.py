@@ -1,0 +1,77 @@
+"""RWKV6 (Finch) WKV recurrence kernel (TPU Pallas).
+
+Recurrence per head (state S: (hd, hd) fp32):
+
+    y_t = r_t @ (S + u * (k_t^T v_t))
+    S   = diag(w_t) @ S + k_t^T v_t
+
+Tiling: grid = (B*H, T // block_t); the time dimension is grid-minor
+(sequential), so the state matrix persists in VMEM scratch across time
+blocks.  r/k/v/w tiles are (block_t, hd) VMEM blocks; the u bonus vector is
+broadcast to every grid step.  Inside a block the recurrence steps with a
+fori_loop over block_t (each step is an outer-product + (hd,hd) matvec on
+the VPU/MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scr, *,
+                 block_t: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)          # (bt, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (1, hd) -> broadcast
+
+    def step(t, carry):
+        s, ys = carry
+        kv = k[t][:, None] * v[t][None, :]    # (hd, hd)
+        y = (r[t][None, :] @ (s + u[0][:, None] * kv))[0]
+        s = w[t][:, None] * s + kv
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y, t, axis=0)
+        return s, ys
+
+    s0 = s_scr[...]
+    ys0 = jnp.zeros((block_t, r.shape[1]), jnp.float32)
+    s, ys = jax.lax.fori_loop(0, block_t, step, (s0, ys0))
+    s_scr[...] = s
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+
+def rwkv6_scan_fwd(r, k, v, w, u, *, block_t: int = 64,
+                   interpret: bool = False):
+    """r/k/v/w: (BH, T, hd); u: (BH, 1, hd). Returns y: (BH, T, hd)."""
+    bh, t, hd = r.shape
+    block_t = min(block_t, t)
+    assert t % block_t == 0, (t, block_t)
+    n_t = t // block_t
+
+    kernel = functools.partial(_wkv6_kernel, block_t=block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_t),
+        in_specs=[
+            pl.BlockSpec((1, block_t, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_t, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_t, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_t, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

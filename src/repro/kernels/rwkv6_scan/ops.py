@@ -1,0 +1,23 @@
+"""Public rwkv6_scan op: jit'd wrapper + interpret fallback on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rwkv6_scan(r, k, v, w, u, *, block_t: int = 64, interpret: bool = None):
+    """r/k/v/w: (B, T, H, hd); u: (H, hd). Returns (B, T, H, hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, t, h, hd = r.shape
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+    uf = jnp.broadcast_to(u[None], (b, h, hd)).reshape(b * h, 1, hd)
+    y = rwkv6_scan_fwd(flat(r), flat(k), flat(v), flat(w), uf,
+                       block_t=block_t, interpret=interpret)
+    return y.reshape(b, h, t, hd).transpose(0, 2, 1, 3)

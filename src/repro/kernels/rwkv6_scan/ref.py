@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the rwkv6_scan kernel (same math as models.ssm)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """r/k/v/w: (BH, T, hd); u: (BH, 1, hd). Returns y: (BH, T, hd)."""
+    bh, t, hd = r.shape
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                       # (BH, hd)
+        kv = k_t[:, :, None] * v_t[:, None, :]         # (BH, hd, hd)
+        y = jnp.einsum("bk,bkv->bv", r_t, s + u[:, 0, :, None] * kv)
+        s = w_t[:, :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2).astype(jnp.float32) for a in (r, k, v, w))
+    s0 = jnp.zeros((bh, hd, hd), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2).astype(r.dtype)

@@ -1,0 +1,18 @@
+"""Public ssm_scan op: jit'd wrapper + interpret fallback on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_d", "interpret"))
+def ssm_scan(u, dt, a, b, c, *, block_t: int = 64, block_d: int = 128,
+             interpret: bool = None):
+    """Selective scan: u, dt (B,T,D); a (D,N); b, c (B,T,N) -> y (B,T,D)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssm_scan_fwd(u, dt, a, b, c, block_t=block_t, block_d=block_d,
+                        interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for ssm_scan (mirrors models.ssm._selective_scan core)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(u, dt, a, b, c):
+    """u, dt: (B, T, D); a: (D, N); b, c: (B, T, N). Returns y: (B, T, D)."""
+    bsz, t, d = u.shape
+    n = a.shape[1]
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[..., None] * a[None])
+        dBu = dt_t[..., None] * b_t[:, None, :] * u_t[..., None]
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = tuple(x.transpose(1, 0, 2).astype(jnp.float32) for x in (u, dt, b, c))
+    h0 = jnp.zeros((bsz, d, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(u.dtype)

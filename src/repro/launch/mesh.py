@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips.  Multi-pod: (pod=2, data=16,
+model=16) = 512 chips, with the `pod` axis carrying pure data parallelism
+across the inter-pod (DCN) boundary.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS before calling.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (elastic re-mesh path, tests)."""
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a mesh (('pod','data') when multi-pod)."""
+    names = mesh.axis_names
+    return tuple(n for n in names if n in ("pod", "data"))
+
+
+def mesh_devices(mesh) -> int:
+    return int(mesh.size)

@@ -1,0 +1,200 @@
+"""Step factories + abstract input specs for every (arch x shape) cell.
+
+Everything the dry-run, the trainer and the server share lives here:
+
+* :func:`input_specs`  — ShapeDtypeStruct stand-ins for every model input
+  (weak-type-correct, shardable, no device allocation);
+* :func:`abstract_state` — eval_shape'd params / optimizer / cache trees;
+* :func:`make_train_step` / :func:`make_prefill_step` /
+  :func:`make_serve_step` — the jittable step functions;
+* :func:`shardings_for` — the full (params, opt, batch, cache) sharding
+  bundle for a mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import shardings as SH
+from repro.launch.mesh import data_axes
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------ specs
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for one cell (the dry-run's batch stand-in)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.mode == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    elif cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_ctx, cfg.d_model),
+                                             jnp.bfloat16)
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    if shape.mode == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    return out
+
+
+def abstract_params(model) -> PyTree:
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def abstract_cache(model, cfg: ArchConfig, shape: ShapeConfig) -> PyTree:
+    fn = functools.partial(model.init_cache, shape.global_batch, shape.seq_len)
+    if cfg.family == "audio":
+        enc = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.enc_ctx, cfg.d_model), jnp.bfloat16)
+        return jax.eval_shape(lambda e: fn(enc_out=e), enc)
+    return jax.eval_shape(fn)
+
+
+# ------------------------------------------------------------------ steps
+def make_train_step(model, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, metrics = adamw_update(opt_cfg, grads, opt_state,
+                                                  params)
+        return params, opt_state, {"loss": loss, **metrics}
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.forward(params, batch)
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return serve_step
+
+
+# ------------------------------------------------------------------ shardings
+def _zero1_checked(spec: P, dp: Tuple[str, ...], dp_size: int,
+                   shape: Tuple[int, ...], axis_sizes=None) -> P:
+    """ZeRO-1 moment sharding: put the (still unused) data axes on the first
+    unsharded dim whose size divides them (jax requires exact divisibility
+    and forbids axis reuse within one spec)."""
+    used = set()
+    for ax in spec:
+        if ax is None:
+            continue
+        used.update((ax,) if isinstance(ax, str) else tuple(ax))
+    avail = tuple(a for a in dp if a not in used)
+    if not avail:
+        return spec
+    axis_sizes = axis_sizes or {"pod": 2, "data": 16, "model": 16}
+    size = 1
+    for a in avail:
+        size *= axis_sizes.get(a, 1)
+    parts = list(spec)
+    while len(parts) < len(shape):
+        parts.append(None)
+    for i, ax in enumerate(parts):
+        if ax is None and shape[i] % max(size, 1) == 0 and shape[i] >= size:
+            parts[i] = avail if len(avail) > 1 else avail[0]
+            return P(*parts)
+    return spec
+
+
+def _axis_size(mesh, name: str) -> int:
+    return int(mesh.shape[name]) if name in mesh.axis_names else 1
+
+
+def shardings_for(mesh, model, cfg: ArchConfig, shape: ShapeConfig,
+                  zero1: bool = True, policy: str = "tp") -> Dict[str, PyTree]:
+    """PartitionSpec trees for params / optimizer / batch / cache.
+
+    policy:
+      "tp"   — Megatron TP over 'model' + DP over data axes (default);
+      "fsdp" — ZeRO-3 parameter sharding over ALL axes, batch over all axes
+               (wins for small dense models; see EXPERIMENTS.md §Perf).
+    """
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    model_size = _axis_size(mesh, "model")
+    p_abs = abstract_params(model)
+    if policy == "fsdp":
+        all_axes = tuple(mesh.axis_names)
+        total = int(mesh.size)
+        p_spec = SH.fsdp_param_specs(p_abs, all_axes, total)
+        opt_spec = {"m": p_spec, "v": p_spec, "step": P()}
+        bspec = SH.batch_spec(cfg, shape, all_axes, total)
+        return {"params": p_spec, "opt": opt_spec, "batch": bspec,
+                "hidden": None, "divisors": (total, 1)}
+    if policy == "dp":
+        # (MoE-aware) data parallelism: dense params replicated, expert
+        # stacks EP-sharded over 'model' when divisible, batch over ALL
+        # axes, ZeRO-sharded moments so fp32 optimizer state fits HBM
+        all_axes = tuple(mesh.axis_names)
+        total = int(mesh.size)
+        sizes = {a: _axis_size(mesh, a) for a in all_axes}
+
+        def pick(path, leaf):
+            keys = [str(getattr(k, "key", k)) for k in path]
+            if "moe" in keys and keys[-1] in ("w_gate", "w_up", "w_down") \
+                    and "shared" not in keys and leaf.ndim >= 3 \
+                    and leaf.shape[-3] % max(model_size, 1) == 0 \
+                    and leaf.shape[-3] >= model_size:
+                parts = [None] * leaf.ndim
+                parts[leaf.ndim - 3] = "model"
+                return P(*parts)
+            return P(*([None] * leaf.ndim))
+
+        p_spec = jax.tree_util.tree_map_with_path(pick, p_abs)
+        z = lambda s, l: _zero1_checked(s, all_axes, total, l.shape, sizes)
+        opt_spec = {"m": jax.tree.map(z, p_spec, p_abs),
+                    "v": jax.tree.map(z, p_spec, p_abs),
+                    "step": P()}
+        # MoE archs keep the model axis for EP, so the batch shards over the
+        # data axes only; dense archs spread the batch over everything
+        if cfg.n_experts:
+            bspec = SH.batch_spec(cfg, shape, dp, dp_size)
+            return {"params": p_spec, "opt": opt_spec, "batch": bspec,
+                    "hidden": None, "divisors": (dp_size, 1)}
+        bspec = SH.batch_spec(cfg, shape, all_axes, total)
+        return {"params": p_spec, "opt": opt_spec, "batch": bspec,
+                "hidden": None, "divisors": (total, 1)}
+    p_spec = SH.param_specs(p_abs, model_size)
+
+    def z1(spec, leaf):
+        if not zero1:
+            return spec
+        return _zero1_checked(spec, dp, dp_size, leaf.shape)
+
+    opt_spec = {
+        "m": jax.tree.map(z1, p_spec, p_abs),
+        "v": jax.tree.map(z1, p_spec, p_abs),
+        "step": P(),
+    }
+    out = {
+        "params": p_spec,
+        "opt": opt_spec,
+        "batch": SH.batch_spec(cfg, shape, dp, dp_size),
+        "hidden": SH.hidden_spec(dp),
+        "divisors": (dp_size, model_size),
+    }
+    if shape.mode == "decode":
+        out["cache"] = SH.cache_spec(cfg, shape, dp, dp_size, model_size)
+    return out
+
+
+def named(mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

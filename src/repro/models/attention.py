@@ -1,0 +1,218 @@
+"""GQA attention: full, memory-efficient chunked (online softmax), and
+cached decode.
+
+``chunked_attention`` is the pure-JAX flash-attention algorithm (two-level
+scan over q/kv blocks with online-softmax rescaling) — it is also the oracle
+for the Pallas ``flash_attention`` kernel.  The model layer picks the
+implementation by sequence length (and can be forced via ``impl``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, init_linear
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, kvH, hd) -> (B, S, kvH*n_rep, hd)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+              .reshape(b, s, h * n_rep, d)
+
+
+def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   causal: bool = True,
+                   q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, H, hd). Materializes scores."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(sk)[None, :]
+        logits = jnp.where(ki <= qi, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, q_chunk: int = 512,
+                      k_chunk: int = 512) -> jnp.ndarray:
+    """Memory-efficient attention: never materializes (Sq, Sk) scores.
+
+    Outer lax.map over q blocks; inner lax.scan over kv blocks carrying
+    (max, sum, acc) online-softmax state.  Equivalent to full_attention
+    (see tests/test_kernels.py).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    nq, nk = sq // q_chunk, sk // k_chunk
+    assert sq % q_chunk == 0 and sk % k_chunk == 0, (sq, q_chunk, sk, k_chunk)
+    scale = 1.0 / np.sqrt(hd)
+
+    qb = q.reshape(b, nq, q_chunk, h, hd)
+    kb = k.reshape(b, nk, k_chunk, h, hd)
+    vb = v.reshape(b, nk, k_chunk, h, hd)
+
+    def process_q_block(qi_and_block):
+        qi, qblk = qi_and_block                      # (b, q_chunk, h, hd)
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, h, hd), jnp.float32)
+
+        def kv_step(carry, ki_and_blocks):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_and_blocks
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk).astype(jnp.float32) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+                kpos = ki * k_chunk + jnp.arange(k_chunk)[None, :]
+                s = jnp.where(kpos <= qpos, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+                "bhqk,bkhd->bqhd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        ks = (jnp.arange(nk), kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), ks)
+        out = acc / jnp.maximum(l.transpose(0, 2, 1)[..., None], 1e-30)
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(process_q_block,
+                       (jnp.arange(nq), qb.transpose(1, 0, 2, 3, 4)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     kv_len: jnp.ndarray) -> jnp.ndarray:
+    """Single-token decode: q (B, 1, H, hd) against cache (B, S, H, hd);
+    positions >= kv_len are masked."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache).astype(jnp.float32) * scale
+    mask = jnp.arange(k_cache.shape[1])[None, None, None, :] < kv_len
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v_cache)
+
+
+def gqa_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray,
+                         kv_len: jnp.ndarray) -> jnp.ndarray:
+    """Grouped-query decode WITHOUT materializing a repeated KV cache.
+
+    Perf iteration (EXPERIMENTS.md §Perf, jamba long_500k): `_repeat_kv`
+    broadcast an 8-kv-head 500k cache to 64 heads (8x HBM traffic and, under
+    GSPMD, an 8x replicated temp).  Grouping the query heads instead keeps
+    the cache in its native layout: q (B, 1, H, hd) -> (B, kvH, G, hd),
+    attention runs per kv-head over the group dim.
+    """
+    b, one, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)                     # fold the q-seq dim (1)
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    logits = logits * scale
+    mask = jnp.arange(k_cache.shape[1])[None, None, None, :] < kv_len
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# attention layer (projections + rope + impl dispatch)
+# ---------------------------------------------------------------------------
+
+# Above this seq len the memory-efficient chunked (flash) impl is used.
+# Perf iteration 4 (EXPERIMENTS.md §Perf): materialized (S,S) scores at
+# S=4096 dominated the HBM roofline term in training; 2048 keeps every
+# assigned train/prefill shape on the flash path.
+CHUNKED_THRESHOLD = 2048
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, bias: bool, dtype=jnp.bfloat16) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": init_linear(kq, d_model, n_heads * head_dim, bias, dtype),
+        "k": init_linear(kk, d_model, n_kv_heads * head_dim, bias, dtype),
+        "v": init_linear(kv, d_model, n_kv_heads * head_dim, bias, dtype),
+        "o": init_linear(ko, n_heads * head_dim, d_model, False, dtype),
+    }
+
+
+def attention_block(params: Dict, x: jnp.ndarray, *, n_heads: int,
+                    n_kv_heads: int, head_dim: int, rope_theta: Optional[float],
+                    positions: Optional[jnp.ndarray] = None,
+                    kv: Optional[jnp.ndarray] = None,
+                    causal: bool = True,
+                    impl: str = "auto") -> jnp.ndarray:
+    """Self-attention (kv=None) or cross-attention (kv=encoder output)."""
+    from repro.models.layers import linear
+    b, s, d = x.shape
+    src = kv if kv is not None else x
+    q = linear(params["q"], x).reshape(b, s, n_heads, head_dim)
+    k = linear(params["k"], src).reshape(b, src.shape[1], n_kv_heads, head_dim)
+    v = linear(params["v"], src).reshape(b, src.shape[1], n_kv_heads, head_dim)
+    if rope_theta is not None and kv is None:
+        pos = positions if positions is not None else jnp.arange(s)[None, :]
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    k = _repeat_kv(k, n_heads // n_kv_heads)
+    v = _repeat_kv(v, n_heads // n_kv_heads)
+    use_chunked = impl == "chunked" or (impl == "auto" and s > CHUNKED_THRESHOLD)
+    if use_chunked and causal and kv is None:
+        o = chunked_attention(q, k, v, causal=True)
+    else:
+        o = full_attention(q, k, v, causal=causal and kv is None)
+    o = o.reshape(b, s, n_heads * head_dim)
+    return linear(params["o"], o)
+
+
+def cached_attention_step(params: Dict, x: jnp.ndarray, cache: Dict, *,
+                          n_heads: int, n_kv_heads: int, head_dim: int,
+                          rope_theta: Optional[float]) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step.
+
+    x: (B, 1, d).  cache: {"k","v": (B, S, kvH, hd), "len": scalar int32 —
+    the shared history length}.  Returns (out (B, 1, d), updated cache).
+    """
+    from repro.models.layers import linear
+    b, _, d = x.shape
+    q = linear(params["q"], x).reshape(b, 1, n_heads, head_dim)
+    k = linear(params["k"], x).reshape(b, 1, n_kv_heads, head_dim)
+    v = linear(params["v"], x).reshape(b, 1, n_kv_heads, head_dim)
+    pos = cache["len"][None, None]                    # (1, 1) position
+    if rope_theta is not None:
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    # cache insert via one-hot masked add: dynamic_update_slice on a SHARDED
+    # seq dim triggers GSPMD "involuntary full rematerialization" (the whole
+    # cache gets replicated to repartition).  The masked add is elementwise,
+    # so the cache keeps its seq/head sharding (EXPERIMENTS.md §Perf,
+    # jamba long_500k: 102 GiB -> fits; also removes the SPMD warnings on
+    # every GQA decode cell).
+    hot = (jnp.arange(cache["k"].shape[1]) == cache["len"]) \
+        .astype(cache["k"].dtype)[None, :, None, None]
+    k_cache = cache["k"] * (1 - hot) + hot * k.astype(cache["k"].dtype)
+    v_cache = cache["v"] * (1 - hot) + hot * v.astype(cache["v"].dtype)
+    kv_len = (cache["len"] + 1).reshape(1, 1, 1, 1)
+    o = gqa_decode_attention(q, k_cache, v_cache, kv_len)
+    o = o.reshape(b, 1, n_heads * head_dim)
+    out = linear(params["o"], o)
+    return out, {"k": k_cache, "v": v_cache, "len": cache["len"] + 1}

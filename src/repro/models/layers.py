@@ -1,0 +1,96 @@
+"""Model primitives: norms, RoPE, MLPs, initializers.
+
+Pure-functional JAX: parameters are pytrees of arrays; every layer is a
+function ``f(params, x, ...) -> y``.  Norm math runs in fp32 regardless of
+activation dtype.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(w: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(w: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * w.astype(jnp.float32) + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                              # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]                        # (..., seq, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- MLP
+def mlp(params: Dict, x: jnp.ndarray, gated: bool) -> jnp.ndarray:
+    if gated:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["w_up"])
+        if "b_up" in params:
+            h = h + params["b_up"]
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("...f,fd->...d", h, params["w_down"])
+    if "b_down" in params:
+        out = out + params["b_down"]
+    return out
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, bias: bool = False,
+             dtype=jnp.bfloat16) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = float(1.0 / np.sqrt(d_model))
+    s_ff = float(1.0 / np.sqrt(d_ff))
+    p = {"w_up": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+         "w_down": jax.random.normal(k2, (d_ff, d_model), dtype) * s_ff}
+    if gated:
+        p["w_gate"] = jax.random.normal(k3, (d_model, d_ff), dtype) * s_in
+    if bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                dtype=jnp.bfloat16) -> Dict:
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * float(1.0 / np.sqrt(d_in))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = jnp.einsum("...d,df->...f", x, params["w"])
+    if "b" in params:
+        y = y + params["b"]
+    return y

@@ -1,0 +1,212 @@
+"""State-space / linear-recurrence layers: Mamba selective scan and the
+RWKV6 ("Finch") time-mix with data-dependent decay.
+
+Both are expressed as chunked `lax.scan`s over time with O(1) carried state
+— the property that makes the `long_500k` decode shape feasible.  The Pallas
+kernels in repro.kernels implement the same recurrences with VMEM tiling;
+the functions here double as their oracles.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import init_linear, linear
+
+
+# =====================================================================
+# Mamba (selective scan), expansion factor 2
+# =====================================================================
+
+def init_mamba(key, d_model: int, d_state: int, d_conv: int,
+               dtype=jnp.bfloat16) -> Dict:
+    d_in = 2 * d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": init_linear(ks[0], d_model, 2 * d_in, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (d_conv, d_in), dtype) * float(1.0 / np.sqrt(d_conv)),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": init_linear(ks[2], d_in, d_state * 2 + 1, dtype=dtype),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                  (d_in, 1))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": init_linear(ks[3], d_in, d_model, dtype=dtype),
+    }
+
+
+def _selective_scan(u, dt, A, B, C, D, h0=None):
+    """u: (B, L, d_in); dt: (B, L, d_in); A: (d_in, N); B, C: (B, L, N).
+
+    h_{t} = exp(dt*A) h_{t-1} + dt * B_t * u_t ;  y_t = C_t . h_t + D*u_t
+    Scan over time, state (B, d_in, N).
+    """
+    bsz, L, d_in = u.shape
+    n = A.shape[1]
+    h0 = h0 if h0 is not None else jnp.zeros((bsz, d_in, n), jnp.float32)
+
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = inp                       # (B,d), (B,d), (B,N), (B,N)
+        dA = jnp.exp(dt_t[..., None] * A[None])         # (B, d, N)
+        dBu = dt_t[..., None] * B_t[:, None, :] * u_t[..., None]
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (u.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + D[None, None, :] * u.astype(jnp.float32)
+    return y, h
+
+
+def mamba_block(params: Dict, x: jnp.ndarray,
+                state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, L, d).  state (decode): {"h": (B, d_in, N), "conv": (B, d_conv-1, d_in)}.
+    Returns (y, new_state)."""
+    b, L, d = x.shape
+    d_in = params["conv_w"].shape[1]
+    n = params["A_log"].shape[1]
+    d_conv = params["conv_w"].shape[0]
+
+    xz = linear(params["in_proj"], x)                   # (B, L, 2*d_in)
+    u, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv1d
+    prev = (state["conv"] if state is not None
+            else jnp.zeros((b, d_conv - 1, d_in), u.dtype))
+    upad = jnp.concatenate([prev, u], axis=1)           # (B, L+dc-1, d_in)
+    new_conv = upad[:, -(d_conv - 1):, :] if d_conv > 1 else prev
+    conv = sum(upad[:, i:i + L, :] * params["conv_w"][i][None, None]
+               for i in range(d_conv)) + params["conv_b"]
+    u = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+
+    proj = linear(params["x_proj"], u)                  # (B, L, 2N+1)
+    Bm, Cm, dt_raw = (proj[..., :n], proj[..., n:2 * n], proj[..., 2 * n:])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"])
+
+    h0 = state["h"] if state is not None else None
+    y, h = _selective_scan(u, jnp.broadcast_to(dt, u.shape), A, Bm, Cm,
+                           params["D"], h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = linear(params["out_proj"], y)
+    return out, {"h": h, "conv": new_conv}
+
+
+def mamba_init_state(b: int, d_model: int, d_state: int, d_conv: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    d_in = 2 * d_model
+    return {"h": jnp.zeros((b, d_in, d_state), jnp.float32),
+            "conv": jnp.zeros((b, d_conv - 1, d_in), dtype)}
+
+
+# =====================================================================
+# RWKV6 "Finch": time-mix with data-dependent decay + channel-mix
+# =====================================================================
+
+def init_rwkv(key, d_model: int, head_size: int, d_ff: int,
+              dtype=jnp.bfloat16) -> Dict:
+    ks = jax.random.split(key, 9)
+    h = d_model // head_size
+    return {
+        "mix_r": jnp.full((d_model,), 0.5, dtype),
+        "mix_k": jnp.full((d_model,), 0.5, dtype),
+        "mix_v": jnp.full((d_model,), 0.5, dtype),
+        "mix_w": jnp.full((d_model,), 0.5, dtype),
+        "mix_g": jnp.full((d_model,), 0.5, dtype),
+        "r": init_linear(ks[0], d_model, d_model, dtype=dtype),
+        "k": init_linear(ks[1], d_model, d_model, dtype=dtype),
+        "v": init_linear(ks[2], d_model, d_model, dtype=dtype),
+        "g": init_linear(ks[3], d_model, d_model, dtype=dtype),
+        "w_proj": init_linear(ks[4], d_model, d_model, dtype=dtype),
+        "w_bias": jnp.full((d_model,), -6.0, jnp.float32),
+        "u": jax.random.normal(ks[5], (h, head_size), jnp.float32) * 0.1,
+        "out": init_linear(ks[6], d_model, d_model, dtype=dtype),
+        "ln_x_w": jnp.ones((d_model,), jnp.float32),
+        # channel-mix
+        "cm_mix_k": jnp.full((d_model,), 0.5, dtype),
+        "cm_k": init_linear(ks[7], d_model, d_ff, dtype=dtype),
+        "cm_v": init_linear(ks[8], d_ff, d_model, dtype=dtype),
+    }
+
+
+def wkv6_scan(r, k, v, w, u, s0=None):
+    """RWKV6 recurrence. r,k,v: (B, L, H, hd); w: (B, L, H, hd) decay in (0,1);
+    u: (H, hd) bonus. State s: (B, H, hd, hd). Returns (out (B,L,H,hd), s)."""
+    b, L, h, hd = r.shape
+    s = s0 if s0 is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B, H, hd) each, fp32
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B, H, hd, hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (r, k, v, w))
+    s, ys = jax.lax.scan(step, s, xs)
+    return ys.transpose(1, 0, 2, 3), s
+
+
+def rwkv_time_mix(params: Dict, x: jnp.ndarray, head_size: int,
+                  state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Dict]:
+    b, L, d = x.shape
+    h = d // head_size
+    prev = (state["shift"] if state is not None
+            else jnp.zeros((b, 1, d), x.dtype))
+    xs = jnp.concatenate([prev, x[:, :-1]], axis=1)     # token shift
+    new_shift = x[:, -1:, :]
+
+    def mix(name):
+        m = params[f"mix_{name}"][None, None]
+        return x * m + xs * (1 - m)
+
+    r = linear(params["r"], mix("r")).reshape(b, L, h, head_size)
+    k = linear(params["k"], mix("k")).reshape(b, L, h, head_size)
+    v = linear(params["v"], mix("v")).reshape(b, L, h, head_size)
+    g = linear(params["g"], mix("g"))
+    # data-dependent decay (the Finch contribution)
+    w_ = linear(params["w_proj"], mix("w")).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_ + params["w_bias"][None, None]))
+    w = w.reshape(b, L, h, head_size)
+
+    s0 = state["wkv"] if state is not None else None
+    y, s = wkv6_scan(r, k, v, w, params["u"], s0)
+    y = y.reshape(b, L, d)
+    # group norm over heads (approximated by rms over head groups)
+    yf = y.reshape(b, L, h, head_size)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-5)
+    y = (yf.reshape(b, L, d) * params["ln_x_w"][None, None]).astype(x.dtype)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = linear(params["out"], y)
+    return out, {"wkv": s, "shift": new_shift}
+
+
+def rwkv_channel_mix(params: Dict, x: jnp.ndarray,
+                     state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Dict]:
+    b, L, d = x.shape
+    prev = (state["shift"] if state is not None
+            else jnp.zeros((b, 1, d), x.dtype))
+    xs = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    m = params["cm_mix_k"][None, None]
+    xk = x * m + xs * (1 - m)
+    hdn = linear(params["cm_k"], xk)
+    hdn = jnp.square(jax.nn.relu(hdn.astype(jnp.float32))).astype(x.dtype)
+    out = linear(params["cm_v"], hdn)
+    return out, {"shift": x[:, -1:, :]}
+
+
+def rwkv_init_state(b: int, d_model: int, head_size: int,
+                    dtype=jnp.bfloat16) -> Dict:
+    h = d_model // head_size
+    return {
+        "tm": {"wkv": jnp.zeros((b, h, head_size, head_size), jnp.float32),
+               "shift": jnp.zeros((b, 1, d_model), dtype)},
+        "cm": {"shift": jnp.zeros((b, 1, d_model), dtype)},
+    }

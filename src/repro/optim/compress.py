@@ -1,0 +1,55 @@
+"""Int8 gradient compression with error feedback.
+
+Distributed-optimization trick for DP gradient exchange: quantize gradients
+to int8 with a per-row scale before the data-parallel reduction, carry the
+quantization residual in an error-feedback buffer so the compression is
+unbiased over time.  Used by repro.launch.train when --compress-grads is on
+(the decompress happens after the psum; at 4x fewer bytes on the wire the
+DP all-reduce term of the roofline drops accordingly).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def _quant(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(x.shape[0], -1) if x.ndim > 1 else x.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+def compress_grads(grads: Any, ef: Any) -> Tuple[Any, Any]:
+    """Returns (compressed {q, scale, shape}, new error-feedback buffers)."""
+    def one(g, e):
+        total = g.astype(jnp.float32) + e
+        q, s = _quant(total)
+        recon = _dequant(q, s, g.shape)
+        return {"q": q, "scale": s}, total - recon
+
+    flat = jax.tree.map(one, grads, ef,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    comp = jax.tree.map(lambda t: t[0], flat,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return comp, new_ef
+
+
+def decompress_grads(comp: Any, like: Any) -> Any:
+    # NB: the leaf predicate must require BOTH keys — attention param
+    # subtrees legitimately contain a "q" (query projection) entry
+    return jax.tree.map(
+        lambda c, g: _dequant(c["q"], c["scale"], g.shape), comp, like,
+        is_leaf=lambda x: isinstance(x, dict) and "q" in x and "scale" in x)

@@ -1,0 +1,31 @@
+"""Analytical accelerator performance/area models (the paper's "simulation environment").
+
+Two fidelity tiers, both fully vectorized over design points in JAX:
+
+* :mod:`repro.perfmodel.roofline`  — fast roofline model (paper Fig. 1/4/5).
+* :mod:`repro.perfmodel.compass`   — LLMCompass-style tile-level analytical
+  model with per-op overheads and utilization effects (paper §5.3, Table 4).
+
+Supporting pieces:
+
+* :mod:`repro.perfmodel.designspace` — the 4.7M-point design space (Table 1).
+* :mod:`repro.perfmodel.hardware`    — design point -> derived hardware spec
+  (throughputs, bandwidths, area), calibrated against NVIDIA A100.
+* :mod:`repro.perfmodel.workload`    — operator graphs (GPT-3 layer and every
+  assigned architecture) for TTFT / TPOT evaluation.
+* :mod:`repro.perfmodel.critical_path` — per-op stall attribution (the
+  paper's critical-path extension of LLMCompass).
+"""
+
+from repro.perfmodel.designspace import DesignSpace, A100_REFERENCE
+from repro.perfmodel.hardware import derive_hardware, area_mm2
+from repro.perfmodel.workload import Workload, Op, gpt3_layer_prefill, gpt3_layer_decode
+from repro.perfmodel.roofline import RooflineModel
+from repro.perfmodel.compass import CompassModel
+from repro.perfmodel.critical_path import attribute_stalls, STALL_CLASSES
+
+__all__ = [
+    "DesignSpace", "A100_REFERENCE", "derive_hardware", "area_mm2",
+    "Workload", "Op", "gpt3_layer_prefill", "gpt3_layer_decode",
+    "RooflineModel", "CompassModel", "attribute_stalls", "STALL_CLASSES",
+]

@@ -1,0 +1,35 @@
+"""LLMCompass-style higher-fidelity analytical model.
+
+Same vectorized evaluation core as the roofline model, plus the effects the
+LLMCompass simulator captures and the pure roofline misses:
+
+* fixed per-op launch/setup overhead (kernel launch + tile scheduling);
+* imperfect overlap between compute and memory streams (a fraction of the
+  minor term is exposed);
+* achievable (not peak) HBM efficiency;
+* collective software overhead.
+
+The paper treats LLMCompass as the expensive, high-fidelity tier (20-sample
+budget, ~1 week); here both tiers are cheap, but the *relative* fidelity gap
+and the distinct bottleneck landscapes are preserved, which is what the DSE
+methodology exercises.
+"""
+from __future__ import annotations
+
+from repro.perfmodel.roofline import RooflineModel
+
+
+class CompassModel(RooflineModel):
+    """Knobs calibrated against the paper's Table 4 (grid search over
+    physically-plausible ranges; see tests/test_perfmodel.py):
+
+        normalized TTFT   Design A: 0.7174 (paper 0.717)
+                          Design B: 0.5955 (paper 0.592)
+        normalized TPOT   Design A: 0.897  (paper 0.947)
+                          Design B: 0.895  (paper 0.948)
+        normalized area   Design A: 0.772  (paper 0.772)
+                          Design B: 0.962  (paper 0.952)
+    """
+    op_overhead_s = 2.0e-5     # per-op launch + TP-group sync/setup
+    nonoverlap = 0.5           # minor-term exposure (no double buffering)
+    mem_efficiency = 0.85      # achievable HBM fraction

@@ -1,0 +1,190 @@
+"""Vectorized roofline evaluation of (designs x workload ops).
+
+Per-op time = max(compute-term, memory-term, interconnect-term) under an
+effective-throughput model that couples every design-space parameter to the
+metrics it physically influences:
+
+* systolic utilization   <- sa_dim vs matmul dims (padding + pipeline fill),
+  sublane/core tile parallelism, SRAM double-buffer capacity;
+* HBM traffic            <- compulsory bytes vs blocked-matmul I/O lower
+  bound 2*M*N*K/sqrt(gbuf) (global-buffer reuse);
+* collectives            <- ring all-reduce / all-to-all on the ICI links.
+
+Evaluating the *entire* 4.7M-point space takes ~1 s on one device (the paper
+reports 6000 CPU-hours per 1000 LLMCompass samples — this is the substrate
+speedup that lets us run 1000-sample DSE campaigns in CI).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.perfmodel import workload as W
+from repro.perfmodel.designspace import DesignSpace, SPACE
+from repro.perfmodel.hardware import derive_hardware, BYTES_FP16, LINK_LATENCY_S
+
+# stall classes (aligned with critical_path.STALL_CLASSES)
+TENSOR, VECTORU, MEMORY, INTERCONNECT = 0, 1, 2, 3
+
+# SRAM operand-feed bandwidth: words/cycle supplied per KB of per-core SRAM
+# (more capacity = more banks).  Calibrated so the A100 point (128 KB feeding
+# a 16x16 array x 4 sublanes = 64 words/cycle) is exactly unconstrained while
+# a 32x32 array x 4 sublanes on the same SRAM runs at 62.5% feed utilization
+# — reproducing the Table-4 performance deltas of designs A/B.
+SRAM_FEED_WORDS_PER_KB = 0.625
+
+
+def _ceil_div(a, b):
+    return jnp.ceil(a / b)
+
+
+def matmul_utilization(hw: Dict[str, jnp.ndarray], m, n, k) -> jnp.ndarray:
+    """Fraction of peak tensor throughput achieved on an (m,k)x(k,n) matmul.
+
+    Three multiplicative effects:
+      u_pad  — K and N pad to the sa_dim grid (weight-stationary mapping);
+      u_pipe — pipeline fill: each output tile streams m rows through a
+               sa-deep array (m / (m + sa));
+      u_par  — not enough independent output tiles to fill cores*sublanes;
+      u_sram — double-buffered A/B/C tiles must fit the per-core SRAM;
+      u_feed — SRAM operand-feed bandwidth: a sa-wide array consumes
+               sa*sublanes words/cycle; SRAM banks supply
+               SRAM_FEED_WORDS_PER_KB * sram_kb words/cycle.  This is the
+               paper's noted pitfall: enlarging the systolic array without
+               scaling SRAM causes significant compute under-utilization.
+    """
+    sa = hw["sa_dim"]
+    u_k = k / (_ceil_div(k, sa) * sa)
+    u_n = n / (_ceil_div(n, sa) * sa)
+    u_pipe = m / (m + sa)
+    n_tiles = _ceil_div(m, sa) * _ceil_div(n, sa)
+    u_par = jnp.minimum(1.0, n_tiles / (hw["core_count"] * hw["sublane_count"]))
+    sram_need_kb = 3.0 * 2.0 * sa * sa * BYTES_FP16 / 1024.0   # A,B,C x dbuf
+    u_sram = jnp.minimum(1.0, hw["sram_kb"] / sram_need_kb)
+    u_feed = jnp.minimum(
+        1.0, SRAM_FEED_WORDS_PER_KB * hw["sram_kb"]
+        / (sa * hw["sublane_count"]))
+    return u_k * u_n * u_pipe * u_par * u_sram * u_feed
+
+
+def matmul_hbm_bytes(hw, compulsory, m, n, k) -> jnp.ndarray:
+    """Blocked-matmul HBM traffic: max(compulsory, I/O lower bound given the
+    global buffer as the reuse capacity)."""
+    f_elems = jnp.maximum(hw["gbuf_bytes"] / BYTES_FP16, 1.0)
+    bound = 2.0 * m * n * k / jnp.sqrt(f_elems) * BYTES_FP16
+    return jnp.maximum(compulsory, bound)
+
+
+def ring_allreduce_time(hw, nbytes, tp) -> jnp.ndarray:
+    steps = 2.0 * (tp - 1.0)
+    return steps / tp * nbytes / hw["ici_bw"] + steps * LINK_LATENCY_S
+
+
+def a2a_time(hw, nbytes, tp) -> jnp.ndarray:
+    return (tp - 1.0) / tp * nbytes / hw["ici_bw"] + (tp - 1.0) * LINK_LATENCY_S
+
+
+class RooflineModel:
+    """Evaluates PPA for batches of design-index vectors against a Workload.
+
+    eval_ppa(idx) -> dict with 'latency', 'area', per-stall-class times and
+    per-op times — everything downstream (critical path, DSE, benchmark
+    generation) reads from this one dict.
+    """
+
+    # Compass-tier knobs (overridden by CompassModel)
+    op_overhead_s: float = 0.0        # fixed per-op launch overhead
+    nonoverlap: float = 0.0           # fraction of the minor term not hidden
+    mem_efficiency: float = 1.0       # achievable fraction of peak HBM bw
+
+    def __init__(self, wl: W.Workload, space: DesignSpace = SPACE):
+        self.wl = wl
+        self.space = space
+        a = wl.arrays()
+        self._ops = {kk: jnp.asarray(vv) for kk, vv in a.items()}
+        self._tp = float(wl.tp)
+        self._eval_jit = jax.jit(self._eval_batch)
+
+    # ------------------------------------------------------------------
+    def _eval_batch(self, idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """idx: (B, n_params) int32 -> dict of (B, ...) metrics."""
+        vals = self.space.decode(idx)                 # dict of (B,)
+        hw = derive_hardware(vals)
+        o = self._ops
+        B = idx.shape[0]
+        nops = o["flops"].shape[0]
+
+        def bc(x):                                    # (B,) -> (B, 1)
+            return x[:, None]
+
+        hwb = {kk: bc(vv) for kk, vv in hw.items()}
+
+        kind = o["kind"][None, :]
+        flops = o["flops"][None, :]
+        m, n, k = o["m"][None, :], o["n"][None, :], o["k"][None, :]
+        comm = o["comm_bytes"][None, :]
+        count = o["count"][None, :]
+
+        util = matmul_utilization(hwb, m, n, k)
+        eff_tensor = hwb["tensor_flops"] * util
+        is_mm = kind == W.MATMUL
+        is_vec = kind == W.VECTOR
+        is_mem = kind == W.MEMCPY
+        is_ar = kind == W.ALLREDUCE
+        is_p2p = kind == W.P2P
+
+        bytes_eff = jnp.where(
+            is_mm, matmul_hbm_bytes(hwb, o["bytes"][None, :], m, n, k),
+            o["bytes"][None, :])
+
+        t_compute = jnp.where(
+            is_mm, flops / eff_tensor,
+            jnp.where(is_vec, flops / hwb["vector_flops"], 0.0))
+        t_memory = bytes_eff / (hwb["mem_bw"] * self.mem_efficiency)
+        t_comm = jnp.where(
+            is_ar, ring_allreduce_time(hwb, comm, self._tp),
+            jnp.where(is_p2p, a2a_time(hwb, comm, self._tp), 0.0))
+
+        major = jnp.maximum(jnp.maximum(t_compute, t_memory), t_comm)
+        minor = t_compute + t_memory + t_comm - major
+        t_op = (major + self.nonoverlap * minor + self.op_overhead_s) * count
+
+        # stall attribution: each op's time goes to its dominant resource
+        dom_is_comm = (t_comm >= t_compute) & (t_comm >= t_memory)
+        dom_is_compute = (t_compute > t_memory) & ~dom_is_comm
+        dom_class = jnp.where(
+            dom_is_comm, INTERCONNECT,
+            jnp.where(dom_is_compute,
+                      jnp.where(is_mm, TENSOR, VECTORU),
+                      MEMORY))
+        # pure memcpy ops always attribute to MEMORY
+        dom_class = jnp.where(is_mem, MEMORY, dom_class)
+
+        latency = t_op.sum(axis=1)
+        stall = jnp.zeros((B, 4))
+        for c in range(4):
+            stall = stall.at[:, c].set(jnp.where(dom_class == c, t_op, 0.0).sum(axis=1))
+
+        return {
+            "latency": latency,
+            "area": hw["area_mm2"],
+            "op_time": t_op,
+            "op_class": dom_class,
+            "stall": stall,                 # (B, 4) seconds per stall class
+            "t_compute": t_compute * count,
+            "t_memory": t_memory * count,
+            "t_comm": t_comm * count,
+        }
+
+    # ------------------------------------------------------------------
+    def eval_ppa(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        idx = jnp.asarray(np.atleast_2d(np.asarray(idx, dtype=np.int32)))
+        out = self._eval_jit(idx)
+        return {kk: np.asarray(vv) for kk, vv in out.items()}
+
+    def latency(self, idx: np.ndarray) -> np.ndarray:
+        return self.eval_ppa(idx)["latency"]

@@ -1,0 +1,5 @@
+from repro.runtime.fault import RetryPolicy, run_with_retries, StragglerMonitor
+from repro.runtime.elastic import plan_elastic_mesh
+
+__all__ = ["RetryPolicy", "run_with_retries", "StragglerMonitor",
+           "plan_elastic_mesh"]

@@ -1,0 +1,50 @@
+"""Elastic re-meshing: recompute the best mesh when devices are lost.
+
+Policy: keep the `model` axis intact (TP degree is tied to weight sharding
+and head counts), shrink the data axes to the largest multiple that fits the
+surviving device count, then restore from the last checkpoint with the new
+shardings (repro.checkpoint supports restore-time resharding).  The
+deterministic-by-step data pipeline replays the remainder of the epoch with
+the new DP degree by re-chunking the global batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    devices_used: int
+    dp_degree: int
+    tp_degree: int
+    note: str
+
+
+def plan_elastic_mesh(available_devices: int, model_axis: int = 16,
+                      prefer_pods: bool = True) -> Optional[ElasticPlan]:
+    """Largest (pod, data, model) grid that fits `available_devices` with the
+    model axis fixed.  Returns None if even one model group doesn't fit."""
+    if available_devices < model_axis:
+        return None
+    groups = available_devices // model_axis        # surviving TP groups
+    # prefer two balanced pods when there are enough groups and it divides
+    if prefer_pods and groups >= 4 and groups % 2 == 0:
+        return ElasticPlan(
+            shape=(2, groups // 2, model_axis),
+            axes=("pod", "data", "model"),
+            devices_used=groups * model_axis,
+            dp_degree=groups,
+            tp_degree=model_axis,
+            note=f"2 pods x {groups // 2} DP x {model_axis} TP",
+        )
+    return ElasticPlan(
+        shape=(groups, model_axis),
+        axes=("data", "model"),
+        devices_used=groups * model_axis,
+        dp_degree=groups,
+        tp_degree=model_axis,
+        note=f"single pod {groups} DP x {model_axis} TP",
+    )

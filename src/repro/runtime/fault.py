@@ -1,0 +1,90 @@
+"""Fault-tolerance runtime: step retries, straggler detection, heartbeats.
+
+On a real multi-host deployment the coordinator drives these through the
+cluster scheduler; here the policies are host-local but the interfaces (and
+tests) are the production ones:
+
+* ``run_with_retries`` — execute a step function; on failure restore the
+  last checkpoint and replay (the data pipeline is deterministic-by-step, so
+  replay is bit-exact).
+* ``StragglerMonitor`` — rolling per-step latency stats; flags steps slower
+  than median * threshold.  At scale the flagged host is drained and the
+  elastic re-mesh path (repro.runtime.elastic) kicks in.
+* ``Heartbeat`` — liveness file a watchdog can poll.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from collections import deque
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    max_retries: int = 3
+    backoff_s: float = 0.0          # 0 in tests; seconds in production
+    retryable: tuple = (RuntimeError, ValueError)
+
+
+def run_with_retries(step_fn: Callable, restore_fn: Callable,
+                     policy: RetryPolicy = RetryPolicy()):
+    """step_fn() -> result; restore_fn(attempt) resets state before retry."""
+    last = None
+    for attempt in range(policy.max_retries + 1):
+        try:
+            return step_fn()
+        except policy.retryable as e:        # noqa: PERF203
+            last = e
+            if attempt == policy.max_retries:
+                break
+            if policy.backoff_s:
+                time.sleep(policy.backoff_s * (2 ** attempt))
+            restore_fn(attempt)
+    raise RuntimeError(
+        f"step failed after {policy.max_retries} retries") from last
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 32, threshold: float = 2.0):
+        self.window = window
+        self.threshold = threshold
+        self._times: deque = deque(maxlen=window)
+        self.flagged: list = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self._times.append(seconds)
+        if len(self._times) < 8:
+            return False
+        med = sorted(self._times)[len(self._times) // 2]
+        if seconds > med * self.threshold:
+            self.flagged.append((step, seconds, med))
+            return True
+        return False
+
+
+class Heartbeat:
+    def __init__(self, path: str, interval_s: float = 10.0):
+        self.path = path
+        self.interval_s = interval_s
+        self._last = 0.0
+
+    def beat(self, step: int) -> None:
+        now = time.time()
+        if now - self._last >= self.interval_s:
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(f"{step} {now}\n")
+            os.replace(tmp, self.path)
+            self._last = now
+
+    @staticmethod
+    def is_alive(path: str, timeout_s: float) -> bool:
+        try:
+            with open(path) as f:
+                _, ts = f.read().split()
+            return time.time() - float(ts) < timeout_s
+        except (OSError, ValueError):
+            return False

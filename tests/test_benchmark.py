@@ -1,0 +1,52 @@
+"""DSE Benchmark generator + accuracy harness tests (paper §4, Table 3)."""
+import pytest
+
+from repro.core.bench import (generate_suite, generate_bottleneck,
+                              generate_prediction, generate_tuning,
+                              evaluate_backend)
+from repro.core.llm import (RuleOracle, DegradedOracle, TASK_BOTTLENECK,
+                            TASK_PREDICTION, TASK_TUNING)
+
+
+@pytest.fixture(scope="module")
+def suite():
+    return generate_suite(60, 30, 15)
+
+
+def test_suite_composition(suite):
+    assert len(suite.by_task(TASK_BOTTLENECK)) == 60
+    assert len(suite.by_task(TASK_PREDICTION)) == 30
+    assert len(suite.by_task(TASK_TUNING)) == 15
+    for q in suite.questions:
+        assert 0 <= q.answer < len(q.options)
+        assert q.prompt and q.options
+
+
+def test_full_scale_counts():
+    """The paper's suite: 308 + 127 + 30 (generation only, no eval)."""
+    qs = generate_bottleneck(10)          # spot-check the generators scale
+    assert len(qs) == 10
+
+
+def test_enhanced_beats_original(suite):
+    """Table 3's central claim: corrective rules lift accuracy on every task."""
+    enh = evaluate_backend(RuleOracle(enhanced=True), suite)
+    orig = evaluate_backend(RuleOracle(enhanced=False), suite)
+    for task in (TASK_BOTTLENECK, TASK_PREDICTION, TASK_TUNING):
+        assert enh[task] >= orig[task], task
+    assert enh[TASK_BOTTLENECK] >= 0.75
+    assert enh[TASK_PREDICTION] >= 0.7
+    assert enh[TASK_TUNING] >= 0.6
+
+
+def test_degradation_ordering(suite):
+    """Higher injected error => lower accuracy (the model-quality axis)."""
+    a = evaluate_backend(DegradedOracle(0.1, seed=0), suite)
+    b = evaluate_backend(DegradedOracle(0.5, seed=0), suite)
+    for task in (TASK_BOTTLENECK, TASK_PREDICTION, TASK_TUNING):
+        assert a[task] >= b[task], task
+
+
+def test_render_is_mc_format(suite):
+    txt = suite.questions[0].render()
+    assert "(A)" in txt and "(B)" in txt

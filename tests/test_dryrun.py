@@ -1,0 +1,53 @@
+"""Dry-run integration: one real (arch x shape x mesh) cell through the
+512-host-device lower+compile path, in a subprocess (the XLA device-count
+flag must be set before jax initializes).  Also unit-tests the HLO
+collective parser and the roofline-term math."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.dryrun import parse_collectives, roofline_terms
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_parse_collectives():
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar.1 = f32[256]{0} all-reduce(%y), to_apply=%add
+  %aa = (bf16[4,4]{1,0}) all-to-all(%z)
+  %cp = u8[16]{0} collective-permute(%w)
+  %dot = f32[8,8]{1,0} dot(%a, %b)
+"""
+    out = parse_collectives(hlo)
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["all-reduce"] == 256 * 4
+    assert out["all-to-all"] == 4 * 4 * 2
+    assert out["collective-permute"] == 16
+    assert "dot" not in out
+
+
+def test_roofline_terms_math():
+    t = roofline_terms(197e12, 819e9, {"all-reduce": 50e9})
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+
+
+@pytest.mark.slow
+def test_one_cell_compiles(tmp_path):
+    """llama3.2-1b x decode_32k x multi-pod: full 512-device lower+compile."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "llama3.2-1b",
+         "--shape", "decode_32k", "--mesh", "multi", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900, cwd=REPO)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(tmp_path / "llama3.2-1b__decode_32k__multi.json"))
+    assert rec["status"] == "OK"
+    assert rec["flops"] > 0
+    assert rec["memory"]["temp_size_in_bytes"] < 16 * 2 ** 30   # fits v5e HBM

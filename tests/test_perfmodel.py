@@ -1,0 +1,109 @@
+"""Perfmodel calibration + structure tests (paper Tables 1 & 4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.perfmodel import (gpt3_layer_prefill, gpt3_layer_decode,
+                             RooflineModel, CompassModel)
+from repro.perfmodel.designspace import (SPACE, A100_REFERENCE, DESIGN_A,
+                                         DESIGN_B)
+from repro.perfmodel.hardware import derive_hardware, area_mm2
+from repro.perfmodel.workload import from_arch
+from repro.core.quale import derive_influence_map
+from repro.core.quane import sensitivity_analysis
+from repro.configs import ARCHS
+
+
+def _hw(values):
+    v = {k: jnp.asarray([float(values[k])]) for k in SPACE.names}
+    return {k: float(x[0]) for k, x in derive_hardware(v).items()}
+
+
+def test_design_space_cardinality():
+    assert SPACE.size == 4_741_632        # ~4.7M, paper Table 1
+
+
+def test_a100_calibration():
+    hw = _hw(A100_REFERENCE)
+    assert hw["tensor_flops"] == pytest.approx(312e12, rel=0.01)   # TC FP16
+    assert hw["mem_bw"] == pytest.approx(1555e9, rel=0.01)         # HBM2
+    assert hw["ici_bw"] == pytest.approx(300e9, rel=0.01)          # NVLink3
+    assert hw["area_mm2"] == pytest.approx(826, rel=0.01)          # die area
+
+
+def test_table4_area_ratios():
+    a100 = _hw(A100_REFERENCE)["area_mm2"]
+    a = _hw(DESIGN_A)["area_mm2"] / a100
+    b = _hw(DESIGN_B)["area_mm2"] / a100
+    assert a == pytest.approx(0.772, abs=0.01)    # paper: 0.772
+    assert b == pytest.approx(0.952, abs=0.02)    # paper: 0.952
+
+
+@pytest.fixture(scope="module")
+def compass_pair():
+    return CompassModel(gpt3_layer_prefill()), CompassModel(gpt3_layer_decode())
+
+
+def test_table4_perf_ratios(compass_pair):
+    """Normalized TTFT/TPOT of Lumina's designs A/B vs the A100, against the
+    paper's reported values (TTFT exact to ~1%, TPOT within ~6%)."""
+    mt, mp = compass_pair
+    vals = {}
+    for tag, des in (("A100", A100_REFERENCE), ("A", DESIGN_A), ("B", DESIGN_B)):
+        idx = SPACE.encode_nearest(des)
+        vals[tag] = (mt.latency(idx)[0], mp.latency(idx)[0])
+    ttft_a = vals["A"][0] / vals["A100"][0]
+    ttft_b = vals["B"][0] / vals["A100"][0]
+    tpot_a = vals["A"][1] / vals["A100"][1]
+    assert ttft_a == pytest.approx(0.717, abs=0.02)   # paper: 0.717
+    assert ttft_b == pytest.approx(0.592, abs=0.02)   # paper: 0.592
+    assert tpot_a == pytest.approx(0.947, abs=0.06)   # paper: 0.947
+
+
+def test_more_channels_never_slower(compass_pair):
+    """Monotonicity: adding a memory channel can't increase latency."""
+    mt, _ = compass_pair
+    idx = SPACE.encode_nearest(A100_REFERENCE)
+    ci = SPACE.names.index("mem_channels")
+    lats = []
+    for c in range(int(SPACE.cardinalities[ci])):
+        j = idx.copy()
+        j[ci] = c
+        lats.append(mt.latency(j)[0])
+    assert all(lats[i + 1] <= lats[i] * 1.0001 for i in range(len(lats) - 1))
+
+
+def test_influence_map_structure():
+    """§3.2.1's example: vector throughput depends on core/sublane/vector
+    width but NOT on the systolic array; interconnect only on links."""
+    mt = RooflineModel(gpt3_layer_prefill())
+    mp = RooflineModel(gpt3_layer_decode())
+    imap = derive_influence_map(mt, mp, n_probes=6, seed=0)
+    assert "interconnect" in imap.stall_edges["link_count"]
+    assert "interconnect" not in imap.stall_edges["sa_dim"]
+    assert "area" in imap.metric_edges["core_count"]
+    # every param influences area
+    for p in SPACE.names:
+        assert "area" in imap.metric_edges[p], p
+
+
+def test_sensitivity_signs():
+    mt = RooflineModel(gpt3_layer_prefill())
+    mp = RooflineModel(gpt3_layer_decode())
+    idx = SPACE.encode_nearest(A100_REFERENCE)
+    sens = sensitivity_analysis(mt, mp, idx)
+    assert sens.delta["mem_channels"]["area"] > 0       # +channel = +area
+    assert sens.delta["mem_channels"]["tpot"] < 0       # +channel = faster decode
+    assert sens.delta["link_count"]["ttft"] < 0         # +links = faster prefill
+    assert sens.delta["core_count"]["area"] > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_workloads_evaluate(arch):
+    """Every assigned architecture doubles as a DSE workload."""
+    cfg = ARCHS[arch]
+    for decode in (False, True):
+        wl = from_arch(cfg, batch=4, seq=512, decode=decode, kv_len=512)
+        m = RooflineModel(wl)
+        out = m.eval_ppa(SPACE.encode_nearest(A100_REFERENCE))
+        assert np.isfinite(out["latency"]).all() and (out["latency"] > 0).all()
