@@ -10,19 +10,13 @@ import numpy as np
 
 from repro.core.baselines import METHODS, run_method
 from repro.core.loop import LuminaDSE
-from repro.perfmodel import (gpt3_layer_prefill, gpt3_layer_decode,
-                             RooflineModel, CompassModel)
+from repro.perfmodel import make_paper_evaluator
 from repro.perfmodel.designspace import SPACE, A100_REFERENCE
 
 
 def run(budget: int = 20, trials: int = 3) -> List[str]:
-    pre, dec = gpt3_layer_prefill(), gpt3_layer_decode()
-    ct, cp = CompassModel(pre), CompassModel(dec)
-    rt, rp = RooflineModel(pre), RooflineModel(dec)
-
-    def evaluator(X):
-        ot, op = ct.eval_ppa(X), cp.eval_ppa(X)
-        return np.stack([ot["latency"], op["latency"], ot["area"]], axis=1)
+    ct, cp, evaluator = make_paper_evaluator("compass")
+    rt, rp, _ = make_paper_evaluator("roofline")
 
     ref = evaluator(SPACE.encode_nearest(A100_REFERENCE)[None, :])[0]
     lines = []

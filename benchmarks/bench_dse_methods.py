@@ -13,19 +13,14 @@ import numpy as np
 
 from repro.core.baselines import METHODS, run_method
 from repro.core.loop import LuminaDSE
-from repro.perfmodel import gpt3_layer_prefill, gpt3_layer_decode, RooflineModel
+from repro.perfmodel import make_paper_evaluator
 from repro.perfmodel.designspace import SPACE, A100_REFERENCE
 
 
 def make_evaluator():
-    mt = RooflineModel(gpt3_layer_prefill())
-    mp = RooflineModel(gpt3_layer_decode())
-
-    def evaluator(X):
-        ot, op = mt.eval_ppa(X), mp.eval_ppa(X)
-        return np.stack([ot["latency"], op["latency"], ot["area"]], axis=1)
-
-    return mt, mp, evaluator
+    """Process-wide cached models + batched evaluator (shared with every
+    other benchmark module via repro.perfmodel.make_paper_evaluator)."""
+    return make_paper_evaluator("roofline")
 
 
 def run(budget: int = 300, trials: int = 3, quick: bool = False) -> List[str]:

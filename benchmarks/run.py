@@ -17,7 +17,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: table3,fig45,fig6,budget20,table4,kernels,archs")
+                    help="comma list: table3,fig45,fig6,budget20,table4,"
+                         "sweep,kernels,archs,ablation")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -40,6 +41,9 @@ def main() -> None:
     if only is None or "table4" in only:
         from benchmarks import bench_top_designs
         benches.append(("table4", bench_top_designs.run))
+    if only is None or "sweep" in only:
+        from benchmarks import bench_sweep
+        benches.append(("sweep", lambda: bench_sweep.run(full=args.full)))
     if only is None or "kernels" in only:
         from benchmarks import bench_kernels
         benches.append(("kernels", bench_kernels.run))
@@ -51,6 +55,9 @@ def main() -> None:
         benches.append(("ablation", lambda: bench_ablations.run(
             trials=3 if args.full else 2)))
 
+    if only and not benches:
+        raise SystemExit(f"no benchmark matches --only {args.only!r} "
+                         "(see --help for valid names)")
     failures = 0
     for name, fn in benches:
         t0 = time.time()

@@ -16,8 +16,8 @@ the black-box baselines (:mod:`repro.core.baselines`).
 from repro.core.loop import LuminaDSE, DSEResult
 from repro.core.llm import RuleOracle, DegradedOracle, MCQuery
 from repro.core.pareto import (hypervolume, pareto_front, pareto_mask,
-                               sample_efficiency, dominates_ref)
+                               sample_efficiency, dominates_ref, ParetoArchive)
 
 __all__ = ["LuminaDSE", "DSEResult", "RuleOracle", "DegradedOracle",
            "MCQuery", "hypervolume", "pareto_front", "pareto_mask",
-           "sample_efficiency", "dominates_ref"]
+           "sample_efficiency", "dominates_ref", "ParetoArchive"]

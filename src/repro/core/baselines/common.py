@@ -6,7 +6,7 @@ from typing import Dict, List, Optional, Type
 
 import numpy as np
 
-from repro.core.pareto import hypervolume, sample_efficiency, pareto_mask
+from repro.core.pareto import dominates_ref, ParetoArchive
 from repro.perfmodel.designspace import DesignSpace, SPACE
 
 
@@ -62,21 +62,30 @@ def run_method(opt_cls: Type[BaseOptimizer], evaluator, budget: int,
     """
     opt = opt_cls(space=space, seed=seed, **kw)
     ref = np.asarray(ref_point, dtype=np.float64)
+    # Streaming Pareto archive: PHV is a function of the front alone, so each
+    # curve point costs O(front) insertion + O(front^2) sweep instead of
+    # recomputing dominance over the whole history (O(budget^2) total).
+    archive = ParetoArchive(n_obj=ref.shape[0])
+    n_superior = 0
     phv_curve = []
+    next_record = curve_stride
     while len(opt.X) < budget:
         n = min(batch, budget - len(opt.X))
         X = np.atleast_2d(opt.ask(n))[:n]
-        Y = evaluator(X)
+        Y = np.atleast_2d(evaluator(X))
         opt.tell(X, Y)
-        if len(opt.X) % curve_stride == 0 or len(opt.X) >= budget:
-            phv_curve.append(hypervolume(np.stack(opt.Y), ref))
+        archive.insert(Y)
+        n_superior += int(dominates_ref(Y, ref).sum())
+        # record once per stride crossing (batch-aware) and at the end
+        if len(opt.X) >= next_record or len(opt.X) >= budget:
+            phv_curve.append(archive.hypervolume(ref))
+            next_record = (len(opt.X) // curve_stride + 1) * curve_stride
     X = np.stack(opt.X)
     Y = np.stack(opt.Y)
-    from repro.core.pareto import dominates_ref
     return MethodResult(
         name=name or opt_cls.__name__, X=X, Y=Y,
-        phv=hypervolume(Y, ref),
-        sample_efficiency=sample_efficiency(Y, ref),
-        superior_count=int(dominates_ref(Y, ref).sum()),
+        phv=phv_curve[-1] if phv_curve else archive.hypervolume(ref),
+        sample_efficiency=n_superior / max(len(opt.X), 1),
+        superior_count=n_superior,
         phv_curve=np.asarray(phv_curve),
     )

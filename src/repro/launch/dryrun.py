@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.configs import ARCHS, SHAPES
 from repro.launch import steps as ST
-from repro.launch.mesh import make_production_mesh, data_axes
+from repro.launch.mesh import make_production_mesh, data_axes, activate_mesh
 from repro.models import build_model
 from repro.optim import AdamWConfig
 
@@ -128,7 +128,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     batch_abs = ST.input_specs(cfg, shape)
     params_abs = ST.abstract_params(model)
 
-    with jax.sharding.set_mesh(mesh):
+    with activate_mesh(mesh):
         if shape.mode == "train":
             opt_abs = jax.eval_shape(lambda p: __import__(
                 "repro.optim", fromlist=["adamw_init"]).adamw_init(p), params_abs)

@@ -14,19 +14,42 @@ from typing import Tuple
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    # jax >= 0.5 exposes jax.sharding.AxisType and make_mesh(axis_types=...);
+    # older releases (e.g. 0.4.x) have neither — everything is Auto there, so
+    # plain make_mesh is equivalent.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh (elastic re-mesh path, tests)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make(shape, axes)
+
+
+def activate_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh.
+
+    jax >= 0.5: jax.sharding.set_mesh / use_mesh.  jax 0.4.x: the Mesh object
+    itself is the context manager (legacy ambient-mesh mechanism).
+    """
+    setter = (getattr(jax.sharding, "set_mesh", None)
+              or getattr(jax.sharding, "use_mesh", None))
+    if setter is not None:
+        return setter(mesh)
+    return mesh
 
 
 def data_axes(mesh) -> Tuple[str, ...]:

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
+from repro.launch.mesh import activate_mesh
 from repro.launch.train import choose_mesh
 from repro.models import build_model
 
@@ -25,7 +26,7 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int, smoke: bool,
     mesh = choose_mesh()
     model = build_model(cfg, dtype=dtype, remat=False)
 
-    with jax.sharding.set_mesh(mesh):
+    with activate_mesh(mesh):
         params = jax.jit(model.init)(jax.random.key(seed))
         rng = np.random.default_rng(seed)
         prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),

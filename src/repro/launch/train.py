@@ -23,7 +23,7 @@ from repro.configs import get_arch
 from repro.data import SyntheticLMDataset, make_batch_iter
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.launch import steps as ST
-from repro.launch.mesh import make_mesh, data_axes
+from repro.launch.mesh import make_mesh, data_axes, activate_mesh
 from repro.optim import AdamWConfig, adamw_init
 from repro.models import build_model
 from repro.runtime import StragglerMonitor
@@ -58,7 +58,7 @@ def train(arch: str, steps: int, batch: int, seq: int, smoke: bool,
     model.hidden_pspec = sh["hidden"]
     model.hidden_divisors = sh["divisors"]
 
-    with jax.sharding.set_mesh(mesh):
+    with activate_mesh(mesh):
         params = jax.jit(model.init)(jax.random.key(0))
         opt_state = adamw_init(params)
         start = 0

@@ -23,9 +23,11 @@ from repro.perfmodel.workload import Workload, Op, gpt3_layer_prefill, gpt3_laye
 from repro.perfmodel.roofline import RooflineModel
 from repro.perfmodel.compass import CompassModel
 from repro.perfmodel.critical_path import attribute_stalls, STALL_CLASSES
+from repro.perfmodel.sweep import SweepEngine, SweepResult, make_paper_evaluator
 
 __all__ = [
     "DesignSpace", "A100_REFERENCE", "derive_hardware", "area_mm2",
     "Workload", "Op", "gpt3_layer_prefill", "gpt3_layer_decode",
     "RooflineModel", "CompassModel", "attribute_stalls", "STALL_CLASSES",
+    "SweepEngine", "SweepResult", "make_paper_evaluator",
 ]

@@ -17,6 +17,7 @@ speedup that lets us run 1000-sample DSE campaigns in CI).
 from __future__ import annotations
 
 import functools
+import hashlib
 from typing import Dict, Tuple
 
 import jax
@@ -88,6 +89,36 @@ def a2a_time(hw, nbytes, tp) -> jnp.ndarray:
     return (tp - 1.0) / tp * nbytes / hw["ici_bw"] + (tp - 1.0) * LINK_LATENCY_S
 
 
+# Shared compiled-evaluator cache.  Keyed by everything that changes the
+# traced computation (model class + knobs, design space, workload op arrays,
+# TP degree), so every RooflineModel/CompassModel built for the same workload
+# — across baselines, DSE campaigns and benchmark modules — reuses one
+# XLA executable per batch shape instead of re-tracing per instance.
+_JIT_CACHE: Dict[tuple, tuple] = {}
+
+
+def _space_key(space: DesignSpace) -> tuple:
+    return tuple(tuple(float(v) for v in c) for c in space.choices)
+
+
+def _workload_fingerprint(wl: W.Workload) -> str:
+    a = wl.arrays()
+    h = hashlib.sha1()
+    for kk in sorted(a):
+        h.update(kk.encode())
+        h.update(np.ascontiguousarray(a[kk]).tobytes())
+    return h.hexdigest()
+
+
+def _batch_bucket(b: int) -> int:
+    """Round a batch size up to the next power of two (min 8) so repeated
+    odd-size calls hit a handful of compiled shapes instead of retracing."""
+    bb = 8
+    while bb < b:
+        bb *= 2
+    return bb
+
+
 class RooflineModel:
     """Evaluates PPA for batches of design-index vectors against a Workload.
 
@@ -107,22 +138,22 @@ class RooflineModel:
         a = wl.arrays()
         self._ops = {kk: jnp.asarray(vv) for kk, vv in a.items()}
         self._tp = float(wl.tp)
-        self._eval_jit = jax.jit(self._eval_batch)
+        key = (type(self).__qualname__, _space_key(space), self._tp,
+               (self.op_overhead_s, self.nonoverlap, self.mem_efficiency),
+               _workload_fingerprint(wl))
+        cached = _JIT_CACHE.get(key)
+        if cached is None:
+            cached = (jax.jit(self._eval_batch), jax.jit(self._objectives_batch))
+            _JIT_CACHE[key] = cached
+        self._eval_jit, self._objectives_jit = cached
 
     # ------------------------------------------------------------------
-    def _eval_batch(self, idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
-        """idx: (B, n_params) int32 -> dict of (B, ...) metrics."""
-        vals = self.space.decode(idx)                 # dict of (B,)
-        hw = derive_hardware(vals)
+    def _op_terms(self, hwb: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """Per-op time terms for (B, 1)-broadcast hardware dicts.
+
+        Shared by the full eval path and the lean sweep/objectives path.
+        """
         o = self._ops
-        B = idx.shape[0]
-        nops = o["flops"].shape[0]
-
-        def bc(x):                                    # (B,) -> (B, 1)
-            return x[:, None]
-
-        hwb = {kk: bc(vv) for kk, vv in hw.items()}
-
         kind = o["kind"][None, :]
         flops = o["flops"][None, :]
         m, n, k = o["m"][None, :], o["n"][None, :], o["k"][None, :]
@@ -152,6 +183,20 @@ class RooflineModel:
         major = jnp.maximum(jnp.maximum(t_compute, t_memory), t_comm)
         minor = t_compute + t_memory + t_comm - major
         t_op = (major + self.nonoverlap * minor + self.op_overhead_s) * count
+        return {
+            "t_op": t_op, "t_compute": t_compute, "t_memory": t_memory,
+            "t_comm": t_comm, "count": count, "is_mm": is_mm, "is_mem": is_mem,
+        }
+
+    def _eval_batch(self, idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """idx: (B, n_params) int32 -> dict of (B, ...) metrics."""
+        vals = self.space.decode(idx)                 # dict of (B,)
+        hw = derive_hardware(vals)
+        B = idx.shape[0]
+        hwb = {kk: vv[:, None] for kk, vv in hw.items()}
+        t = self._op_terms(hwb)
+        t_op = t["t_op"]
+        t_compute, t_memory, t_comm = t["t_compute"], t["t_memory"], t["t_comm"]
 
         # stall attribution: each op's time goes to its dominant resource
         dom_is_comm = (t_comm >= t_compute) & (t_comm >= t_memory)
@@ -159,16 +204,17 @@ class RooflineModel:
         dom_class = jnp.where(
             dom_is_comm, INTERCONNECT,
             jnp.where(dom_is_compute,
-                      jnp.where(is_mm, TENSOR, VECTORU),
+                      jnp.where(t["is_mm"], TENSOR, VECTORU),
                       MEMORY))
         # pure memcpy ops always attribute to MEMORY
-        dom_class = jnp.where(is_mem, MEMORY, dom_class)
+        dom_class = jnp.where(t["is_mem"], MEMORY, dom_class)
 
         latency = t_op.sum(axis=1)
         stall = jnp.zeros((B, 4))
         for c in range(4):
             stall = stall.at[:, c].set(jnp.where(dom_class == c, t_op, 0.0).sum(axis=1))
 
+        count = t["count"]
         return {
             "latency": latency,
             "area": hw["area_mm2"],
@@ -180,11 +226,37 @@ class RooflineModel:
             "t_comm": t_comm * count,
         }
 
+    def _objectives_batch(self, idx: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Lean traced path: (B, n_params) -> (latency (B,), area (B,)).
+
+        Skips stall attribution and per-op outputs; this is what the
+        full-space sweep engine inlines per chunk.
+        """
+        vals = self.space.decode(idx)
+        hw = derive_hardware(vals)
+        hwb = {kk: vv[:, None] for kk, vv in hw.items()}
+        t = self._op_terms(hwb)
+        return t["t_op"].sum(axis=1), hw["area_mm2"]
+
     # ------------------------------------------------------------------
     def eval_ppa(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
-        idx = jnp.asarray(np.atleast_2d(np.asarray(idx, dtype=np.int32)))
-        out = self._eval_jit(idx)
-        return {kk: np.asarray(vv) for kk, vv in out.items()}
+        idx = np.atleast_2d(np.asarray(idx, dtype=np.int32))
+        b = idx.shape[0]
+        bb = _batch_bucket(b)
+        if bb != b:                       # pad with the last row; slice back
+            idx = np.concatenate([idx, np.repeat(idx[-1:], bb - b, axis=0)])
+        out = self._eval_jit(jnp.asarray(idx))
+        return {kk: np.asarray(vv)[:b] for kk, vv in out.items()}
 
     def latency(self, idx: np.ndarray) -> np.ndarray:
         return self.eval_ppa(idx)["latency"]
+
+    def objectives(self, idx: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(latency, area) without the per-op breakdown (bucketed + cached)."""
+        idx = np.atleast_2d(np.asarray(idx, dtype=np.int32))
+        b = idx.shape[0]
+        bb = _batch_bucket(b)
+        if bb != b:
+            idx = np.concatenate([idx, np.repeat(idx[-1:], bb - b, axis=0)])
+        lat, area = self._objectives_jit(jnp.asarray(idx))
+        return np.asarray(lat)[:b], np.asarray(area)[:b]

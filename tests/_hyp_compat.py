@@ -1,0 +1,72 @@
+"""Deterministic fallback for `hypothesis` in offline containers.
+
+The property-test modules import hypothesis when available and fall back to
+this shim otherwise, so tier-1 collection never depends on an optional
+package.  The shim re-implements the tiny strategy surface those tests use
+(`integers`, `floats`, `sampled_from`, `tuples`, `lists`) and runs each test
+body on a fixed-seed random sample of examples — no shrinking, no database,
+but the same oracle assertions get exercised.
+"""
+from __future__ import annotations
+
+import random
+
+_FALLBACK_SEED = 0xC0FFEE
+_MAX_FALLBACK_EXAMPLES = 12
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+    @staticmethod
+    def tuples(*strategies):
+        return _Strategy(lambda r: tuple(s.draw(r) for s in strategies))
+
+    @staticmethod
+    def lists(strategy, min_size=0, max_size=10):
+        return _Strategy(
+            lambda r: [strategy.draw(r)
+                       for _ in range(r.randint(min_size, max_size))])
+
+
+st = _Strategies()
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        n = min(getattr(fn, "_hyp_max_examples", 20), _MAX_FALLBACK_EXAMPLES)
+
+        def wrapper():
+            rng = random.Random(_FALLBACK_SEED)
+            for _ in range(n):
+                fn(*(s.draw(rng) for s in strategies))
+        # NOT functools.wraps: pytest must see a zero-arg signature, or it
+        # treats the strategy-filled parameters as missing fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # offline container: deterministic fallback
+    from _hyp_compat import given, settings, st
 
 from repro.models.moe import init_moe, moe_block
 
