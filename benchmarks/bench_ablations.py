@@ -18,26 +18,24 @@ import numpy as np
 from repro.core.loop import LuminaDSE
 from repro.core.llm import RuleOracle, DegradedOracle
 from repro.core.refine import RefinementLoop
-from repro.perfmodel import (gpt3_layer_prefill, gpt3_layer_decode,
-                             RooflineModel, CompassModel)
+from repro.perfmodel import get_evaluator
 
 
 class _NoRefine(RefinementLoop):
     def update(self, sens, tm, sample):
         return ""
 
-    def maybe_reanchor(self, sens, tm, mt, mp, step):
+    def maybe_reanchor(self, sens, tm, evaluator, step, _legacy_tpot=None):
         return sens
 
 
 def run(budget: int = 20, trials: int = 3) -> List[str]:
-    pre, dec = gpt3_layer_prefill(), gpt3_layer_decode()
-    ct, cp = CompassModel(pre), CompassModel(dec)
-    rt, rp = RooflineModel(pre), RooflineModel(dec)
+    target = get_evaluator("target")
+    proxy_ev = get_evaluator("proxy")
 
     def campaign(seed, llm=None, refine=True, proxy=True, b=budget):
-        dse = LuminaDSE(ct, cp,
-                        proxy_models=(rt, rp) if proxy else None,
+        dse = LuminaDSE(target,
+                        proxy=proxy_ev if proxy else None,
                         llm=llm, seed=seed)
         if not refine:
             dse.refiner = _NoRefine()

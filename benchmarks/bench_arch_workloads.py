@@ -11,7 +11,7 @@ from __future__ import annotations
 from typing import List
 
 from repro.configs import ARCHS
-from repro.perfmodel import RooflineModel, attribute_stalls
+from repro.perfmodel import make_evaluator
 from repro.perfmodel.designspace import SPACE, A100_REFERENCE
 from repro.perfmodel.workload import from_arch
 
@@ -20,11 +20,13 @@ def run() -> List[str]:
     idx = SPACE.encode_nearest(A100_REFERENCE)
     lines = []
     for name, cfg in ARCHS.items():
-        mt = RooflineModel(from_arch(cfg, batch=8, seq=2048, decode=False))
-        mp = RooflineModel(from_arch(cfg, batch=8, seq=2048, decode=True,
-                                     kv_len=3072))
-        rt = attribute_stalls(mt, idx)
-        rp = attribute_stalls(mp, idx)
+        ev = make_evaluator({
+            "ttft": from_arch(cfg, batch=8, seq=2048, decode=False),
+            "tpot": from_arch(cfg, batch=8, seq=2048, decode=True,
+                              kv_len=3072),
+        })
+        reps = ev.stalls(idx).stall_reports()     # one fused dispatch/arch
+        rt, rp = reps["ttft"], reps["tpot"]
         lines.append(f"archs,{name}_ttft_ms,{rt.latency * 1e3:.2f},"
                      f"stall={rt.dominant}")
         lines.append(f"archs,{name}_tpot_us,{rp.latency * 1e6:.1f},"

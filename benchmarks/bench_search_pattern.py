@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core.baselines import AntColony, run_method
 from repro.core.loop import LuminaDSE
-from repro.perfmodel import gpt3_layer_prefill, gpt3_layer_decode, RooflineModel
+from repro.perfmodel import get_evaluator
 from repro.perfmodel.designspace import SPACE, A100_REFERENCE
 
 
@@ -26,19 +26,14 @@ def _distance_profile(X: np.ndarray, Y: np.ndarray) -> List[float]:
 
 
 def run(budget: int = 200) -> List[str]:
-    mt = RooflineModel(gpt3_layer_prefill())
-    mp = RooflineModel(gpt3_layer_decode())
+    evaluator = get_evaluator("proxy")
 
-    def evaluator(X):
-        ot, op = mt.eval_ppa(X), mp.eval_ppa(X)
-        return np.stack([ot["latency"], op["latency"], ot["area"]], axis=1)
-
-    ref = evaluator(SPACE.encode_nearest(A100_REFERENCE)[None, :])[0]
+    ref = evaluator.objectives(SPACE.encode_nearest(A100_REFERENCE)[None, :])[0]
     aco = run_method(AntColony, evaluator, budget, ref, seed=0, batch=8)
     yn = aco.Y / ref[None, :]
     aco_prof = _distance_profile(aco.X, yn)
 
-    res = LuminaDSE(mt, mp, seed=0).run(budget=budget)
+    res = LuminaDSE(evaluator, seed=0).run(budget=budget)
     X = np.stack([s.idx for s in res.samples])
     Y = np.stack([s.objectives for s in res.samples]) / ref[None, :]
     lum_prof = _distance_profile(X, Y)

@@ -3,8 +3,11 @@
 The substrate headline (paper §4): vectorized evaluation turns 6000
 CPU-hours / 1000 LLMCompass samples into seconds for the *whole* space.
 Emits the evaluator-throughput trajectory (`points_per_sec`,
-`full_sweep_seconds`) plus a brute-force cross-check of the streaming
-reduction on a 50k-id subspace.
+`full_sweep_seconds`), a brute-force cross-check of the streaming reduction
+on a 50k-id subspace, and the per-stall-class seed designs (`stall_topk`)
+that let bottleneck analysis start from sweep-discovered bottleneck regimes.
+
+``smoke=True`` (CI) truncates the throughput sweep to a 600k-id range.
 """
 from __future__ import annotations
 
@@ -13,19 +16,20 @@ from typing import List
 import numpy as np
 
 from repro.core.pareto import dominates_ref, pareto_front
-from repro.perfmodel import make_paper_evaluator
+from repro.perfmodel import get_evaluator
 from repro.perfmodel.designspace import SPACE
 from repro.perfmodel.sweep import SweepEngine
 
-def run(full: bool = False) -> List[str]:
-    mt, mp, evaluator = make_paper_evaluator("roofline")
-    eng = SweepEngine(mt, mp)
+
+def run(full: bool = False, smoke: bool = False) -> List[str]:
+    evaluator = get_evaluator("proxy")
+    eng = SweepEngine(evaluator, stall_topk=8)
     lines = []
 
     # ---- correctness: streaming reduction vs brute force (--full: 4x ids) ----
     subspace = 200_000 if full else 50_000
     sub = eng.run(0, subspace)
-    ys = evaluator(SPACE.flat_to_idx(np.arange(subspace)))
+    ys = evaluator.objectives(SPACE.flat_to_idx(np.arange(subspace)))
     front = pareto_front(ys)
     sup = int(dominates_ref(ys, eng.ref_point).sum())
     ok = (sub.n_superior == sup
@@ -34,8 +38,8 @@ def run(full: bool = False) -> List[str]:
                           np.sort(front, axis=0), rtol=1e-6))
     lines.append(f"sweep,subspace_check_ok,{int(ok)}")
 
-    # ---- throughput: the full 4.7M-point sweep ----
-    res = eng.run()
+    # ---- throughput: the full 4.7M-point sweep (600k ids in smoke mode) ----
+    res = eng.run(0, 600_000 if smoke else None)
     lines.append(f"sweep,full_sweep_seconds,{res.seconds:.2f}")
     lines.append(f"sweep,points_per_sec,{res.points_per_sec:.0f}")
     lines.append(f"sweep,pareto_front_size,{len(res.pareto_ids)}")
@@ -44,6 +48,8 @@ def run(full: bool = False) -> List[str]:
     lines.append(f"sweep,best_ttft_s,{res.topk_val[0][0]:.6g}")
     lines.append(f"sweep,best_tpot_s,{res.topk_val[1][0]:.6g}")
     lines.append(f"sweep,best_area_mm2,{res.topk_val[2][0]:.5g}")
+    for stall, seeds in res.stall_seeds().items():
+        lines.append(f"sweep,stall_seeds_{stall},{len(seeds)}")
     return lines
 
 

@@ -4,7 +4,7 @@ Prints ``name,metric,value[,derived]`` CSV lines.  Default scale is tuned
 for CI (~10 min on this CPU container); pass --full for the paper-scale
 suite (308-question benchmark, 1000-sample campaigns).
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only table3,...]
+    PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only table3,...]
 """
 from __future__ import annotations
 
@@ -16,10 +16,18 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: truncate the sweep bench's throughput "
+                         "pass to a 600k-id range, run fig4/5 at quick "
+                         "scale, and drop budget20/ablation to one trial "
+                         "(oracle-PHV normalization still sweeps the full "
+                         "space once — a few seconds)")
     ap.add_argument("--only", default=None,
                     help="comma list: table3,fig45,fig6,budget20,table4,"
                          "sweep,kernels,archs,ablation")
     args = ap.parse_args()
+    if args.full and args.smoke:
+        raise SystemExit("--full and --smoke are mutually exclusive")
     only = set(args.only.split(",")) if args.only else None
 
     benches = []
@@ -31,19 +39,22 @@ def main() -> None:
         from benchmarks import bench_dse_methods
         benches.append(("fig4/5", lambda: bench_dse_methods.run(
             budget=1000 if args.full else 300,
-            trials=5 if args.full else 3)))
+            trials=5 if args.full else 3,
+            quick=args.smoke)))
     if only is None or "fig6" in only:
         from benchmarks import bench_search_pattern
         benches.append(("fig6", bench_search_pattern.run))
     if only is None or "budget20" in only:
         from benchmarks import bench_budget20
-        benches.append(("budget20", bench_budget20.run))
+        benches.append(("budget20", lambda: bench_budget20.run(
+            trials=1 if args.smoke else 3)))
     if only is None or "table4" in only:
         from benchmarks import bench_top_designs
         benches.append(("table4", bench_top_designs.run))
     if only is None or "sweep" in only:
         from benchmarks import bench_sweep
-        benches.append(("sweep", lambda: bench_sweep.run(full=args.full)))
+        benches.append(("sweep", lambda: bench_sweep.run(full=args.full,
+                                                         smoke=args.smoke)))
     if only is None or "kernels" in only:
         from benchmarks import bench_kernels
         benches.append(("kernels", bench_kernels.run))
@@ -53,7 +64,7 @@ def main() -> None:
     if only is None or "ablation" in only:
         from benchmarks import bench_ablations
         benches.append(("ablation", lambda: bench_ablations.run(
-            trials=3 if args.full else 2)))
+            trials=3 if args.full else 1 if args.smoke else 2)))
 
     if only and not benches:
         raise SystemExit(f"no benchmark matches --only {args.only!r} "

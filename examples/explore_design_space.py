@@ -6,12 +6,10 @@ the ASSIGNED architectures — each arch config doubles as a Lumina workload.
 """
 import argparse
 
-import numpy as np
-
 from repro.configs import get_arch
 from repro.core.baselines import METHODS, run_method
 from repro.core.loop import LuminaDSE
-from repro.perfmodel import RooflineModel
+from repro.perfmodel import make_evaluator
 from repro.perfmodel.designspace import SPACE, A100_REFERENCE
 from repro.perfmodel.workload import from_arch
 
@@ -22,17 +20,17 @@ def main() -> None:
     ap.add_argument("--budget", type=int, default=150)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=2048)
+    ap.add_argument("--backend", default=None,
+                    help="evaluator backend: roofline|pallas|auto")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
-    mt = RooflineModel(from_arch(cfg, args.batch, args.seq, decode=False))
-    mp = RooflineModel(from_arch(cfg, args.batch, args.seq, decode=True))
+    evaluator = make_evaluator({
+        "ttft": from_arch(cfg, args.batch, args.seq, decode=False),
+        "tpot": from_arch(cfg, args.batch, args.seq, decode=True),
+    }, backend=args.backend)
 
-    def evaluator(X):
-        ot, op = mt.eval_ppa(X), mp.eval_ppa(X)
-        return np.stack([ot["latency"], op["latency"], ot["area"]], axis=1)
-
-    ref = evaluator(SPACE.encode_nearest(A100_REFERENCE)[None, :])[0]
+    ref = evaluator.objectives(SPACE.encode_nearest(A100_REFERENCE)[None, :])[0]
     print(f"workload: {args.arch}  A100 point: "
           f"TTFT {ref[0] * 1e3:.2f}ms TPOT {ref[1] * 1e6:.0f}us "
           f"area {ref[2]:.0f}mm2\n")
@@ -42,7 +40,7 @@ def main() -> None:
         r = run_method(cls, evaluator, args.budget, ref, seed=0, batch=8)
         print(f"{name:8s} {r.phv:10.4g} {r.sample_efficiency:10.3f} "
               f"{r.superior_count:9d}")
-    res = LuminaDSE(mt, mp, seed=0).run(budget=args.budget)
+    res = LuminaDSE(evaluator, seed=0).run(budget=args.budget)
     print(f"{'LUMINA':8s} {res.phv:10.4g} {res.sample_efficiency:10.3f} "
           f"{res.superior_count:9d}")
     best = res.pareto[0]

@@ -8,7 +8,7 @@ oracle that black-box DSE methods can only sample.
 """
 import argparse
 
-from repro.perfmodel import make_paper_evaluator
+from repro.perfmodel import get_evaluator
 from repro.perfmodel.designspace import SPACE
 from repro.perfmodel.sweep import SweepEngine
 
@@ -25,10 +25,12 @@ def main() -> None:
                     help="chunks between checkpoint writes")
     ap.add_argument("--resume", default=None,
                     help="checkpoint file to resume a partial sweep from")
+    ap.add_argument("--stall-topk", type=int, default=8,
+                    help="per-stall-class seed designs to track (0 = off)")
     args = ap.parse_args()
 
-    mt, mp, _ = make_paper_evaluator("roofline")
-    eng = SweepEngine(mt, mp, chunk_size=args.chunk, backend=args.backend)
+    eng = SweepEngine(get_evaluator("proxy"), chunk_size=args.chunk,
+                      backend=args.backend, stall_topk=args.stall_topk)
     ref = eng.ref_point
     print(f"design space: {SPACE.size:,} points "
           f"({' x '.join(str(len(c)) for c in SPACE.choices)})")
@@ -58,6 +60,15 @@ def main() -> None:
         vals = {k: int(v) for k, v in SPACE.decode_np(idx).items()}
         print(f"  {nm:5s} {res.topk_val[o][0] * u:10.4g} "
               f"{'ms' if o == 0 else 'us' if o == 1 else 'mm2':3s}  {vals}")
+
+    if args.stall_topk:
+        print("\nbottleneck-analysis seeds (best TTFT per dominant stall):")
+        for stall, seeds in res.stall_seeds().items():
+            if not len(seeds):
+                print(f"  {stall:16s} (none found)")
+                continue
+            vals = {k: int(v) for k, v in SPACE.decode_np(seeds[0]).items()}
+            print(f"  {stall:16s} {len(seeds):2d} seeds, best: {vals}")
 
 
 if __name__ == "__main__":

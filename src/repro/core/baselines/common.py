@@ -58,8 +58,13 @@ def run_method(opt_cls: Type[BaseOptimizer], evaluator, budget: int,
                name: Optional[str] = None, **kw) -> MethodResult:
     """Drive one baseline for `budget` evaluations.
 
-    evaluator(X: (n, n_params) int) -> (n, 3) objectives [ttft, tpot, area].
+    `evaluator` is either an :class:`~repro.perfmodel.evaluator.Evaluator`
+    (its fused ``objectives`` dispatch is used — one device call per ask
+    batch) or a legacy callable ``X: (n, n_params) int -> (n, 3)``
+    objectives ``[ttft, tpot, area]``.
     """
+    if hasattr(evaluator, "evaluate") and hasattr(evaluator, "objectives"):
+        evaluator = evaluator.objectives
     opt = opt_cls(space=space, seed=seed, **kw)
     ref = np.asarray(ref_point, dtype=np.float64)
     # Streaming Pareto archive: PHV is a function of the front alone, so each

@@ -27,10 +27,11 @@ import numpy as np
 from repro.core.llm import (MCQuery, TASK_BOTTLENECK, TASK_PREDICTION,
                             TASK_TUNING)
 from repro.core.quane import sensitivity_analysis
-from repro.perfmodel.critical_path import attribute_stalls, STALL_CLASSES
+from repro.perfmodel.critical_path import STALL_CLASSES
 from repro.perfmodel.designspace import DesignSpace, SPACE
+from repro.perfmodel.evaluator import make_evaluator
 from repro.perfmodel.hardware import AREA_MODEL_SOURCE
-from repro.perfmodel.roofline import RooflineModel, SRAM_FEED_WORDS_PER_KB
+from repro.perfmodel.roofline import SRAM_FEED_WORDS_PER_KB
 from repro.perfmodel import workload as W
 from repro.perfmodel.workload import Workload, _matmul, _vector, _allreduce
 
@@ -97,13 +98,14 @@ def generate_bottleneck(n: int = 308, seed: int = 0,
                         space: DesignSpace = SPACE) -> List[MCQuery]:
     rng = np.random.default_rng(seed)
     wls = _primitive_workloads() + _full_workloads()
-    models = {w.name: RooflineModel(w, space) for w in wls}
+    # one single-workload evaluator per target, all sharing the jit cache
+    evs = {w.name: make_evaluator({"lat": w}, space=space) for w in wls}
     out: List[MCQuery] = []
     while len(out) < n:
         wl = wls[int(rng.integers(len(wls)))]
-        model = models[wl.name]
+        ev = evs[wl.name]
         idx = space.sample(rng, 1)[0]
-        rep = attribute_stalls(model, idx)
+        rep = ev.stalls(idx).stall_report()
         dom = rep.dominant
         primary = PRIMARY[dom]
         rel = RELEVANT[dom]
@@ -116,16 +118,16 @@ def generate_bottleneck(n: int = 308, seed: int = 0,
                      (str(rng.choice(irrelevant)), +1)])              # + irrelevant
         news = np.stack([_apply_moves(space, idx, c) for c in cand]
                         + [_apply_moves(space, idx, [("sa_dim", +1)]), idx])
-        o_all = model.eval_ppa(news)
+        y_all = ev.objectives(news)                     # (rows, 2): lat, area
         # headroom: does growing the systolic array alone still help here?
         # (the corrective rule distilled from observed failure cases)
-        sa_helps = bool(o_all["latency"][-2] < o_all["latency"][-1] * 0.999)
-        o = {kk: vv[:len(cand)] for kk, vv in o_all.items()}
+        sa_helps = bool(y_all[-2, 0] < y_all[-1, 0] * 0.999)
+        y = y_all[:len(cand)]
         # ground truth: best latency; ties broken toward fewer moves and
         # lower area (an adjustment that spends area on an irrelevant
         # resource for the same latency is NOT the right answer)
-        lat = np.round(o["latency"] / o["latency"].min(), 4)
-        keys = [(lat[i], len(cand[i]), float(o["area"][i]))
+        lat = np.round(y[:, 0] / y[:, 0].min(), 4)
+        keys = [(lat[i], len(cand[i]), float(y[i, 1]))
                 for i in range(len(cand))]
         truth = int(min(range(len(cand)), key=lambda i: keys[i]))
         perm = rng.permutation(len(cand))
@@ -153,11 +155,11 @@ def generate_prediction(n: int = 127, seed: int = 1,
     rng = np.random.default_rng(seed)
     wl = W.gpt3_layer_prefill()
     dec = W.gpt3_layer_decode()
-    mt, mp = RooflineModel(wl, space), RooflineModel(dec, space)
+    ev = make_evaluator({"ttft": wl, "tpot": dec}, space=space)
     out: List[MCQuery] = []
     while len(out) < n:
         ref = space.sample(rng, 1)[0]
-        sens = sensitivity_analysis(mt, mp, ref, space)
+        sens = sensitivity_analysis(ev, ref, space=space)
         metric = ("ttft", "tpot", "area")[int(rng.integers(3))]
         # perturb 1-3 params by +-1 step
         k = int(rng.integers(1, 4))
@@ -172,10 +174,10 @@ def generate_prediction(n: int = 127, seed: int = 1,
                 new[pi] = tgt
         if not steps:
             continue
-        model = {"ttft": mt, "tpot": mp, "area": mt}[metric]
-        o = model.eval_ppa(np.stack([ref, new]))
-        truth_val = float(o["area"][1] if metric == "area" else o["latency"][1])
-        base_val = float(o["area"][0] if metric == "area" else o["latency"][0])
+        col = {"ttft": 0, "tpot": 1, "area": 2}[metric]
+        y = ev.objectives(np.stack([ref, new]))       # one fused dispatch
+        truth_val = float(y[1, col])
+        base_val = float(y[0, col])
         lin = base_val + sum(sens.delta[p][metric] * d for p, d in steps.items())
         zero_baseline = lin - base_val        # the paper-reported failure mode
         opts = [truth_val, zero_baseline,
@@ -208,14 +210,14 @@ def generate_tuning(n: int = 30, seed: int = 2,
     rng = np.random.default_rng(seed)
     wl = W.gpt3_layer_prefill()
     dec = W.gpt3_layer_decode()
-    mt, mp = RooflineModel(wl, space), RooflineModel(dec, space)
+    ev = make_evaluator({"ttft": wl, "tpot": dec}, space=space)
     out: List[MCQuery] = []
     while len(out) < n:
         idx = space.sample(rng, 1)[0]
-        rep = attribute_stalls(mt, idx)
+        rep = ev.stalls(idx).stall_report("ttft")
         dom = rep.dominant
         primary = PRIMARY[dom]
-        sens = sensitivity_analysis(mt, mp, idx, space)
+        sens = sensitivity_analysis(ev, idx, space=space)
         crit = sens.criticality("ttft")
         least = min(crit, key=crit.get)
         most = max(crit, key=crit.get)
@@ -228,8 +230,8 @@ def generate_tuning(n: int = 30, seed: int = 2,
             [(primary, +1), (least, -1), (most, -1)],  # over-aggressive
         ]
         news = [_apply_moves(space, idx, c) for c in cand]
-        o = mt.eval_ppa(np.stack(news))
-        lat, area = o["latency"], o["area"]
+        y = ev.objectives(np.stack(news))             # one fused dispatch
+        lat, area = y[:, 0], y[:, 2]
         feasible = area <= area_budget
         score = np.where(feasible, lat, lat * 100.0)
         truth = int(np.argmin(score))

@@ -1,4 +1,10 @@
-"""Accuracy harness for the DSE Benchmark (paper Table 3)."""
+"""Accuracy harness for the DSE Benchmark (paper Table 3).
+
+Ground truth in the scored suites comes from the unified
+:mod:`repro.perfmodel.evaluator` contract (the generator computes every
+answer through fused evaluator dispatches), so benchmark accuracy and the
+live DSE loop exercise the same evaluation path.
+"""
 from __future__ import annotations
 
 from typing import Dict, Iterable, List, Sequence, Tuple

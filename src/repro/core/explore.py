@@ -2,32 +2,71 @@
 
 The EE is the integration layer (§3.3.2): it serializes the SE's directive
 into the simulator's design format (choice-index vector), issues the
-evaluation, and returns the structured sample for the Trajectory Memory.
+evaluation through the unified :class:`~repro.perfmodel.evaluator.Evaluator`
+contract, and returns the structured sample for the Trajectory Memory.
+
+One DSE step costs exactly ONE fused jitted dispatch: the evaluator computes
+TTFT, TPOT and stall attribution together, and the resulting
+:class:`~repro.perfmodel.evaluator.PPAReport` is cached per design so
+follow-up ``reports()`` reads (the SE re-reading the current base design)
+are free.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.memory import Sample
 from repro.core.strategy import Directive
-from repro.perfmodel.critical_path import attribute_stalls, StallReport
+from repro.perfmodel.critical_path import StallReport
+from repro.perfmodel.evaluator import EvalRequest, Evaluator, as_evaluator
+
+_CACHE_CAP = 4096        # evaluated-design reports kept per engine
 
 
 class ExplorationEngine:
-    """Wraps the (ttft_model, tpot_model) pair as the evaluation backend."""
+    """Wraps an Evaluator as the evaluation backend.
 
-    def __init__(self, ttft_model, tpot_model):
-        self.ttft_model = ttft_model
-        self.tpot_model = tpot_model
+    Construct from an :class:`~repro.perfmodel.evaluator.Evaluator`, or from
+    a legacy ``(ttft_model, tpot_model)`` pair (deprecated shim).
+    """
+
+    def __init__(self, evaluator: Evaluator, tpot_model=None):
+        self.evaluator = as_evaluator(evaluator, tpot_model)
+        if len(self.evaluator.workloads) < 2:
+            raise ValueError("the DSE loop needs a two-workload evaluator "
+                             "(ttft + tpot)")
+        self._wt, self._wp = self.evaluator.workloads[:2]
         self.evals = 0        # simulator invocations (the sampling budget)
+        self._reports: Dict[tuple, Tuple[StallReport, StallReport]] = {}
+
+    # legacy attribute access (a few benches/teardowns poke the models)
+    @property
+    def ttft_model(self):
+        return self.evaluator.models[self._wt]
+
+    @property
+    def tpot_model(self):
+        return self.evaluator.models[self._wp]
+
+    def _report_pair(self, idx: np.ndarray) -> Tuple[StallReport, StallReport]:
+        """Both workloads' critical-path reports from one fused dispatch."""
+        idx = np.asarray(idx, dtype=np.int32)
+        key = idx.tobytes()
+        pair = self._reports.get(key)
+        if pair is None:
+            rep = self.evaluator.evaluate(EvalRequest(idx, detail="stalls"))
+            pair = (rep.stall_report(self._wt), rep.stall_report(self._wp))
+            if len(self._reports) >= _CACHE_CAP:
+                self._reports.clear()
+            self._reports[key] = pair
+        return pair
 
     def evaluate(self, idx: np.ndarray, step: int,
                  directive: Optional[Directive] = None) -> Sample:
         idx = np.asarray(idx, dtype=np.int32)
-        rep_t = attribute_stalls(self.ttft_model, idx)
-        rep_p = attribute_stalls(self.tpot_model, idx)
+        rep_t, rep_p = self._report_pair(idx)
         self.evals += 1
         # the design's dominant stall = the larger absolute stall across the
         # two latency objectives (what the SE will attack next)
@@ -40,9 +79,8 @@ class ExplorationEngine:
         )
 
     def reports(self, idx: np.ndarray):
-        """Fresh critical-path reports for both latency objectives."""
-        return (attribute_stalls(self.ttft_model, idx),
-                attribute_stalls(self.tpot_model, idx))
+        """Critical-path reports for both latency objectives (cached)."""
+        return self._report_pair(idx)
 
     @staticmethod
     def _merge(rep_t: StallReport, rep_p: StallReport) -> StallReport:

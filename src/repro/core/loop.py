@@ -1,12 +1,16 @@
 """The Lumina DSE loop (Figure 2): AHK acquisition -> iterate
 (evaluate -> bottleneck analysis -> strategy -> explore) -> refine.
 
-Budget accounting follows the paper: only *simulation-environment*
-evaluations (EE calls on the target-fidelity models) count against the
-sampling budget.  QualE probing and QuanE sensitivity run on the cheap
-proxy tier (§3.2.2: "the QuanE can focus on estimating only power and area,
-which are faster to evaluate") — pass ``proxy_models`` to enable this; by
-default the target models are also the proxies.
+Both fidelity tiers are :class:`~repro.perfmodel.evaluator.Evaluator`
+instances: the *target* evaluator is the budgeted simulation environment
+(each EE step = ONE fused jitted dispatch), the *proxy* evaluator serves
+QualE probing and QuanE sensitivity for free (§3.2.2: "the QuanE can focus
+on estimating only power and area, which are faster to evaluate").  Budget
+accounting follows the paper: only EE dispatches on the target tier count.
+
+Construct with evaluators (``LuminaDSE(evaluator, proxy=proxy_ev)``) or the
+legacy ``(ttft_model, tpot_model, proxy_models=(rt, rp))`` pair signature,
+which is kept as a deprecation shim for one release.
 """
 from __future__ import annotations
 
@@ -23,6 +27,7 @@ from repro.core.quane import sensitivity_analysis
 from repro.core.refine import RefinementLoop
 from repro.core.strategy import StrategyEngine
 from repro.perfmodel.designspace import DesignSpace, SPACE, A100_REFERENCE
+from repro.perfmodel.evaluator import Evaluator, as_evaluator
 
 
 @dataclasses.dataclass
@@ -36,16 +41,21 @@ class DSEResult:
 
 
 class LuminaDSE:
-    def __init__(self, ttft_model, tpot_model,
+    def __init__(self, ttft_model, tpot_model=None,
                  proxy_models: Optional[Tuple] = None,
                  llm: Optional[LLMBackend] = None,
                  space: DesignSpace = SPACE,
                  ref_point: Optional[np.ndarray] = None,
                  area_budget: Optional[float] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 proxy: Optional[Evaluator] = None):
         self.space = space
-        self.ee = ExplorationEngine(ttft_model, tpot_model)
-        self.proxy_ttft, self.proxy_tpot = proxy_models or (ttft_model, tpot_model)
+        evaluator = as_evaluator(ttft_model, tpot_model)
+        self.ee = ExplorationEngine(evaluator)
+        if proxy is None and proxy_models is not None:
+            proxy = as_evaluator(*proxy_models) if isinstance(
+                proxy_models, tuple) else as_evaluator(proxy_models)
+        self.proxy = proxy if proxy is not None else evaluator
         self.llm = llm or RuleOracle(enhanced=True)
         self.refiner = RefinementLoop()
         self.seed = seed
@@ -65,13 +75,12 @@ class LuminaDSE:
         notes: List[str] = []
 
         # ---- AHK acquisition (proxy tier, not budgeted) ----
-        imap = derive_influence_map(self.proxy_ttft, self.proxy_tpot, space,
-                                    seed=self.seed)
+        imap = derive_influence_map(self.proxy, space=space, seed=self.seed)
         se = StrategyEngine(self.llm, imap, space)
 
         idx = np.asarray(init if init is not None
                          else space.encode_nearest(A100_REFERENCE), dtype=np.int32)
-        sens = sensitivity_analysis(self.proxy_ttft, self.proxy_tpot, idx, space)
+        sens = sensitivity_analysis(self.proxy, idx, space=space)
 
         sample = self.ee.evaluate(idx, step=0)
         tm.add(sample)
@@ -95,8 +104,7 @@ class LuminaDSE:
             note = self.refiner.update(sens, tm, sample)
             if note:
                 notes.append(f"step {step}: {note}")
-            sens = self.refiner.maybe_reanchor(sens, tm, self.proxy_ttft,
-                                               self.proxy_tpot, step)
+            sens = self.refiner.maybe_reanchor(sens, tm, self.proxy, step)
 
         return DSEResult(
             samples=list(tm.samples),

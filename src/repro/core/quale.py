@@ -14,12 +14,13 @@ Knowledge (AHK); the Quantitative Engine fills in magnitudes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Set
+from typing import Dict, List, Optional, Set
 
 import numpy as np
 
 from repro.perfmodel.critical_path import STALL_CLASSES
-from repro.perfmodel.designspace import DesignSpace, SPACE
+from repro.perfmodel.designspace import DesignSpace
+from repro.perfmodel.evaluator import EvalRequest, as_evaluator
 
 METRICS = ("ttft", "tpot", "area")
 
@@ -41,11 +42,20 @@ class InfluenceMap:
         return "\n".join(lines)
 
 
-def derive_influence_map(ttft_model, tpot_model, space: DesignSpace = SPACE,
+def derive_influence_map(evaluator, tpot_model=None,
+                         space: Optional[DesignSpace] = None,
                          n_probes: int = 8, seed: int = 0,
                          rel_eps: float = 1e-4) -> InfluenceMap:
-    """Probe the models at `n_probes` random designs, sweeping each parameter
-    over its full choice range, and record which outputs move."""
+    """Probe the evaluator at `n_probes` random designs, sweeping each
+    parameter over its full choice range, and record which outputs move.
+
+    Accepts an :class:`~repro.perfmodel.evaluator.Evaluator` (preferred) or
+    the legacy ``(ttft_model, tpot_model)`` pair.  One fused stalls-detail
+    dispatch per parameter covers every workload's latency, the per-class
+    stall times AND area — the legacy path issued three model calls.
+    """
+    ev = as_evaluator(evaluator, tpot_model)
+    space = space or ev.space
     rng = np.random.default_rng(seed)
     probes = space.sample(rng, n_probes)
     metric_edges: Dict[str, Set[str]] = {p: set() for p in space.names}
@@ -56,16 +66,16 @@ def derive_influence_map(ttft_model, tpot_model, space: DesignSpace = SPACE,
         # batch: every probe x every choice of this param
         batch = np.repeat(probes, card, axis=0)
         batch[:, pi] = np.tile(np.arange(card, dtype=np.int32), n_probes)
-        for mname, model in (("ttft", ttft_model), ("tpot", tpot_model)):
-            out = model.eval_ppa(batch)
-            lat = out["latency"].reshape(n_probes, card)
-            stall = out["stall"].reshape(n_probes, card, 4)
+        rep = ev.evaluate(EvalRequest(batch, detail="stalls"))
+        for mname in ev.workloads:
+            lat = rep.latency[mname].reshape(n_probes, card)
+            stall = rep.stall[mname].reshape(n_probes, card, 4)
             if _responds(lat, rel_eps):
                 metric_edges[pname].add(mname)
             for ci, cname in enumerate(STALL_CLASSES):
                 if _responds(stall[..., ci], rel_eps):
                     stall_edges[pname].add(cname)
-        area = ttft_model.eval_ppa(batch)["area"].reshape(n_probes, card)
+        area = rep.area.reshape(n_probes, card)
         if _responds(area, rel_eps):
             metric_edges[pname].add("area")
 

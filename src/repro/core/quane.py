@@ -12,11 +12,12 @@ recalibrates them with observed samples.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
-from repro.perfmodel.designspace import DesignSpace, SPACE
+from repro.perfmodel.designspace import DesignSpace
+from repro.perfmodel.evaluator import as_evaluator
 
 METRICS = ("ttft", "tpot", "area")
 
@@ -43,13 +44,24 @@ class Sensitivity:
         return "\n".join(lines)
 
 
-def sensitivity_analysis(ttft_model, tpot_model, idx: np.ndarray,
-                         space: DesignSpace = SPACE) -> Sensitivity:
+def sensitivity_analysis(evaluator, tpot_model=None, idx: Optional[np.ndarray] = None,
+                         space: Optional[DesignSpace] = None) -> Sensitivity:
     """Finite-difference sensitivities around design `idx`.
 
     Uses a central difference where both neighbors exist, one-sided at the
-    choice-range boundaries.  A single batched eval covers all neighbors.
+    choice-range boundaries.  ONE fused batched dispatch covers all
+    neighbors across every workload (the legacy path evaluated the batch
+    once per model).
+
+    Accepts ``sensitivity_analysis(evaluator, idx)`` (preferred) or the
+    legacy ``sensitivity_analysis(ttft_model, tpot_model, idx)``.
     """
+    if idx is None and isinstance(tpot_model, (np.ndarray, list, tuple)):
+        idx, tpot_model = tpot_model, None          # new-style call
+    if idx is None:
+        raise TypeError("sensitivity_analysis needs a design index vector")
+    ev = as_evaluator(evaluator, tpot_model)
+    space = space or ev.space
     idx = np.asarray(idx, dtype=np.int32)
     rows = [idx]
     slots = []  # (param_i, direction, row_index)
@@ -62,12 +74,14 @@ def sensitivity_analysis(ttft_model, tpot_model, idx: np.ndarray,
                 rows.append(j)
     batch = np.stack(rows, axis=0)
 
-    out_t = ttft_model.eval_ppa(batch)
-    out_p = tpot_model.eval_ppa(batch)
+    if len(ev.workloads) < 2:
+        raise ValueError("sensitivity_analysis needs a two-workload "
+                         "evaluator (ttft + tpot)")
+    rep = ev.objectives(batch)                      # one fused dispatch
     vals = {
-        "ttft": out_t["latency"],
-        "tpot": out_p["latency"],
-        "area": out_t["area"],
+        "ttft": rep[:, 0],
+        "tpot": rep[:, 1],
+        "area": rep[:, -1],
     }
     ref = {m: float(v[0]) for m, v in vals.items()}
 

@@ -21,10 +21,11 @@ def op_table(wl: Workload) -> np.ndarray:
 def ppa_eval_ref(idx: np.ndarray, wl: Workload,
                  space: DesignSpace = SPACE) -> np.ndarray:
     """idx: (B, n_params) choice indices. Returns (B, 8) like the kernel."""
-    model = RooflineModel(wl, space)
-    out = model.eval_ppa(idx)
-    b = out["latency"].shape[0]
+    from repro.perfmodel.evaluator import evaluator_for_model
+    rep = evaluator_for_model(RooflineModel(wl, space)).stalls(idx)
+    w = rep.workloads[0]
+    b = rep.n
     return np.concatenate([
-        out["latency"][:, None], out["stall"], out["area"][:, None],
+        rep.latency[w][:, None], rep.stall[w], rep.area[:, None],
         np.zeros((b, 2)),
     ], axis=1).astype(np.float32)

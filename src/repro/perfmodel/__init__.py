@@ -1,13 +1,41 @@
-"""Analytical accelerator performance/area models (the paper's "simulation environment").
+"""Analytical accelerator PPA models behind ONE service boundary (the
+paper's "simulation environment").
 
-Two fidelity tiers, both fully vectorized over design points in JAX:
+Every consumer — the Lumina DSE loop, QualE/QuanE acquisition, the five
+black-box baselines, the full-space sweep, the DSE Benchmark generator and
+every ``benchmarks/*`` module — evaluates designs through the **unified
+tiered Evaluator API** of :mod:`repro.perfmodel.evaluator`:
 
-* :mod:`repro.perfmodel.roofline`  — fast roofline model (paper Fig. 1/4/5).
-* :mod:`repro.perfmodel.compass`   — LLMCompass-style tile-level analytical
-  model with per-op overheads and utilization effects (paper §5.3, Table 4).
+* :class:`~repro.perfmodel.evaluator.EvalRequest` — design-index batch +
+  workload subset + detail level (``objectives`` | ``ppa`` | ``stalls``);
+* :class:`~repro.perfmodel.evaluator.PPAReport` — the structured result
+  (per-workload latencies, area, stall attribution, per-op breakdown);
+* :func:`~repro.perfmodel.evaluator.get_evaluator` — the paper's GPT-3
+  workload evaluator per fidelity **tier**:
+
+  =========  ==========================================================
+  ``proxy``   fast roofline models (paper Fig. 1/4/5) — acquisition tier
+  ``target``  LLMCompass-calibrated models (paper §5.3, Table 4) — the
+              budgeted high-fidelity tier
+  ``oracle``  the exhaustive 4.7M-point sweep front
+              (:class:`~repro.perfmodel.evaluator.OracleEvaluator`) for
+              exact regret / PHV normalization
+  =========  ==========================================================
+
+* a **backend registry** (``roofline`` | ``compass`` | ``pallas`` with
+  ``backend="auto"`` benchmark-driven selection) choosing the compute
+  substrate independently of the tier.
+
+The evaluator's traced path is *fused*: one jitted dispatch decodes the
+batch, derives hardware once, and evaluates every workload (TTFT + TPOT +
+stall attribution) — replacing the legacy two-to-four per-model calls.
+``RooflineModel.eval_ppa`` / ``.objectives`` remain as deprecation shims
+for one release.
 
 Supporting pieces:
 
+* :mod:`repro.perfmodel.roofline`   — roofline op-term model (shared core).
+* :mod:`repro.perfmodel.compass`    — LLMCompass-style per-op-overhead tier.
 * :mod:`repro.perfmodel.designspace` — the 4.7M-point design space (Table 1).
 * :mod:`repro.perfmodel.hardware`    — design point -> derived hardware spec
   (throughputs, bandwidths, area), calibrated against NVIDIA A100.
@@ -15,6 +43,8 @@ Supporting pieces:
   assigned architecture) for TTFT / TPOT evaluation.
 * :mod:`repro.perfmodel.critical_path` — per-op stall attribution (the
   paper's critical-path extension of LLMCompass).
+* :mod:`repro.perfmodel.sweep`       — streaming full-space sweep engine
+  (the oracle tier's substrate; also emits per-stall-class seed designs).
 """
 
 from repro.perfmodel.designspace import DesignSpace, A100_REFERENCE
@@ -23,11 +53,19 @@ from repro.perfmodel.workload import Workload, Op, gpt3_layer_prefill, gpt3_laye
 from repro.perfmodel.roofline import RooflineModel
 from repro.perfmodel.compass import CompassModel
 from repro.perfmodel.critical_path import attribute_stalls, STALL_CLASSES
+from repro.perfmodel.evaluator import (Evaluator, EvalRequest, PPAReport,
+                                       ModelEvaluator, OracleEvaluator,
+                                       get_evaluator, make_evaluator,
+                                       as_evaluator, register_backend,
+                                       backend_names, TIERS, DETAILS)
 from repro.perfmodel.sweep import SweepEngine, SweepResult, make_paper_evaluator
 
 __all__ = [
     "DesignSpace", "A100_REFERENCE", "derive_hardware", "area_mm2",
     "Workload", "Op", "gpt3_layer_prefill", "gpt3_layer_decode",
     "RooflineModel", "CompassModel", "attribute_stalls", "STALL_CLASSES",
+    "Evaluator", "EvalRequest", "PPAReport", "ModelEvaluator",
+    "OracleEvaluator", "get_evaluator", "make_evaluator", "as_evaluator",
+    "register_backend", "backend_names", "TIERS", "DETAILS",
     "SweepEngine", "SweepResult", "make_paper_evaluator",
 ]

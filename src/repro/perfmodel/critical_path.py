@@ -38,17 +38,19 @@ class StallReport:
         return "\n".join(lines)
 
 
-def attribute_stalls(model, idx: np.ndarray, top: int = 5) -> StallReport:
-    """Evaluate one design and produce its critical-path report."""
-    out = model.eval_ppa(np.atleast_2d(idx))
-    stall = out["stall"][0]
-    latency = float(out["latency"][0])
-    op_t = out["op_time"][0]
-    op_c = out["op_class"][0]
-    names = model.wl.op_names
-    order = np.argsort(op_t)[::-1][:top]
-    top_ops = [(names[i], STALL_CLASSES[int(op_c[i])], float(op_t[i]))
-               for i in order]
+def build_report(latency: float, area: float, stall: np.ndarray,
+                 op_time: np.ndarray, op_class: np.ndarray,
+                 op_names, top: int = 5) -> StallReport:
+    """Assemble a :class:`StallReport` from one design's evaluated arrays.
+
+    The single report-construction path shared by the legacy
+    :func:`attribute_stalls` and :meth:`repro.perfmodel.evaluator.PPAReport.
+    stall_report`.
+    """
+    latency = float(latency)
+    order = np.argsort(op_time)[::-1][:top]
+    top_ops = [(op_names[i], STALL_CLASSES[int(op_class[i])],
+                float(op_time[i])) for i in order]
     per = {c: float(stall[i]) for i, c in enumerate(STALL_CLASSES)}
     dom_i = int(np.argmax(stall))
     return StallReport(
@@ -57,5 +59,17 @@ def attribute_stalls(model, idx: np.ndarray, top: int = 5) -> StallReport:
         dominant_fraction=float(stall[dom_i] / max(latency, 1e-30)),
         top_ops=top_ops,
         latency=latency,
-        area=float(out["area"][0]),
+        area=float(area),
     )
+
+
+def attribute_stalls(model, idx: np.ndarray, top: int = 5) -> StallReport:
+    """Evaluate one design and produce its critical-path report.
+
+    Convenience wrapper over the unified Evaluator contract: the model is
+    wrapped in a (memoized) single-workload evaluator, so repeated calls
+    share its fused jit cache with every other consumer.
+    """
+    from repro.perfmodel.evaluator import evaluator_for_model
+    rep = evaluator_for_model(model).stalls(np.atleast_2d(idx))
+    return rep.stall_report(i=0, top=top)

@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import functools
 import hashlib
-from typing import Dict, Tuple
+import warnings
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -119,6 +120,42 @@ def _batch_bucket(b: int) -> int:
     return bb
 
 
+def _bucketed_call(fn: Callable, idx: np.ndarray):
+    """Pad an index batch to its power-of-two bucket, call a jitted `fn`, and
+    slice every output leaf back to the true batch size.
+
+    The single pad/slice implementation behind ``eval_ppa``, ``objectives``
+    and the fused :class:`~repro.perfmodel.evaluator.ModelEvaluator` path.
+    """
+    idx = np.atleast_2d(np.asarray(idx, dtype=np.int32))
+    b = idx.shape[0]
+    bb = _batch_bucket(b)
+    if bb != b:                       # pad with the last row; slice back
+        idx = np.concatenate([idx, np.repeat(idx[-1:], bb - b, axis=0)])
+    out = fn(jnp.asarray(idx))
+    return jax.tree_util.tree_map(lambda v: np.asarray(v)[:b], out)
+
+
+def _attribute(t: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stall attribution for `_op_terms` output: each op's time goes to its
+    dominant resource.  Returns (dom_class (B, ops), stall (B, 4))."""
+    t_compute, t_memory, t_comm = t["t_compute"], t["t_memory"], t["t_comm"]
+    dom_is_comm = (t_comm >= t_compute) & (t_comm >= t_memory)
+    dom_is_compute = (t_compute > t_memory) & ~dom_is_comm
+    dom_class = jnp.where(
+        dom_is_comm, INTERCONNECT,
+        jnp.where(dom_is_compute,
+                  jnp.where(t["is_mm"], TENSOR, VECTORU),
+                  MEMORY))
+    # pure memcpy ops always attribute to MEMORY
+    dom_class = jnp.where(t["is_mem"], MEMORY, dom_class)
+    t_op = t["t_op"]
+    stall = jnp.stack(
+        [jnp.where(dom_class == c, t_op, 0.0).sum(axis=1) for c in range(4)],
+        axis=1)
+    return dom_class, stall
+
+
 class RooflineModel:
     """Evaluates PPA for batches of design-index vectors against a Workload.
 
@@ -188,43 +225,43 @@ class RooflineModel:
             "t_comm": t_comm, "count": count, "is_mm": is_mm, "is_mem": is_mem,
         }
 
+    def _workload_batch(self, hwb: Dict[str, jnp.ndarray],
+                        detail: str = "stalls") -> Dict[str, jnp.ndarray]:
+        """Per-workload traced outputs for (B, 1)-broadcast hardware arrays.
+
+        This is the unit the fused :class:`~repro.perfmodel.evaluator`
+        dispatch composes: the space decode and hardware derivation happen
+        ONCE per batch while each workload model contributes its op terms.
+
+        detail: "objectives" -> latency only; "ppa" adds the per-op
+        breakdown; "stalls" adds stall attribution on top of "ppa".
+        """
+        t = self._op_terms(hwb)
+        latency = t["t_op"].sum(axis=1)
+        if detail == "objectives":
+            return {"latency": latency}
+        count = t["count"]
+        out = {
+            "latency": latency,
+            "op_time": t["t_op"],
+            "t_compute": t["t_compute"] * count,
+            "t_memory": t["t_memory"] * count,
+            "t_comm": t["t_comm"] * count,
+        }
+        if detail == "stalls":
+            dom_class, stall = _attribute(t)
+            out["op_class"] = dom_class
+            out["stall"] = stall            # (B, 4) seconds per stall class
+        return out
+
     def _eval_batch(self, idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
         """idx: (B, n_params) int32 -> dict of (B, ...) metrics."""
         vals = self.space.decode(idx)                 # dict of (B,)
         hw = derive_hardware(vals)
-        B = idx.shape[0]
         hwb = {kk: vv[:, None] for kk, vv in hw.items()}
-        t = self._op_terms(hwb)
-        t_op = t["t_op"]
-        t_compute, t_memory, t_comm = t["t_compute"], t["t_memory"], t["t_comm"]
-
-        # stall attribution: each op's time goes to its dominant resource
-        dom_is_comm = (t_comm >= t_compute) & (t_comm >= t_memory)
-        dom_is_compute = (t_compute > t_memory) & ~dom_is_comm
-        dom_class = jnp.where(
-            dom_is_comm, INTERCONNECT,
-            jnp.where(dom_is_compute,
-                      jnp.where(t["is_mm"], TENSOR, VECTORU),
-                      MEMORY))
-        # pure memcpy ops always attribute to MEMORY
-        dom_class = jnp.where(t["is_mem"], MEMORY, dom_class)
-
-        latency = t_op.sum(axis=1)
-        stall = jnp.zeros((B, 4))
-        for c in range(4):
-            stall = stall.at[:, c].set(jnp.where(dom_class == c, t_op, 0.0).sum(axis=1))
-
-        count = t["count"]
-        return {
-            "latency": latency,
-            "area": hw["area_mm2"],
-            "op_time": t_op,
-            "op_class": dom_class,
-            "stall": stall,                 # (B, 4) seconds per stall class
-            "t_compute": t_compute * count,
-            "t_memory": t_memory * count,
-            "t_comm": t_comm * count,
-        }
+        out = self._workload_batch(hwb, "stalls")
+        out["area"] = hw["area_mm2"]
+        return out
 
     def _objectives_batch(self, idx: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Lean traced path: (B, n_params) -> (latency (B,), area (B,)).
@@ -235,28 +272,36 @@ class RooflineModel:
         vals = self.space.decode(idx)
         hw = derive_hardware(vals)
         hwb = {kk: vv[:, None] for kk, vv in hw.items()}
-        t = self._op_terms(hwb)
-        return t["t_op"].sum(axis=1), hw["area_mm2"]
+        t = self._workload_batch(hwb, "objectives")
+        return t["latency"], hw["area_mm2"]
 
     # ------------------------------------------------------------------
+    # Legacy per-model API.  Deprecated in favour of the unified
+    # repro.perfmodel.evaluator.Evaluator contract (one fused dispatch for
+    # all workloads); kept as thin shims for one release.
     def eval_ppa(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
-        idx = np.atleast_2d(np.asarray(idx, dtype=np.int32))
-        b = idx.shape[0]
-        bb = _batch_bucket(b)
-        if bb != b:                       # pad with the last row; slice back
-            idx = np.concatenate([idx, np.repeat(idx[-1:], bb - b, axis=0)])
-        out = self._eval_jit(jnp.asarray(idx))
-        return {kk: np.asarray(vv)[:b] for kk, vv in out.items()}
+        warnings.warn(
+            "RooflineModel.eval_ppa is deprecated; use "
+            "repro.perfmodel.evaluator (ModelEvaluator.evaluate with "
+            "detail='stalls') which fuses all workloads into one dispatch",
+            DeprecationWarning, stacklevel=2)
+        return _bucketed_call(self._eval_jit, idx)
 
     def latency(self, idx: np.ndarray) -> np.ndarray:
-        return self.eval_ppa(idx)["latency"]
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            out = self.eval_ppa(idx)
+        warnings.warn(
+            "RooflineModel.latency is deprecated; use the Evaluator API",
+            DeprecationWarning, stacklevel=2)
+        return out["latency"]
 
     def objectives(self, idx: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """(latency, area) without the per-op breakdown (bucketed + cached)."""
-        idx = np.atleast_2d(np.asarray(idx, dtype=np.int32))
-        b = idx.shape[0]
-        bb = _batch_bucket(b)
-        if bb != b:
-            idx = np.concatenate([idx, np.repeat(idx[-1:], bb - b, axis=0)])
-        lat, area = self._objectives_jit(jnp.asarray(idx))
-        return np.asarray(lat)[:b], np.asarray(area)[:b]
+        warnings.warn(
+            "RooflineModel.objectives is deprecated; use "
+            "repro.perfmodel.evaluator (ModelEvaluator.objectives returns "
+            "all workload latencies + area from one fused dispatch)",
+            DeprecationWarning, stacklevel=2)
+        lat, area = _bucketed_call(self._objectives_jit, idx)
+        return lat, area

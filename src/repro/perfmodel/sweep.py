@@ -23,8 +23,8 @@ Objectives follow the repo convention: ``[ttft, tpot, area]``, all minimized.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -33,36 +33,27 @@ import numpy as np
 
 from repro.core.pareto import ParetoArchive
 from repro.perfmodel.designspace import DesignSpace, SPACE, A100_REFERENCE
+from repro.perfmodel.hardware import derive_hardware
 from repro.perfmodel.roofline import RooflineModel, _workload_fingerprint
 
-_FMT_VERSION = 1
+_FMT_VERSION = 2
 
-_EVALUATOR_CACHE: Dict[str, tuple] = {}
+# stall classes in carry order (matches critical_path.STALL_CLASSES)
+_N_STALL = 4
 
 
 def make_paper_evaluator(tier: str = "roofline"):
     """(ttft_model, tpot_model, evaluator) for the paper's GPT-3 workload.
 
-    The evaluator maps (n, n_params) index batches to (n, 3) objectives
-    ``[ttft, tpot, area]`` through the models' bucketed, jit-cached path.
-    Memoized per tier so every benchmark / test / campaign in a process
-    shares one pair of compiled models.
+    Legacy convenience shim over :func:`repro.perfmodel.evaluator.
+    get_evaluator` — the returned ``evaluator`` is the fused
+    :class:`~repro.perfmodel.evaluator.ModelEvaluator` (callable as
+    ``evaluator(X) -> (n, 3)``), and the model pair is its backing models,
+    so old three-tuple call sites keep the process-wide jit cache.
     """
-    cached = _EVALUATOR_CACHE.get(tier)
-    if cached is not None:
-        return cached
-    from repro.perfmodel.compass import CompassModel
-    from repro.perfmodel.workload import gpt3_layer_prefill, gpt3_layer_decode
-    cls = {"roofline": RooflineModel, "compass": CompassModel}[tier]
-    mt, mp = cls(gpt3_layer_prefill()), cls(gpt3_layer_decode())
-
-    def evaluator(X: np.ndarray) -> np.ndarray:
-        lt, area = mt.objectives(X)
-        lp, _ = mp.objectives(X)
-        return np.stack([lt, lp, area], axis=1)
-
-    _EVALUATOR_CACHE[tier] = (mt, mp, evaluator)
-    return mt, mp, evaluator
+    from repro.perfmodel.evaluator import get_evaluator
+    ev = get_evaluator({"roofline": "proxy", "compass": "target"}[tier])
+    return ev.models["ttft"], ev.models["tpot"], ev
 
 
 # --------------------------------------------------------------------------
@@ -112,10 +103,27 @@ class SweepResult:
     seconds: float
     points_per_sec: float
     archive_truncated: bool       # capacity pruning fired (front then inexact)
+    stall_topk_val: Optional[np.ndarray] = None   # (4, k) best TTFT latency
+    stall_topk_ids: Optional[np.ndarray] = None   # (4, k) per dominant stall
 
     def pareto_idx(self, space: DesignSpace = SPACE) -> np.ndarray:
         """Front design-index vectors (p, n_params)."""
         return space.flat_to_idx(self.pareto_ids)
+
+    def stall_seeds(self, space: DesignSpace = SPACE) -> Dict[str, np.ndarray]:
+        """Per-stall-class seed designs for bottleneck-guided DSE.
+
+        {stall class -> (k', n_params) index vectors}, the best-TTFT designs
+        whose dominant stall is that class (requires ``stall_topk > 0``).
+        """
+        if self.stall_topk_ids is None:
+            raise ValueError("sweep ran without stall_topk; no stall seeds")
+        from repro.perfmodel.critical_path import STALL_CLASSES
+        out = {}
+        for c, name in enumerate(STALL_CLASSES):
+            ids = self.stall_topk_ids[c]
+            out[name] = space.flat_to_idx(ids[ids >= 0])
+        return out
 
 
 class SweepEngine:
@@ -124,8 +132,15 @@ class SweepEngine:
     Parameters
     ----------
     ttft_model, tpot_model:
-        RooflineModel/CompassModel instances for the two latency objectives
+        Either a two-workload :class:`~repro.perfmodel.evaluator.
+        ModelEvaluator` as the single first argument, or a legacy
+        RooflineModel/CompassModel pair for the two latency objectives
         (area comes from the shared area model).
+    stall_topk:
+        When > 0, the chunk step also attributes stalls (TTFT workload) on
+        device and keeps the `stall_topk` lowest-TTFT designs per dominant
+        stall class — sweep-derived seeds for bottleneck analysis
+        (``SweepResult.stall_seeds``).
     chunk_size:
         Designs per device step.  Rounded up to a multiple of the device
         count when sharding.
@@ -150,13 +165,28 @@ class SweepEngine:
         Shard the id range over all local devices (no-op on one device).
     """
 
-    def __init__(self, ttft_model: RooflineModel, tpot_model: RooflineModel,
+    def __init__(self, ttft_model, tpot_model: Optional[RooflineModel] = None,
                  space: DesignSpace = SPACE, *,
                  chunk_size: int = 131_072, topk: int = 16,
                  filter_size: int = 128, local_filter: int = 32,
                  archive_capacity: Optional[int] = 16_384,
                  ref_point: Optional[np.ndarray] = None,
-                 backend: str = "roofline", shard: bool = False):
+                 backend: str = "roofline", shard: bool = False,
+                 stall_topk: int = 0):
+        evaluator = None
+        if tpot_model is None and hasattr(ttft_model, "models"):
+            # unified-API construction: SweepEngine(evaluator)
+            evaluator = ttft_model
+            if len(evaluator.workloads) < 2:
+                raise ValueError("sweep needs a two-workload evaluator "
+                                 "(ttft + tpot)")
+            ttft_model = evaluator.models[evaluator.workloads[0]]
+            tpot_model = evaluator.models[evaluator.workloads[1]]
+            space = evaluator.space
+            if backend == "roofline" and evaluator.backend == "pallas":
+                backend = "pallas"
+        elif tpot_model is None:
+            raise TypeError("pass a ModelEvaluator or a (ttft, tpot) pair")
         if backend not in ("roofline", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         if backend == "pallas":
@@ -168,9 +198,15 @@ class SweepEngine:
                         "kernel ignores — use backend='roofline'")
         self.ttft_model = ttft_model
         self.tpot_model = tpot_model
+        if evaluator is None:
+            from repro.perfmodel.evaluator import ModelEvaluator
+            evaluator = ModelEvaluator({"ttft": ttft_model,
+                                        "tpot": tpot_model})
+        self.evaluator = evaluator
         self.space = space
         self.size = space.size
         self.topk = int(topk)
+        self.stall_topk = int(stall_topk)
         self.filter_size = int(filter_size)
         self.local_filter = int(local_filter)
         self.backend = backend
@@ -178,11 +214,18 @@ class SweepEngine:
 
         self._sharding = None
         ndev = len(jax.devices())
+        # the chunk must divide by the device count when sharding AND by the
+        # ppa_eval kernel's 256-row block on the pallas backend; ids past
+        # `stop` are masked invalid, so padding the chunk is always safe
+        multiple = 1
         if shard and ndev > 1:
             from jax.sharding import NamedSharding, PartitionSpec as P
             mesh = jax.make_mesh((ndev,), ("sweep",))
             self._sharding = NamedSharding(mesh, P("sweep"))
-            chunk_size += (-chunk_size) % ndev
+            multiple = ndev
+        if backend == "pallas":
+            multiple = math.lcm(multiple, 256)
+        chunk_size += (-chunk_size) % multiple
         self.chunk_size = int(chunk_size)
         iota = jnp.arange(self.chunk_size, dtype=jnp.int32)
         self._iota = (jax.device_put(iota, self._sharding)
@@ -198,13 +241,13 @@ class SweepEngine:
 
     # ------------------------------------------------------------------
     def _host_objectives(self, idx: np.ndarray) -> np.ndarray:
-        """Reference evaluation through the models' public bucketed path."""
-        lt, area = self.ttft_model.objectives(idx)
-        lp, _ = self.tpot_model.objectives(idx)
-        return np.stack([lt, lp, area], axis=1)
+        """Reference evaluation through the evaluator's fused public path."""
+        return self.evaluator.objectives(idx)
 
-    def _chunk_objectives(self, idx: jnp.ndarray) -> jnp.ndarray:
-        """(c, n_params) int32 -> (c, 3) objectives, traced."""
+    def _chunk_eval(self, idx: jnp.ndarray):
+        """(c, n_params) int32 -> ((c, 3) objectives, dominant-stall (c,)
+        or None), traced.  Decode + hardware derivation run once per chunk;
+        stall attribution is only computed when stall_topk is enabled."""
         if self.backend == "pallas":
             from repro.kernels.ppa_eval.kernel import ppa_eval_fwd
             from repro.kernels.ppa_eval.ref import op_table
@@ -212,18 +255,30 @@ class SweepEngine:
             dv = jnp.stack([vals[n] for n in self.space.names],
                            axis=1).astype(jnp.float32)
             interpret = jax.default_backend() != "tpu"
+            block_b = min(256, dv.shape[0])
             o1 = ppa_eval_fwd(dv, jnp.asarray(op_table(self.ttft_model.wl),
                                               jnp.float32),
                               tp=float(self.ttft_model.wl.tp),
-                              interpret=interpret)
+                              block_b=block_b, interpret=interpret)
             o2 = ppa_eval_fwd(dv, jnp.asarray(op_table(self.tpot_model.wl),
                                               jnp.float32),
                               tp=float(self.tpot_model.wl.tp),
-                              interpret=interpret)
-            return jnp.stack([o1[:, 0], o2[:, 0], o1[:, 5]], axis=1)
-        lt, area = self.ttft_model._objectives_batch(idx)
-        lp, _ = self.tpot_model._objectives_batch(idx)
-        return jnp.stack([lt, lp, area], axis=1)
+                              block_b=block_b, interpret=interpret)
+            ys = jnp.stack([o1[:, 0], o2[:, 0], o1[:, 5]], axis=1)
+            dom = (jnp.argmax(o1[:, 1:5], axis=1).astype(jnp.int32)
+                   if self.stall_topk else None)
+            return ys, dom
+        vals = self.space.decode(idx)
+        hw = derive_hardware(vals)
+        hwb = {kk: vv[:, None] for kk, vv in hw.items()}
+        detail_t = "stalls" if self.stall_topk else "objectives"
+        out_t = self.ttft_model._workload_batch(hwb, detail_t)
+        out_p = self.tpot_model._workload_batch(hwb, "objectives")
+        ys = jnp.stack([out_t["latency"], out_p["latency"], hw["area_mm2"]],
+                       axis=1)
+        dom = (jnp.argmax(out_t["stall"], axis=1).astype(jnp.int32)
+               if self.stall_topk else None)
+        return ys, dom
 
     def _step_impl(self, carry: Dict[str, jnp.ndarray], start: jnp.ndarray,
                    stop: jnp.ndarray, filt: jnp.ndarray):
@@ -231,7 +286,7 @@ class SweepEngine:
         ids = start + self._iota
         valid = ids < stop
         idx = _unrank(jnp.minimum(ids, self.size - 1), self._cards)
-        ys = self._chunk_objectives(idx)                      # (c, 3)
+        ys, dom = self._chunk_eval(idx)                       # (c, 3), (c,)
         ysm = jnp.where(valid[:, None], ys, jnp.inf)
 
         # ---- reference-superiority count (exact, streaming) ----
@@ -251,6 +306,21 @@ class SweepEngine:
         topk_val = jnp.stack(new_vals)
         topk_id = jnp.stack(new_ids)
 
+        # ---- running top-k per dominant stall class (optional) ----
+        stall_val = stall_id = None
+        if self.stall_topk:
+            lat = ysm[:, 0]                                   # rank by TTFT
+            new_vals, new_ids = [], []
+            for c in range(_N_STALL):                         # static unroll
+                lat_c = jnp.where(dom == c, lat, jnp.inf)
+                vals = jnp.concatenate([carry["stall_topk_val"][c], lat_c])
+                cand = jnp.concatenate([carry["stall_topk_id"][c], ids])
+                neg, sel = jax.lax.top_k(-vals, self.stall_topk)
+                new_vals.append(-neg)
+                new_ids.append(jnp.where(jnp.isfinite(-neg), cand[sel], -1))
+            stall_val = jnp.stack(new_vals)
+            stall_id = jnp.stack(new_ids)
+
         # ---- streaming Pareto reduction ----
         # archive filter (synced from host) + chunk-local killer rows:
         # per-objective minima and smallest log-products dominate most of the
@@ -269,6 +339,9 @@ class SweepEngine:
 
         carry = {"n_super": n_super, "n_eval": n_eval,
                  "topk_val": topk_val, "topk_id": topk_id}
+        if self.stall_topk:
+            carry["stall_topk_val"] = stall_val
+            carry["stall_topk_id"] = stall_id
         return carry, survivor, ys_out, ids
 
     # ------------------------------------------------------------------
@@ -280,6 +353,11 @@ class SweepEngine:
             "topk_val": jnp.full((3, k), jnp.inf, jnp.float32),
             "topk_id": jnp.full((3, k), -1, jnp.int32),
         }
+        if self.stall_topk:
+            carry["stall_topk_val"] = jnp.full(
+                (_N_STALL, self.stall_topk), jnp.inf, jnp.float32)
+            carry["stall_topk_id"] = jnp.full(
+                (_N_STALL, self.stall_topk), -1, jnp.int32)
         return {"next": int(start), "carry": carry,
                 "archive": ParetoArchive(3, capacity=self.archive_capacity)}
 
@@ -341,8 +419,11 @@ class SweepEngine:
             chunk_i += 1
             if progress:
                 done = min(state["next"], stop)
+                # rate counts only ids swept in THIS process (resumed ids
+                # were paid for in a previous one)
+                here = int(carry["n_eval"]) - n_eval_resumed
                 print(f"sweep: {done:,}/{stop:,} ids  front={len(archive)}  "
-                      f"{done / max(time.perf_counter() - t0, 1e-9):,.0f} ids/s",
+                      f"{here / max(time.perf_counter() - t0, 1e-9):,.0f} ids/s",
                       flush=True)
             if (checkpoint_path and checkpoint_every
                     and chunk_i % checkpoint_every == 0):
@@ -365,11 +446,19 @@ class SweepEngine:
             # resumed runs only time the ids swept in *this* process
             points_per_sec=(n_eval - n_eval_resumed) / max(seconds, 1e-9),
             archive_truncated=archive.truncated,
+            stall_topk_val=(np.asarray(carry["stall_topk_val"])
+                            if self.stall_topk else None),
+            stall_topk_ids=(np.asarray(carry["stall_topk_id"])
+                            if self.stall_topk else None),
         )
 
     # ------------------------------------------------------------------
     def _save(self, path: str, state: Dict) -> None:
         archive: ParetoArchive = state["archive"]
+        extra = {}
+        if self.stall_topk:
+            extra["stall_topk_val"] = np.asarray(state["carry"]["stall_topk_val"])
+            extra["stall_topk_id"] = np.asarray(state["carry"]["stall_topk_id"])
         np.savez(
             path,
             version=_FMT_VERSION,
@@ -384,11 +473,16 @@ class SweepEngine:
             archive_seen=archive.n_seen,
             archive_truncated=archive.truncated,
             ref_point=self.ref_point,
+            **extra,
         )
 
     def _load(self, path: str) -> Dict:
         z = np.load(path if str(path).endswith(".npz") else f"{path}.npz",
                     allow_pickle=False)
+        if int(z["version"]) > _FMT_VERSION:
+            raise ValueError(
+                f"checkpoint format v{int(z['version'])} is newer than this "
+                f"build's v{_FMT_VERSION}; refusing to resume")
         if str(z["fingerprint"]) != self.fingerprint():
             raise ValueError(
                 "checkpoint was produced by a different space/workload/"
@@ -410,4 +504,16 @@ class SweepEngine:
             "topk_val": jnp.asarray(z["topk_val"]),
             "topk_id": jnp.asarray(z["topk_id"]),
         }
+        if self.stall_topk:
+            if "stall_topk_val" not in z.files:
+                raise ValueError(
+                    "checkpoint carries no per-stall-class top-k state but "
+                    "this engine was built with stall_topk > 0; refusing to "
+                    "resume")
+            if z["stall_topk_val"].shape[1] != self.stall_topk:
+                raise ValueError(
+                    "checkpoint stall_topk width differs from this engine's; "
+                    "refusing to resume")
+            carry["stall_topk_val"] = jnp.asarray(z["stall_topk_val"])
+            carry["stall_topk_id"] = jnp.asarray(z["stall_topk_id"])
         return {"next": int(z["next"]), "carry": carry, "archive": archive}

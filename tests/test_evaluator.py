@@ -1,0 +1,262 @@
+"""Unified tiered Evaluator API (the PR's redesign invariants).
+
+Covers: the fused multi-workload dispatch is bit-identical to the legacy
+per-model ``eval_ppa``/``objectives`` paths on both fidelity tiers; the
+Pallas kernel backend agrees with the traced roofline backend; one DSE step
+costs exactly one fused dispatch; deprecation shims still work (and warn);
+the oracle tier normalizes PHV against the exhaustive front; and the sweep's
+per-stall-class top-k matches brute force.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.pareto import hypervolume, pareto_front
+from repro.perfmodel import (CompassModel, EvalRequest, ModelEvaluator,
+                             OracleEvaluator, RooflineModel, attribute_stalls,
+                             get_evaluator, make_evaluator,
+                             gpt3_layer_prefill, gpt3_layer_decode)
+from repro.perfmodel.designspace import SPACE, A100_REFERENCE
+from repro.perfmodel.evaluator import as_evaluator, resolve_backend
+from repro.perfmodel.sweep import SweepEngine
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def sample_idx():
+    return SPACE.sample(RNG, 64)
+
+
+@pytest.fixture(scope="module", params=["proxy", "target"])
+def tier_setup(request):
+    cls = {"proxy": RooflineModel, "target": CompassModel}[request.param]
+    mt, mp = cls(gpt3_layer_prefill()), cls(gpt3_layer_decode())
+    ev = ModelEvaluator({"ttft": mt, "tpot": mp}, tier=request.param)
+    return ev, mt, mp
+
+
+# ------------------------------------------------------- fused == legacy
+def test_fused_bit_identical_to_legacy_eval_ppa(tier_setup, sample_idx):
+    """The fused stalls-detail dispatch reproduces both models' eval_ppa
+    outputs EXACTLY (same traced subgraphs, shared decode)."""
+    ev, mt, mp = tier_setup
+    rep = ev.stalls(sample_idx)
+    for name, model in (("ttft", mt), ("tpot", mp)):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            legacy = model.eval_ppa(sample_idx)
+        assert np.array_equal(rep.latency[name], legacy["latency"])
+        assert np.array_equal(rep.stall[name], legacy["stall"])
+        assert np.array_equal(rep.op_time[name], legacy["op_time"])
+        assert np.array_equal(rep.op_class[name], legacy["op_class"])
+        assert np.array_equal(rep.area, legacy["area"])
+
+
+def test_fused_objectives_bit_identical(tier_setup, sample_idx):
+    ev, mt, mp = tier_setup
+    y = ev.objectives(sample_idx)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        lt, area = mt.objectives(sample_idx)
+        lp, _ = mp.objectives(sample_idx)
+    assert np.array_equal(y, np.stack([lt, lp, area], axis=1))
+
+
+def test_detail_levels_and_subsets(tier_setup, sample_idx):
+    ev, _, _ = tier_setup
+    lean = ev.evaluate(EvalRequest(sample_idx, detail="objectives"))
+    assert lean.stall is None and lean.op_time is None
+    assert lean.objectives.shape == (64, 3)
+    ppa = ev.ppa(sample_idx)
+    assert ppa.op_time is not None and ppa.stall is None
+    with pytest.raises(ValueError):
+        ppa.stall_report("ttft")
+    sub = ev.evaluate(EvalRequest(sample_idx[:4], detail="stalls",
+                                  workloads=("tpot",)))
+    assert sub.workloads == ("tpot",)
+    assert sub.stall_report("tpot").latency > 0
+    with pytest.raises(KeyError):
+        ev.evaluate(EvalRequest(sample_idx, workloads=("nope",)))
+    with pytest.raises(ValueError):
+        EvalRequest(sample_idx, detail="everything")
+
+
+def test_stall_report_matches_attribute_stalls(tier_setup):
+    ev, mt, _ = tier_setup
+    idx = SPACE.encode_nearest(A100_REFERENCE)
+    rep = ev.stalls(idx).stall_report("ttft")
+    legacy = attribute_stalls(mt, idx)
+    assert rep.dominant == legacy.dominant
+    assert rep.latency == pytest.approx(legacy.latency, rel=0)
+    assert rep.top_ops == legacy.top_ops
+
+
+# ------------------------------------------------------- backend registry
+def test_pallas_backend_parity(sample_idx):
+    """Kernel-backend objectives agree with the traced roofline backend on a
+    sampled id set (interpret-mode tolerance, cf. tests/test_kernels.py)."""
+    base = get_evaluator("proxy")
+    pal = ModelEvaluator(base.models, backend="pallas")
+    y_ref = base.objectives(sample_idx)
+    y_pal = pal.objectives(sample_idx)
+    np.testing.assert_allclose(y_pal[:, :2], y_ref[:, :2], rtol=1e-4)
+    np.testing.assert_allclose(y_pal[:, 2], y_ref[:, 2], rtol=1e-5)
+
+
+def test_pallas_rejects_compass_models():
+    ct = CompassModel(gpt3_layer_prefill())
+    cp = CompassModel(gpt3_layer_decode())
+    with pytest.raises(ValueError, match="roofline tier"):
+        ModelEvaluator({"ttft": ct, "tpot": cp}, backend="pallas")
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown backend"):
+        ModelEvaluator(get_evaluator("proxy").models, backend="gem5")
+
+
+def test_auto_backend_resolves_to_registered_name():
+    models = get_evaluator("proxy").models
+    name = resolve_backend("auto", models)
+    assert name in ("roofline", "pallas")
+    # compass-tier knobs are never routed to the kernel
+    ct = {"ttft": CompassModel(gpt3_layer_prefill()),
+          "tpot": CompassModel(gpt3_layer_decode())}
+    assert resolve_backend("auto", ct) == "roofline"
+
+
+# ------------------------------------------------------- dispatch counting
+def test_one_fused_dispatch_per_dse_step():
+    """Acceptance criterion: each budgeted DSE step issues exactly ONE fused
+    jitted evaluation dispatch on the target tier."""
+    from repro.core.loop import LuminaDSE
+    target = ModelEvaluator(get_evaluator("target").models, tier="target")
+    proxy = get_evaluator("proxy")
+    d0 = target.dispatches
+    res = LuminaDSE(target, proxy=proxy, seed=0).run(budget=8)
+    assert len(res.samples) == 8
+    # ref eval costs 1 dispatch; step 0 re-reads it from the report cache
+    assert target.dispatches - d0 == 8
+
+
+def test_evaluator_memoized_per_tier():
+    assert get_evaluator("proxy") is get_evaluator("proxy")
+    assert get_evaluator("proxy") is not get_evaluator("target")
+
+
+# ------------------------------------------------------- deprecation shims
+def test_legacy_model_shims_warn_and_match(sample_idx):
+    mt = get_evaluator("proxy").models["ttft"]
+    with pytest.deprecated_call():
+        out = mt.eval_ppa(sample_idx[:8])
+    with pytest.deprecated_call():
+        lat, area = mt.objectives(sample_idx[:8])
+    assert np.array_equal(out["latency"], lat)
+    assert np.array_equal(out["area"], area)
+    with pytest.deprecated_call():
+        assert mt.latency(sample_idx[:8]).shape == (8,)
+
+
+def test_legacy_pair_construction_warns():
+    mt, mp = (get_evaluator("proxy").models[w] for w in ("ttft", "tpot"))
+    with pytest.deprecated_call():
+        ev = as_evaluator(mt, mp)
+    assert ev.workloads == ("ttft", "tpot")
+
+
+def test_make_paper_evaluator_shim():
+    from repro.perfmodel import make_paper_evaluator
+    mt, mp, ev = make_paper_evaluator("roofline")
+    assert ev is get_evaluator("proxy")
+    assert ev.models["ttft"] is mt and ev.models["tpot"] is mp
+    y = ev(SPACE.encode_nearest(A100_REFERENCE)[None, :])   # callable shim
+    assert y.shape == (1, 3)
+
+
+# ------------------------------------------------------- oracle tier
+SUB = 20_000
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    return OracleEvaluator(get_evaluator("proxy"),
+                           sweep_kwargs=dict(chunk_size=8_192),
+                           stop=SUB)
+
+
+def test_oracle_front_matches_brute_force(oracle):
+    ys = oracle.objectives(SPACE.flat_to_idx(np.arange(SUB)))
+    front = pareto_front(ys)
+    got = np.sort(oracle.front(), axis=0)
+    assert np.allclose(got, np.sort(front, axis=0), rtol=1e-6)
+
+
+def test_oracle_normalized_phv_bounds(oracle):
+    # reference point dominated by the sub-front (ids [0, SUB) are a weak
+    # corner of the space, so the A100 point would give zero PHV here)
+    ref = oracle.front().max(axis=0) * 2.0
+    # any sampled sub-front's PHV normalizes into [0, 1]
+    ys = oracle.objectives(SPACE.flat_to_idx(np.arange(0, SUB, 7)))
+    phv = hypervolume(ys, ref)
+    frac = oracle.normalized_phv(phv, ref)
+    assert 0.0 <= frac <= 1.0 + 1e-9
+    assert oracle.normalized_phv(oracle.oracle_phv(ref), ref) == pytest.approx(1.0)
+    # regret of the oracle's own front is ~zero
+    assert np.allclose(oracle.regret(oracle.front()), 0.0, atol=1e-9)
+
+
+# ------------------------------------------------------- sweep stall top-k
+def test_sweep_stall_topk_matches_brute_force():
+    ev = get_evaluator("proxy")
+    eng = SweepEngine(ev, chunk_size=8_192, stall_topk=8)
+    res = eng.run(0, SUB)
+    idx = SPACE.flat_to_idx(np.arange(SUB))
+    rep = ev.evaluate(EvalRequest(idx, detail="stalls"))
+    dom = np.argmax(rep.stall["ttft"], axis=1)
+    lat = rep.latency["ttft"]
+    for c in range(4):
+        lat_c = np.where(dom == c, lat, np.inf)
+        want = np.sort(lat_c)[:8]
+        got = res.stall_topk_val[c]
+        finite = np.isfinite(want)
+        assert np.allclose(got[finite], want[finite], rtol=1e-6), c
+        # claimed ids really have this dominant class and latency
+        for k in np.flatnonzero(np.isfinite(got)):
+            fid = int(res.stall_topk_ids[c][k])
+            assert fid >= 0
+            assert lat[fid] == pytest.approx(got[k], rel=1e-6)
+            assert dom[fid] == c
+    seeds = res.stall_seeds()
+    assert set(seeds) == {"tensor_compute", "vector_compute", "memory_bw",
+                          "interconnect"}
+    for arr in seeds.values():
+        assert arr.ndim == 2 and arr.shape[1] == SPACE.n_params
+
+
+def test_sweep_stall_topk_checkpoint_roundtrip(tmp_path):
+    import os
+    ev = get_evaluator("proxy")
+    eng = SweepEngine(ev, chunk_size=8_192, stall_topk=4)
+    ck = os.path.join(tmp_path, "ck")
+    full = eng.run(0, SUB)
+    eng.run(0, SUB // 2, checkpoint_path=ck)
+    res = eng.run(0, SUB, resume_from=ck)
+    assert np.allclose(res.stall_topk_val, full.stall_topk_val, rtol=1e-7)
+    assert np.array_equal(res.stall_topk_ids, full.stall_topk_ids)
+    # an engine without stall tracking refuses a stall-less checkpoint
+    plain = SweepEngine(ev, chunk_size=8_192)
+    plain.run(0, SUB // 2, checkpoint_path=ck + "2")
+    strict = SweepEngine(ev, chunk_size=8_192, stall_topk=4)
+    with pytest.raises(ValueError, match="stall"):
+        strict.run(0, SUB, resume_from=ck + "2")
+
+
+def test_sweep_engine_from_evaluator_matches_pair():
+    mt, mp = (get_evaluator("proxy").models[w] for w in ("ttft", "tpot"))
+    a = SweepEngine(get_evaluator("proxy"), chunk_size=8_192)
+    b = SweepEngine(mt, mp, chunk_size=8_192)
+    ra, rb = a.run(0, SUB // 2), b.run(0, SUB // 2)
+    assert ra.n_superior == rb.n_superior
+    assert np.array_equal(ra.pareto_ids, rb.pareto_ids)
