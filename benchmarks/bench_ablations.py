@@ -25,7 +25,7 @@ class _NoRefine(RefinementLoop):
     def update(self, sens, tm, sample):
         return ""
 
-    def maybe_reanchor(self, sens, tm, evaluator, step, _legacy_tpot=None):
+    def maybe_reanchor(self, sens, tm, evaluator, step):
         return sens
 
 

@@ -3,24 +3,18 @@ reference and print the Pareto-optimal designs it finds.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.perfmodel import (gpt3_layer_prefill, gpt3_layer_decode,
-                             RooflineModel, CompassModel)
+from repro.perfmodel import get_evaluator
 from repro.perfmodel.designspace import SPACE
 from repro.core.loop import LuminaDSE
 
 
 def main() -> None:
     # the paper's evaluation workload: one GPT-3 175B layer, TP=8,
-    # batch 8, seq 2048 (TTFT) / 1024th output token (TPOT), FP16
-    prefill, decode = gpt3_layer_prefill(), gpt3_layer_decode()
-
-    # high-fidelity tier pays the budget; roofline tier is the free proxy
-    dse = LuminaDSE(
-        CompassModel(prefill), CompassModel(decode),
-        proxy_models=(RooflineModel(prefill), RooflineModel(decode)),
-        seed=0)
+    # batch 8, seq 2048 (TTFT) / 1024th output token (TPOT), FP16.
+    # The high-fidelity target tier pays the budget; the roofline proxy
+    # tier serves QualE/QuanE acquisition for free.
+    dse = LuminaDSE(get_evaluator("target"), proxy=get_evaluator("proxy"),
+                    seed=0)
 
     result = dse.run(budget=20)
 

@@ -8,16 +8,23 @@ Components (paper Figure 2):
   TM     — :mod:`repro.core.memory`   trajectory memory + reflection
   Refine — :mod:`repro.core.refine`   AHK recalibration loop
   Loop   — :mod:`repro.core.loop`     the orchestrated DSE campaign
-plus the DSE Benchmark (:mod:`repro.core.bench`), the LLM backends
+                                      (stepwise :class:`~repro.core.loop.
+                                      Campaign` + closed ``run``)
+plus the multi-campaign orchestration layer (:mod:`repro.core.campaign` —
+sweep-seeded parallel campaigns sharing one budget, one merged archive and
+ONE fused batched dispatch per round, with per-step regret telemetry), the
+DSE Benchmark (:mod:`repro.core.bench`), the LLM backends
 (:mod:`repro.core.llm`), Pareto/PHV metrics (:mod:`repro.core.pareto`) and
 the black-box baselines (:mod:`repro.core.baselines`).
 """
 
-from repro.core.loop import LuminaDSE, DSEResult
+from repro.core.loop import LuminaDSE, DSEResult, Campaign
+from repro.core.campaign import CampaignRunner, CampaignSetResult, StepRecord
 from repro.core.llm import RuleOracle, DegradedOracle, MCQuery
 from repro.core.pareto import (hypervolume, pareto_front, pareto_mask,
                                sample_efficiency, dominates_ref, ParetoArchive)
 
-__all__ = ["LuminaDSE", "DSEResult", "RuleOracle", "DegradedOracle",
+__all__ = ["LuminaDSE", "DSEResult", "Campaign", "CampaignRunner",
+           "CampaignSetResult", "StepRecord", "RuleOracle", "DegradedOracle",
            "MCQuery", "hypervolume", "pareto_front", "pareto_mask",
            "sample_efficiency", "dominates_ref", "ParetoArchive"]

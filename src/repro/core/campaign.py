@@ -1,0 +1,259 @@
+"""Multi-campaign DSE orchestration: sweep-seeded parallel Lumina campaigns.
+
+The paper's headline result hinges on bottleneck-guided starts;
+:class:`CampaignRunner` turns the full-space sweep's per-stall-class seed
+designs (:meth:`~repro.perfmodel.sweep.SweepResult.stall_seeds`) into K
+parallel :class:`~repro.core.loop.Campaign` trajectories — one campaign per
+dominant-stall class that actually occurs in the sweep, plus the A100
+reference start — under ONE shared evaluation budget.
+
+The performance core is the fused round dispatch: every live campaign
+proposes its next candidate, the K candidates are evaluated in ONE batched
+:class:`~repro.perfmodel.evaluator.EvalRequest` via
+:meth:`~repro.core.explore.ExplorationEngine.prefetch`, and each campaign
+then observes its (now cache-resident) result dispatch-free.  K campaigns
+at budget B therefore cost ~B/K + O(1) fused dispatches instead of B.
+
+Every observation is instrumented: the merged archive's per-objective
+regret against the oracle front (:meth:`~repro.perfmodel.evaluator.
+OracleEvaluator.regret`) and its PHV as a fraction of the oracle front's
+PHV are recorded per step and persist as a JSON time series
+(:meth:`CampaignSetResult.save_telemetry`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Dict, List, Mapping, Optional, TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.explore import ExplorationEngine
+from repro.core.llm import LLMBackend
+from repro.core.loop import Campaign, DSEResult, LuminaDSE
+from repro.core.memory import Sample, TrajectoryMemory
+from repro.perfmodel.designspace import DesignSpace, SPACE, A100_REFERENCE
+from repro.perfmodel.evaluator import Evaluator, OracleEvaluator, as_evaluator
+
+if TYPE_CHECKING:                       # avoid perfmodel <-> core import cycle
+    from repro.perfmodel.sweep import SweepResult
+
+REFERENCE_CAMPAIGN = "a100"
+
+TELEMETRY_VERSION = 1
+
+
+@dataclasses.dataclass
+class StepRecord:
+    """One budgeted observation in a multi-campaign run (JSON-serializable)."""
+    eval_i: int                        # global evaluations spent (1-based)
+    round_i: int                       # fused-dispatch round index
+    campaign: str                      # which trajectory observed this design
+    step: int                          # campaign-local step
+    objectives: List[float]            # [ttft, tpot, area] of the design
+    phv: float                         # merged-archive PHV after this step
+    phv_frac: Optional[float] = None   # merged PHV / oracle-front PHV
+    regret: Optional[List[float]] = None  # per-objective regret vs oracle
+
+
+@dataclasses.dataclass
+class CampaignSetResult:
+    per_campaign: Dict[str, DSEResult]
+    samples: List[Sample]              # merged, in observation order
+    phv: float
+    superior_count: int
+    pareto: List[Sample]
+    telemetry: List[StepRecord]
+    dispatches: int                    # fused target-tier dispatches spent
+    rounds: int
+
+    def telemetry_dict(self) -> dict:
+        return {
+            "version": TELEMETRY_VERSION,
+            "campaigns": sorted(self.per_campaign),
+            "rounds": self.rounds,
+            "dispatches": self.dispatches,
+            "records": [dataclasses.asdict(r) for r in self.telemetry],
+        }
+
+    def save_telemetry(self, path: str) -> None:
+        """Persist the per-step regret / PHV-fraction time series as JSON."""
+        with open(path, "w") as f:
+            json.dump(self.telemetry_dict(), f, indent=1)
+
+    def regret_curve(self) -> np.ndarray:
+        """(n_steps, n_obj) per-objective regret after each observation
+        (rows of NaN where no oracle was attached)."""
+        return np.array([r.regret if r.regret is not None
+                         else [np.nan] * len(r.objectives)
+                         for r in self.telemetry])
+
+    def phv_frac_curve(self) -> np.ndarray:
+        return np.array([np.nan if r.phv_frac is None else r.phv_frac
+                         for r in self.telemetry])
+
+
+class CampaignRunner:
+    """Launch K parallel Lumina campaigns against one shared budget.
+
+    Parameters
+    ----------
+    evaluator:
+        The budgeted target-tier :class:`~repro.perfmodel.evaluator.
+        Evaluator` (every campaign's EE dispatches land here, fused).
+    proxy:
+        Free acquisition-tier evaluator (QualE/QuanE); defaults to
+        ``evaluator``.
+    oracle:
+        Optional :class:`~repro.perfmodel.evaluator.OracleEvaluator`; when
+        given, every step is scored with exact per-objective regret and
+        PHV-fraction against the exhaustive front.
+    seeds_per_campaign:
+        How many sweep seeds each stall-class campaign starts from (its
+        step-0 seed list; all are evaluated — they spend budget).
+    """
+
+    def __init__(self, evaluator: Evaluator, *,
+                 proxy: Optional[Evaluator] = None,
+                 oracle: Optional[OracleEvaluator] = None,
+                 llm: Optional[LLMBackend] = None,
+                 space: DesignSpace = SPACE,
+                 ref_point: Optional[np.ndarray] = None,
+                 area_budget: Optional[float] = None,
+                 seed: int = 0,
+                 seeds_per_campaign: int = 1):
+        self.space = space
+        self.evaluator = as_evaluator(evaluator)
+        self.ee = ExplorationEngine(self.evaluator)
+        self.oracle = oracle
+        self.seeds_per_campaign = int(seeds_per_campaign)
+        # one LuminaDSE holds the shared pieces (engine, proxy, imap, ref);
+        # campaigns are stepwise views onto it
+        self.dse = LuminaDSE(self.evaluator, proxy=proxy, llm=llm,
+                             space=space, ref_point=ref_point,
+                             area_budget=area_budget, seed=seed,
+                             engine=self.ee)
+        self.ref_point = self.dse.ref_point
+
+    # ------------------------------------------------------------------
+    def seed_starts(self, seeds: Mapping[str, np.ndarray],
+                    include_reference: bool = True) -> Dict[str, np.ndarray]:
+        """{campaign label -> (k, n_params) step-0 seed list}.
+
+        ``seeds`` is :meth:`SweepResult.stall_seeds` output (or any
+        {label -> seed array} mapping).  Stall classes with NO seed designs
+        (every design in the sweep had some other dominant stall) are
+        skipped, not crashed on.  Within a class, seeds are ranked by their
+        worst objective ratio vs the reference point (minimax), so the
+        campaign starts from the most balanced bottleneck representative.
+        """
+        starts: Dict[str, np.ndarray] = {}
+        claimed: set = set()                 # no design seeds two campaigns
+        if include_reference:
+            ref_idx = self.space.encode_nearest(A100_REFERENCE)
+            starts[REFERENCE_CAMPAIGN] = ref_idx[None, :]
+            claimed.add(tuple(ref_idx))
+        for label, arr in seeds.items():
+            arr = np.asarray(arr, dtype=np.int32)
+            arr = arr.reshape(-1, self.space.n_params) if arr.size else arr
+            if arr.size == 0:
+                continue                      # empty stall class: no campaign
+            order = np.argsort(self._minimax_ratio(arr), kind="stable")
+            take = [row for row in arr[order]
+                    if tuple(row) not in claimed][: self.seeds_per_campaign]
+            if not take:                      # every seed already claimed
+                continue
+            claimed.update(tuple(row) for row in take)
+            starts[label] = np.stack(take)
+        return starts
+
+    def _minimax_ratio(self, idx: np.ndarray) -> np.ndarray:
+        """max_o(objective_o / ref_o) per design — <1 means A100-superior.
+        One fused prefetch scores a whole seed class (cache-shared with the
+        campaigns that will start there)."""
+        self.ee.prefetch(idx)
+        ratios = np.empty(idx.shape[0])
+        for i, row in enumerate(idx):
+            rep_t, rep_p = self.ee.reports(row)
+            y = np.array([rep_t.latency, rep_p.latency, rep_t.area])
+            ratios[i] = float((y / self.ref_point).max())
+        return ratios
+
+    # ------------------------------------------------------------------
+    def run(self, budget: int = 20, *,
+            seeds: Optional[Mapping[str, np.ndarray]] = None,
+            sweep: Optional["SweepResult"] = None,
+            include_reference: bool = True,
+            step_callback: Optional[Callable[[StepRecord, Sample], None]] = None
+            ) -> CampaignSetResult:
+        """Run all campaigns round-robin under one shared `budget`.
+
+        Seeds come from ``seeds`` (a {label -> (k, n_params)} mapping),
+        from ``sweep.stall_seeds()``, or default to the reference start
+        only.  Each round fuses every live campaign's candidate into ONE
+        batched dispatch.
+        """
+        d0 = getattr(self.evaluator, "dispatches", 0)
+        if seeds is None:
+            seeds = sweep.stall_seeds(self.space) if sweep is not None else {}
+        starts = self.seed_starts(seeds, include_reference=include_reference)
+        if not starts:
+            raise ValueError("no campaigns to run: every seed class was "
+                             "empty and include_reference=False")
+
+        shared_visited: set = set()
+        campaigns: Dict[str, Campaign] = {
+            label: self.dse.start(init, visited=shared_visited, label=label)
+            for label, init in starts.items()
+        }
+        merged = TrajectoryMemory(self.ref_point)
+        telemetry: List[StepRecord] = []
+        best = np.full(len(self.ref_point), np.inf)
+        budget_stop = self.ee.evals + int(budget)
+        rounds = 0
+
+        order = list(campaigns)
+        while self.ee.evals < budget_stop:
+            rounds += 1
+            room = budget_stop - self.ee.evals
+            proposals = []
+            for label in order[:room]:
+                camp = campaigns[label]
+                idx, directive = camp.propose()
+                proposals.append((label, camp, idx, directive))
+            # ---- the fused round dispatch: K candidates, ONE EvalRequest
+            self.ee.prefetch(np.stack([p[2] for p in proposals]))
+            for label, camp, idx, directive in proposals:
+                sample = self.ee.evaluate(idx, step=camp.step,
+                                          directive=directive)
+                camp.observe(sample)
+                merged.add(sample)
+                best = np.minimum(best, sample.objectives)
+                record = StepRecord(
+                    eval_i=self.ee.evals, round_i=rounds, campaign=label,
+                    step=camp.step,
+                    objectives=[float(v) for v in sample.objectives],
+                    phv=merged.phv(),
+                )
+                if self.oracle is not None:
+                    record.regret = [float(v)
+                                     for v in self.oracle.regret(best[None, :])]
+                    record.phv_frac = self.oracle.normalized_phv(
+                        record.phv, self.ref_point)
+                telemetry.append(record)
+                if step_callback is not None:
+                    step_callback(record, sample)
+            # round-robin fairness: rotate which campaign is clipped when
+            # the remaining budget no longer covers every live campaign
+            order = order[1:] + order[:1]
+
+        return CampaignSetResult(
+            per_campaign={label: c.result() for label, c in campaigns.items()},
+            samples=list(merged.samples),
+            phv=merged.phv(),
+            superior_count=merged.superior_count(),
+            pareto=merged.pareto(),
+            telemetry=telemetry,
+            dispatches=getattr(self.evaluator, "dispatches", 0) - d0,
+            rounds=rounds,
+        )

@@ -7,13 +7,18 @@ contract, and returns the structured sample for the Trajectory Memory.
 
 One DSE step costs exactly ONE fused jitted dispatch: the evaluator computes
 TTFT, TPOT and stall attribution together, and the resulting
-:class:`~repro.perfmodel.evaluator.PPAReport` is cached per design so
-follow-up ``reports()`` reads (the SE re-reading the current base design)
-are free.
+:class:`~repro.perfmodel.evaluator.PPAReport` is cached per design (bounded
+LRU) so follow-up ``reports()`` reads (the SE re-reading the current base
+design) are free.  :meth:`ExplorationEngine.prefetch` extends the same
+contract to many designs at once: the candidate sets of K parallel campaigns
+are fused into ONE batched dispatch per round, which is what makes
+:class:`~repro.core.campaign.CampaignRunner` cost ~1 dispatch/round instead
+of K.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from collections import OrderedDict
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -22,24 +27,31 @@ from repro.core.strategy import Directive
 from repro.perfmodel.critical_path import StallReport
 from repro.perfmodel.evaluator import EvalRequest, Evaluator, as_evaluator
 
-_CACHE_CAP = 4096        # evaluated-design reports kept per engine
+_CACHE_CAP = 4096        # evaluated-design reports kept per engine (LRU)
+
+ReportPair = Tuple[StallReport, StallReport]
 
 
 class ExplorationEngine:
-    """Wraps an Evaluator as the evaluation backend.
+    """Wraps an :class:`~repro.perfmodel.evaluator.Evaluator` as the
+    evaluation backend of one or many DSE campaigns.
 
-    Construct from an :class:`~repro.perfmodel.evaluator.Evaluator`, or from
-    a legacy ``(ttft_model, tpot_model)`` pair (deprecated shim).
+    ``evals`` counts simulator invocations — the sampling budget shared by
+    every campaign driving this engine.
     """
 
-    def __init__(self, evaluator: Evaluator, tpot_model=None):
-        self.evaluator = as_evaluator(evaluator, tpot_model)
+    def __init__(self, evaluator: Evaluator):
+        self.evaluator = as_evaluator(evaluator)
         if len(self.evaluator.workloads) < 2:
             raise ValueError("the DSE loop needs a two-workload evaluator "
                              "(ttft + tpot)")
         self._wt, self._wp = self.evaluator.workloads[:2]
         self.evals = 0        # simulator invocations (the sampling budget)
-        self._reports: Dict[tuple, Tuple[StallReport, StallReport]] = {}
+        self._reports: "OrderedDict[bytes, ReportPair]" = OrderedDict()
+        # per-objective latency scales for the dominant-stall merge; the DSE
+        # loop sets this to its reference point so TTFT (whole prefill, ms)
+        # and TPOT (per token, us) stalls compare on their own scales
+        self.ref_point: Optional[np.ndarray] = None
 
     # legacy attribute access (a few benches/teardowns poke the models)
     @property
@@ -50,7 +62,16 @@ class ExplorationEngine:
     def tpot_model(self):
         return self.evaluator.models[self._wp]
 
-    def _report_pair(self, idx: np.ndarray) -> Tuple[StallReport, StallReport]:
+    # -- bounded LRU report cache --------------------------------------
+    def _cache_put(self, key: bytes, pair: ReportPair) -> None:
+        # bounded LRU: evict only the coldest entries, never the whole map —
+        # clearing would drop the hot base design and force a re-dispatch on
+        # the SE's very next reports() read
+        while len(self._reports) >= _CACHE_CAP:
+            self._reports.popitem(last=False)
+        self._reports[key] = pair
+
+    def _report_pair(self, idx: np.ndarray) -> ReportPair:
         """Both workloads' critical-path reports from one fused dispatch."""
         idx = np.asarray(idx, dtype=np.int32)
         key = idx.tobytes()
@@ -58,19 +79,49 @@ class ExplorationEngine:
         if pair is None:
             rep = self.evaluator.evaluate(EvalRequest(idx, detail="stalls"))
             pair = (rep.stall_report(self._wt), rep.stall_report(self._wp))
-            if len(self._reports) >= _CACHE_CAP:
-                self._reports.clear()
-            self._reports[key] = pair
+            self._cache_put(key, pair)
+        else:
+            self._reports.move_to_end(key)       # keep the base design hot
         return pair
 
+    def prefetch(self, idx_batch: np.ndarray) -> int:
+        """Evaluate many designs in ONE fused batched dispatch.
+
+        Fills the report cache so the follow-up per-design
+        :meth:`evaluate`/:meth:`reports` calls are dispatch-free — the
+        batched multi-design path behind multi-campaign rounds.  Designs
+        already cached are not re-evaluated.  Returns the number of designs
+        actually dispatched.
+        """
+        batch = np.atleast_2d(np.asarray(idx_batch, dtype=np.int32))
+        fresh_keys: List[bytes] = []
+        fresh_rows: List[np.ndarray] = []
+        seen = set()
+        for row in batch:
+            key = row.tobytes()
+            if key in self._reports or key in seen:
+                continue
+            seen.add(key)
+            fresh_keys.append(key)
+            fresh_rows.append(row)
+        if not fresh_rows:
+            return 0
+        rep = self.evaluator.evaluate(
+            EvalRequest(np.stack(fresh_rows), detail="stalls"))
+        for i, key in enumerate(fresh_keys):
+            self._cache_put(key, (rep.stall_report(self._wt, i),
+                                  rep.stall_report(self._wp, i)))
+        return len(fresh_rows)
+
+    # ------------------------------------------------------------------
     def evaluate(self, idx: np.ndarray, step: int,
                  directive: Optional[Directive] = None) -> Sample:
         idx = np.asarray(idx, dtype=np.int32)
         rep_t, rep_p = self._report_pair(idx)
         self.evals += 1
-        # the design's dominant stall = the larger absolute stall across the
+        # the design's dominant stall = the larger ABSOLUTE stall across the
         # two latency objectives (what the SE will attack next)
-        dom = rep_t if rep_t.latency >= rep_p.latency * 50 else self._merge(rep_t, rep_p)
+        dom = self._merge(rep_t, rep_p)
         return Sample(
             step=step, idx=idx.copy(),
             ttft=rep_t.latency, tpot=rep_p.latency, area=rep_t.area,
@@ -78,10 +129,23 @@ class ExplorationEngine:
             directive=directive.as_dict() if directive else None,
         )
 
-    def reports(self, idx: np.ndarray):
+    def reports(self, idx: np.ndarray) -> ReportPair:
         """Critical-path reports for both latency objectives (cached)."""
         return self._report_pair(idx)
 
-    @staticmethod
-    def _merge(rep_t: StallReport, rep_p: StallReport) -> StallReport:
-        return rep_t if rep_t.dominant_fraction >= rep_p.dominant_fraction else rep_p
+    def _merge(self, rep_t: StallReport, rep_p: StallReport) -> StallReport:
+        """Latency-weighted dominant-stall merge: the report whose dominant
+        stall burns more time — each objective measured on its OWN latency
+        scale (``ref_point`` when the loop provides one) — wins.
+
+        Comparing bare ``dominant_fraction``s (or short-circuiting on a raw
+        latency ratio, as the old ``ttft >= 50 * tpot`` bypass did)
+        misattributes TPOT-bound designs whenever TTFT is merely large;
+        comparing raw seconds would bury the per-token TPOT objective under
+        the whole-prefill TTFT for good — the reference scales make the two
+        commensurable."""
+        st, sp = ((float(self.ref_point[0]), float(self.ref_point[1]))
+                  if self.ref_point is not None else (1.0, 1.0))
+        w_t = rep_t.dominant_fraction * rep_t.latency / st
+        w_p = rep_p.dominant_fraction * rep_p.latency / sp
+        return rep_t if w_t >= w_p else rep_p

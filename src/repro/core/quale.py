@@ -42,19 +42,17 @@ class InfluenceMap:
         return "\n".join(lines)
 
 
-def derive_influence_map(evaluator, tpot_model=None,
+def derive_influence_map(evaluator,
                          space: Optional[DesignSpace] = None,
                          n_probes: int = 8, seed: int = 0,
                          rel_eps: float = 1e-4) -> InfluenceMap:
     """Probe the evaluator at `n_probes` random designs, sweeping each
     parameter over its full choice range, and record which outputs move.
 
-    Accepts an :class:`~repro.perfmodel.evaluator.Evaluator` (preferred) or
-    the legacy ``(ttft_model, tpot_model)`` pair.  One fused stalls-detail
-    dispatch per parameter covers every workload's latency, the per-class
-    stall times AND area — the legacy path issued three model calls.
+    One fused stalls-detail dispatch per parameter covers every workload's
+    latency, the per-class stall times AND area.
     """
-    ev = as_evaluator(evaluator, tpot_model)
+    ev = as_evaluator(evaluator)
     space = space or ev.space
     rng = np.random.default_rng(seed)
     probes = space.sample(rng, n_probes)

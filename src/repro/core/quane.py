@@ -44,23 +44,15 @@ class Sensitivity:
         return "\n".join(lines)
 
 
-def sensitivity_analysis(evaluator, tpot_model=None, idx: Optional[np.ndarray] = None,
+def sensitivity_analysis(evaluator, idx: np.ndarray,
                          space: Optional[DesignSpace] = None) -> Sensitivity:
     """Finite-difference sensitivities around design `idx`.
 
     Uses a central difference where both neighbors exist, one-sided at the
     choice-range boundaries.  ONE fused batched dispatch covers all
-    neighbors across every workload (the legacy path evaluated the batch
-    once per model).
-
-    Accepts ``sensitivity_analysis(evaluator, idx)`` (preferred) or the
-    legacy ``sensitivity_analysis(ttft_model, tpot_model, idx)``.
+    neighbors across every workload.
     """
-    if idx is None and isinstance(tpot_model, (np.ndarray, list, tuple)):
-        idx, tpot_model = tpot_model, None          # new-style call
-    if idx is None:
-        raise TypeError("sensitivity_analysis needs a design index vector")
-    ev = as_evaluator(evaluator, tpot_model)
+    ev = as_evaluator(evaluator)
     space = space or ev.space
     idx = np.asarray(idx, dtype=np.int32)
     rows = [idx]

@@ -47,21 +47,15 @@ class RefinementLoop:
         return note
 
     def maybe_reanchor(self, sens: Sensitivity, tm: TrajectoryMemory,
-                       evaluator, step: int,
-                       _legacy_tpot=None) -> Sensitivity:
+                       evaluator, step: int) -> Sensitivity:
         """Re-anchor the sensitivity reference at the current best design.
 
         `evaluator` is the proxy-tier :class:`~repro.perfmodel.evaluator.
-        Evaluator`; a legacy ``(ttft_model, tpot_model, step)`` call shape
-        is still accepted for one release.
+        Evaluator`.
         """
-        if _legacy_tpot is not None:                 # (sens, tm, mt, mp, step)
-            evaluator, step = (evaluator, step), _legacy_tpot
         if step % self.reanchor_every != 0 or not tm.samples:
             return sens
         best = tm.best()
         if best is None or np.array_equal(best.idx, sens.reference):
             return sens
-        if isinstance(evaluator, tuple):
-            return sensitivity_analysis(evaluator[0], evaluator[1], best.idx)
         return sensitivity_analysis(evaluator, best.idx)

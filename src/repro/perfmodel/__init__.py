@@ -28,9 +28,10 @@ tiered Evaluator API** of :mod:`repro.perfmodel.evaluator`:
 
 The evaluator's traced path is *fused*: one jitted dispatch decodes the
 batch, derives hardware once, and evaluates every workload (TTFT + TPOT +
-stall attribution) — replacing the legacy two-to-four per-model calls.
-``RooflineModel.eval_ppa`` / ``.objectives`` remain as deprecation shims
-for one release.
+stall attribution).  The request is batched end to end — K parallel
+campaigns' candidates ride one dispatch (see
+:class:`~repro.core.campaign.CampaignRunner`).  The pre-PR-2 per-model
+shims (``eval_ppa`` / ``objectives`` / pair signatures) have been removed.
 
 Supporting pieces:
 
@@ -58,7 +59,7 @@ from repro.perfmodel.evaluator import (Evaluator, EvalRequest, PPAReport,
                                        get_evaluator, make_evaluator,
                                        as_evaluator, register_backend,
                                        backend_names, TIERS, DETAILS)
-from repro.perfmodel.sweep import SweepEngine, SweepResult, make_paper_evaluator
+from repro.perfmodel.sweep import SweepEngine, SweepResult
 
 __all__ = [
     "DesignSpace", "A100_REFERENCE", "derive_hardware", "area_mm2",
@@ -67,5 +68,5 @@ __all__ = [
     "Evaluator", "EvalRequest", "PPAReport", "ModelEvaluator",
     "OracleEvaluator", "get_evaluator", "make_evaluator", "as_evaluator",
     "register_backend", "backend_names", "TIERS", "DETAILS",
-    "SweepEngine", "SweepResult", "make_paper_evaluator",
+    "SweepEngine", "SweepResult",
 ]

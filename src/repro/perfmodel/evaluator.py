@@ -25,15 +25,20 @@ some fidelity tier*.  This module is that service boundary:
   :class:`~repro.perfmodel.sweep.SweepEngine` front wrapped as
   :class:`OracleEvaluator`, serving exact regret / PHV normalization.
 
-Legacy call patterns (``model.eval_ppa`` / ``model.objectives`` and the
-``(ttft_model, tpot_model)`` pair threading) keep working through thin
-deprecation shims for one release.
+The request shape is batched end to end: ``EvalRequest.idx`` may carry any
+number of designs — K parallel campaigns' candidates ride ONE fused
+dispatch and :meth:`PPAReport.stall_report` extracts any row's
+critical-path view (the multi-design path behind
+:class:`~repro.core.campaign.CampaignRunner`).
+
+The pre-PR-2 per-model shims (``eval_ppa`` / ``objectives`` / the
+``(ttft_model, tpot_model)`` pair threading) are gone after their
+one-release deprecation window.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Callable, Dict, Mapping, Optional, Protocol, Tuple
 
 import jax
@@ -115,6 +120,18 @@ class PPAReport:
 
     def stall_reports(self, i: int = 0, top: int = 5) -> Dict[str, StallReport]:
         return {w: self.stall_report(w, i, top) for w in self.workloads}
+
+    def row(self, i: int) -> "PPAReport":
+        """Single-design view of batch row `i` — the slicing half of the
+        batched multi-design path (one fused dispatch, per-design reads)."""
+        def sl(d):
+            return {nm: v[i:i + 1] for nm, v in d.items()} if d else None
+        return PPAReport(
+            workloads=self.workloads, detail=self.detail,
+            area=self.area[i:i + 1],
+            latency={nm: self.latency[nm][i:i + 1] for nm in self.workloads},
+            stall=sl(self.stall), op_time=sl(self.op_time),
+            op_class=sl(self.op_class), op_names=self.op_names)
 
 
 class Evaluator(Protocol):
@@ -508,20 +525,17 @@ def evaluator_for_model(model: RooflineModel, name: str = "lat") -> ModelEvaluat
     return ev
 
 
-def as_evaluator(obj, tpot_model=None) -> Evaluator:
-    """Coerce legacy call patterns onto the Evaluator contract.
+def as_evaluator(obj) -> Evaluator:
+    """Coerce onto the Evaluator contract.
 
     - an Evaluator passes through;
-    - a ``(ttft_model, tpot_model)`` pair becomes a two-workload
-      ModelEvaluator (deprecated pattern, kept for one release);
-    - a single model becomes a single-workload evaluator.
+    - a single model becomes a (memoized) single-workload evaluator.
+
+    The pre-PR-2 ``(ttft_model, tpot_model)`` pair signature was removed
+    after its one-release deprecation window; build a two-workload
+    evaluator with ``ModelEvaluator({"ttft": mt, "tpot": mp})`` or use
+    :func:`get_evaluator`.
     """
-    if tpot_model is not None:
-        warnings.warn(
-            "passing a (ttft_model, tpot_model) pair is deprecated; pass an "
-            "Evaluator (see repro.perfmodel.evaluator.get_evaluator)",
-            DeprecationWarning, stacklevel=3)
-        return ModelEvaluator({"ttft": obj, "tpot": tpot_model})
     if hasattr(obj, "evaluate") and hasattr(obj, "workloads"):
         return obj
     if isinstance(obj, RooflineModel):

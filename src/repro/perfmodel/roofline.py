@@ -16,9 +16,7 @@ speedup that lets us run 1000-sample DSE campaigns in CI).
 """
 from __future__ import annotations
 
-import functools
 import hashlib
-import warnings
 from typing import Callable, Dict, Tuple
 
 import jax
@@ -124,8 +122,8 @@ def _bucketed_call(fn: Callable, idx: np.ndarray):
     """Pad an index batch to its power-of-two bucket, call a jitted `fn`, and
     slice every output leaf back to the true batch size.
 
-    The single pad/slice implementation behind ``eval_ppa``, ``objectives``
-    and the fused :class:`~repro.perfmodel.evaluator.ModelEvaluator` path.
+    The single pad/slice implementation behind the fused
+    :class:`~repro.perfmodel.evaluator.ModelEvaluator` dispatch path.
     """
     idx = np.atleast_2d(np.asarray(idx, dtype=np.int32))
     b = idx.shape[0]
@@ -157,11 +155,12 @@ def _attribute(t: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 class RooflineModel:
-    """Evaluates PPA for batches of design-index vectors against a Workload.
+    """Per-workload op-term model: the traced building block every
+    :class:`~repro.perfmodel.evaluator.ModelEvaluator` (and the sweep
+    engine's chunk step) composes via :meth:`_workload_batch`.
 
-    eval_ppa(idx) -> dict with 'latency', 'area', per-stall-class times and
-    per-op times — everything downstream (critical path, DSE, benchmark
-    generation) reads from this one dict.
+    Evaluate through the unified Evaluator contract — a model instance on
+    its own is just the op-term provider for one workload.
     """
 
     # Compass-tier knobs (overridden by CompassModel)
@@ -175,14 +174,6 @@ class RooflineModel:
         a = wl.arrays()
         self._ops = {kk: jnp.asarray(vv) for kk, vv in a.items()}
         self._tp = float(wl.tp)
-        key = (type(self).__qualname__, _space_key(space), self._tp,
-               (self.op_overhead_s, self.nonoverlap, self.mem_efficiency),
-               _workload_fingerprint(wl))
-        cached = _JIT_CACHE.get(key)
-        if cached is None:
-            cached = (jax.jit(self._eval_batch), jax.jit(self._objectives_batch))
-            _JIT_CACHE[key] = cached
-        self._eval_jit, self._objectives_jit = cached
 
     # ------------------------------------------------------------------
     def _op_terms(self, hwb: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
@@ -254,54 +245,7 @@ class RooflineModel:
             out["stall"] = stall            # (B, 4) seconds per stall class
         return out
 
-    def _eval_batch(self, idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
-        """idx: (B, n_params) int32 -> dict of (B, ...) metrics."""
-        vals = self.space.decode(idx)                 # dict of (B,)
-        hw = derive_hardware(vals)
-        hwb = {kk: vv[:, None] for kk, vv in hw.items()}
-        out = self._workload_batch(hwb, "stalls")
-        out["area"] = hw["area_mm2"]
-        return out
-
-    def _objectives_batch(self, idx: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Lean traced path: (B, n_params) -> (latency (B,), area (B,)).
-
-        Skips stall attribution and per-op outputs; this is what the
-        full-space sweep engine inlines per chunk.
-        """
-        vals = self.space.decode(idx)
-        hw = derive_hardware(vals)
-        hwb = {kk: vv[:, None] for kk, vv in hw.items()}
-        t = self._workload_batch(hwb, "objectives")
-        return t["latency"], hw["area_mm2"]
-
-    # ------------------------------------------------------------------
-    # Legacy per-model API.  Deprecated in favour of the unified
-    # repro.perfmodel.evaluator.Evaluator contract (one fused dispatch for
-    # all workloads); kept as thin shims for one release.
-    def eval_ppa(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
-        warnings.warn(
-            "RooflineModel.eval_ppa is deprecated; use "
-            "repro.perfmodel.evaluator (ModelEvaluator.evaluate with "
-            "detail='stalls') which fuses all workloads into one dispatch",
-            DeprecationWarning, stacklevel=2)
-        return _bucketed_call(self._eval_jit, idx)
-
-    def latency(self, idx: np.ndarray) -> np.ndarray:
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            out = self.eval_ppa(idx)
-        warnings.warn(
-            "RooflineModel.latency is deprecated; use the Evaluator API",
-            DeprecationWarning, stacklevel=2)
-        return out["latency"]
-
-    def objectives(self, idx: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """(latency, area) without the per-op breakdown (bucketed + cached)."""
-        warnings.warn(
-            "RooflineModel.objectives is deprecated; use "
-            "repro.perfmodel.evaluator (ModelEvaluator.objectives returns "
-            "all workload latencies + area from one fused dispatch)",
-            DeprecationWarning, stacklevel=2)
-        lat, area = _bucketed_call(self._objectives_jit, idx)
-        return lat, area
+    # The pre-PR-2 per-model shims (eval_ppa / latency / objectives) were
+    # removed after their one-release deprecation window: evaluate through
+    # repro.perfmodel.evaluator (ModelEvaluator fuses every workload into
+    # one dispatch; evaluator_for_model wraps a single model).

@@ -42,20 +42,6 @@ _FMT_VERSION = 2
 _N_STALL = 4
 
 
-def make_paper_evaluator(tier: str = "roofline"):
-    """(ttft_model, tpot_model, evaluator) for the paper's GPT-3 workload.
-
-    Legacy convenience shim over :func:`repro.perfmodel.evaluator.
-    get_evaluator` — the returned ``evaluator`` is the fused
-    :class:`~repro.perfmodel.evaluator.ModelEvaluator` (callable as
-    ``evaluator(X) -> (n, 3)``), and the model pair is its backing models,
-    so old three-tuple call sites keep the process-wide jit cache.
-    """
-    from repro.perfmodel.evaluator import get_evaluator
-    ev = get_evaluator({"roofline": "proxy", "compass": "target"}[tier])
-    return ev.models["ttft"], ev.models["tpot"], ev
-
-
 # --------------------------------------------------------------------------
 # on-device pieces (all traced inside the chunk step)
 # --------------------------------------------------------------------------
@@ -113,8 +99,12 @@ class SweepResult:
     def stall_seeds(self, space: DesignSpace = SPACE) -> Dict[str, np.ndarray]:
         """Per-stall-class seed designs for bottleneck-guided DSE.
 
-        {stall class -> (k', n_params) index vectors}, the best-TTFT designs
-        whose dominant stall is that class (requires ``stall_topk > 0``).
+        {stall class -> (k', n_params) index vectors}, the best designs
+        (under the engine's ``stall_rank`` key) whose dominant stall is that
+        class (requires ``stall_topk > 0``).  A class no swept design was
+        dominated by comes back as an EMPTY (0, n_params) array — seeded
+        campaign runners must skip it, not crash
+        (:meth:`repro.core.campaign.CampaignRunner.seed_starts` does).
         """
         if self.stall_topk_ids is None:
             raise ValueError("sweep ran without stall_topk; no stall seeds")
@@ -138,9 +128,17 @@ class SweepEngine:
         (area comes from the shared area model).
     stall_topk:
         When > 0, the chunk step also attributes stalls (TTFT workload) on
-        device and keeps the `stall_topk` lowest-TTFT designs per dominant
-        stall class — sweep-derived seeds for bottleneck analysis
+        device and keeps the `stall_topk` best designs per dominant stall
+        class — sweep-derived seeds for bottleneck analysis
         (``SweepResult.stall_seeds``).
+    stall_rank:
+        Ranking key for the per-stall-class top-k: ``"ttft"`` (default)
+        keeps the lowest-TTFT designs per class; ``"ref"`` ranks by the
+        minimax objective ratio vs the reference point
+        (``max_o y_o / ref_o`` — < 1 means the design dominates the
+        reference), which is what seeded DSE campaigns want: the most
+        *competitive* representative of each bottleneck regime instead of
+        a latency-minimal max-area corner.
     chunk_size:
         Designs per device step.  Rounded up to a multiple of the device
         count when sharding.
@@ -172,7 +170,7 @@ class SweepEngine:
                  archive_capacity: Optional[int] = 16_384,
                  ref_point: Optional[np.ndarray] = None,
                  backend: str = "roofline", shard: bool = False,
-                 stall_topk: int = 0):
+                 stall_topk: int = 0, stall_rank: str = "ttft"):
         evaluator = None
         if tpot_model is None and hasattr(ttft_model, "models"):
             # unified-API construction: SweepEngine(evaluator)
@@ -207,6 +205,10 @@ class SweepEngine:
         self.size = space.size
         self.topk = int(topk)
         self.stall_topk = int(stall_topk)
+        if stall_rank not in ("ttft", "ref"):
+            raise ValueError(f"stall_rank must be 'ttft' or 'ref', "
+                             f"got {stall_rank!r}")
+        self.stall_rank = stall_rank
         self.filter_size = int(filter_size)
         self.local_filter = int(local_filter)
         self.backend = backend
@@ -309,7 +311,11 @@ class SweepEngine:
         # ---- running top-k per dominant stall class (optional) ----
         stall_val = stall_id = None
         if self.stall_topk:
-            lat = ysm[:, 0]                                   # rank by TTFT
+            if self.stall_rank == "ref":
+                # minimax objective ratio vs the reference (< 1 dominates)
+                lat = (ysm / ref[None, :]).max(axis=1)
+            else:
+                lat = ysm[:, 0]                               # rank by TTFT
             new_vals, new_ids = [], []
             for c in range(_N_STALL):                         # static unroll
                 lat_c = jnp.where(dom == c, lat, jnp.inf)
@@ -374,13 +380,16 @@ class SweepEngine:
 
     def fingerprint(self) -> str:
         """Identity of (space, workloads, knobs) for checkpoint validation."""
-        return "|".join([
+        parts = [
             str(self._cards), self.backend,
             _workload_fingerprint(self.ttft_model.wl),
             _workload_fingerprint(self.tpot_model.wl),
             type(self.ttft_model).__qualname__,
             type(self.tpot_model).__qualname__,
-        ])
+        ]
+        if self.stall_rank != "ttft":   # default omitted: old ckpts stay valid
+            parts.append(f"stall_rank={self.stall_rank}")
+        return "|".join(parts)
 
     # ------------------------------------------------------------------
     def run(self, start: int = 0, stop: Optional[int] = None, *,

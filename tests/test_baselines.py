@@ -4,26 +4,20 @@ import pytest
 
 from repro.core.baselines import METHODS, run_method
 from repro.core.loop import LuminaDSE
-from repro.perfmodel import gpt3_layer_prefill, gpt3_layer_decode, RooflineModel
+from repro.perfmodel import get_evaluator
 from repro.perfmodel.designspace import SPACE, A100_REFERENCE
 
 
 @pytest.fixture(scope="module")
 def setup():
-    mt = RooflineModel(gpt3_layer_prefill())
-    mp = RooflineModel(gpt3_layer_decode())
-
-    def evaluator(X):
-        ot, op = mt.eval_ppa(X), mp.eval_ppa(X)
-        return np.stack([ot["latency"], op["latency"], ot["area"]], axis=1)
-
+    evaluator = get_evaluator("proxy")   # callable: evaluator(X) -> (n, 3)
     ref = evaluator(SPACE.encode_nearest(A100_REFERENCE)[None, :])[0]
-    return mt, mp, evaluator, ref
+    return evaluator, ref
 
 
 @pytest.mark.parametrize("name", sorted(METHODS))
 def test_baseline_runs(name, setup):
-    _, _, evaluator, ref = setup
+    evaluator, ref = setup
     r = run_method(METHODS[name], evaluator, budget=40, ref_point=ref,
                    seed=0, batch=8)
     assert r.X.shape == (40, SPACE.n_params)
@@ -33,7 +27,7 @@ def test_baseline_runs(name, setup):
 
 
 def test_ask_respects_cardinalities(setup):
-    _, _, evaluator, ref = setup
+    evaluator, ref = setup
     for name, cls in METHODS.items():
         opt = cls(space=SPACE, seed=1)
         X = np.atleast_2d(opt.ask(8))
@@ -43,13 +37,13 @@ def test_ask_respects_cardinalities(setup):
 def test_lumina_beats_baselines_at_small_budget(setup):
     """Sample-efficiency headline (paper Fig. 4, scaled down): at a 60-sample
     budget Lumina's sample efficiency exceeds every black-box baseline's."""
-    mt, mp, evaluator, ref = setup
+    evaluator, ref = setup
     effs = {}
     for name, cls in METHODS.items():
         r = run_method(cls, evaluator, budget=60, ref_point=ref, seed=0,
                        batch=4)
         effs[name] = r.sample_efficiency
-    res = LuminaDSE(mt, mp, seed=0).run(budget=60)
+    res = LuminaDSE(evaluator, seed=0).run(budget=60)
     best = max(effs.values())
     assert res.sample_efficiency > best, (res.sample_efficiency, effs)
     assert res.sample_efficiency >= 3 * max(best, 1e-9)

@@ -1,0 +1,247 @@
+"""Multi-campaign orchestration + the exploration-engine bugfix regressions.
+
+Covers: the latency-weighted dominant-stall merge (a TPOT-bound design is
+attributed to the TPOT report's stall class even when TTFT is merely
+large); bounded LRU report-cache eviction keeps the hot base design (the
+one-dispatch-per-step invariant holds across an eviction boundary); empty
+stall-seed classes are skipped, not crashed on; K campaigns at shared
+budget B cost ~B/K fused dispatches; the merged archive's per-step regret
+curve is monotonically non-increasing and its PHV fraction non-decreasing;
+seed lists + step callbacks on the single-campaign loop.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import repro.core.explore as explore_mod
+from repro.core.campaign import CampaignRunner, REFERENCE_CAMPAIGN
+from repro.core.explore import ExplorationEngine
+from repro.core.loop import LuminaDSE
+from repro.perfmodel import (EvalRequest, ModelEvaluator, OracleEvaluator,
+                             get_evaluator)
+from repro.perfmodel.critical_path import StallReport
+from repro.perfmodel.designspace import SPACE, A100_REFERENCE
+from repro.perfmodel.sweep import SweepEngine
+
+RNG = np.random.default_rng(7)
+
+
+def _report(latency, dominant, fraction, area=800.0):
+    stalls = {c: 0.0 for c in
+              ("tensor_compute", "vector_compute", "memory_bw",
+               "interconnect")}
+    stalls[dominant] = fraction * latency
+    return StallReport(stall_seconds=stalls, dominant=dominant,
+                       dominant_fraction=fraction, top_ops=[],
+                       latency=latency, area=area)
+
+
+# ---------------------------------------------------- dominant-stall merge
+def test_merge_is_latency_weighted():
+    """The report whose dominant stall burns more time (on its objective's
+    reference scale) wins — not the one with the higher fraction."""
+    ee = ExplorationEngine(get_evaluator("proxy"))
+    assert ee.ref_point is None                       # bare engine: raw time
+    rep_t = _report(100.0, "memory_bw", 0.4)          # 40s absolute
+    rep_p = _report(30.0, "tensor_compute", 0.9)      # 27s absolute
+    assert ee._merge(rep_t, rep_p) is rep_t
+    rep_p2 = _report(60.0, "tensor_compute", 0.9)     # 54s absolute
+    assert ee._merge(rep_t, rep_p2) is rep_p2
+    # with reference scales, each objective is weighted on its own latency
+    # scale: a relatively-worse TPOT wins although its raw seconds are tiny
+    ee.ref_point = np.array([100.0, 0.01, 800.0])
+    rep_p3 = _report(0.02, "tensor_compute", 0.5)     # 1.0 ref-relative
+    assert ee._merge(rep_t, rep_p3) is rep_p3         # 0.4 ref-relative ttft
+    assert ee._merge(_report(100.0, "memory_bw", 1.0),
+                     rep_p3) is not rep_p3            # 1.0 >= 1.0 -> ttft
+
+
+def test_lumina_dse_sets_merge_scales():
+    dse = LuminaDSE(ModelEvaluator(get_evaluator("proxy").models))
+    assert np.array_equal(dse.ee.ref_point, dse.ref_point)
+
+
+def test_tpot_bound_design_attributed_to_tpot_stall(monkeypatch):
+    """Regression: a TPOT-bound design (decode stall dominates in absolute
+    time) must NOT be attributed to the TTFT report just because TTFT
+    latency is large — the old `latency >= 50 * tpot` bypass did exactly
+    that."""
+    ee = ExplorationEngine(get_evaluator("proxy"))
+    # TTFT is 100x TPOT (the old bypass territory) but its dominant stall
+    # is a sliver; TPOT's dominant stall is bigger in absolute seconds
+    rep_t = _report(1.0, "memory_bw", 0.004)          # 0.004s absolute
+    rep_p = _report(0.01, "interconnect", 0.9)        # 0.009s absolute
+    monkeypatch.setattr(ee, "_report_pair", lambda idx: (rep_t, rep_p))
+    sample = ee.evaluate(SPACE.sample(RNG, 1)[0], step=1)
+    assert sample.dominant_stall == "interconnect"
+
+
+# ---------------------------------------------------- LRU report cache
+def test_report_cache_lru_keeps_hot_base(monkeypatch):
+    """One dispatch per NEW design, even across the cache-eviction
+    boundary: the `reports()` re-read of the hot base design must never
+    re-dispatch (the old cache .clear() evicted it)."""
+    monkeypatch.setattr(explore_mod, "_CACHE_CAP", 4)
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    ee = ExplorationEngine(ev)
+    designs = SPACE.sample(RNG, 12)
+    base = designs[0]
+    d0 = ev.dispatches
+    ee.evaluate(base, step=0)
+    for step, d in enumerate(designs[1:], start=1):
+        ee.reports(base)                 # the SE re-reading the base design
+        ee.evaluate(d, step=step)
+    # 12 unique designs -> exactly 12 dispatches despite capacity 4
+    assert ev.dispatches - d0 == len(designs)
+    assert len(ee._reports) <= 4
+
+
+def test_prefetch_batches_into_one_dispatch():
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    ee = ExplorationEngine(ev)
+    designs = SPACE.sample(RNG, 6)
+    d0 = ev.dispatches
+    assert ee.prefetch(designs) == 6     # one fused dispatch for all six
+    assert ev.dispatches - d0 == 1
+    for i, d in enumerate(designs):      # all cache-resident now
+        ee.evaluate(d, step=i)
+    assert ev.dispatches - d0 == 1
+    assert ee.evals == 6                 # budget accounting still per design
+    assert ee.prefetch(designs) == 0     # fully cached: no dispatch at all
+    assert ev.dispatches - d0 == 1
+
+
+# ---------------------------------------------------- empty seed classes
+def test_stall_seeds_empty_class_returns_empty_array():
+    """A sweep over a subrange where some stall class never dominates must
+    yield an EMPTY (0, n_params) seed array for it — not crash."""
+    eng = SweepEngine(get_evaluator("proxy"), chunk_size=8_192, stall_topk=4)
+    res = eng.run(0, 20_000)
+    seeds = res.stall_seeds()
+    assert set(seeds) == {"tensor_compute", "vector_compute", "memory_bw",
+                          "interconnect"}
+    empty = [k for k, v in seeds.items() if v.shape[0] == 0]
+    assert empty, "expected at least one absent stall class in this subrange"
+    for arr in seeds.values():
+        assert arr.ndim == 2 and arr.shape[1] == SPACE.n_params
+
+
+def test_duplicate_seeds_never_burn_budget():
+    """A stall-class seed equal to the reference start (or to another
+    class's seed) must not be evaluated twice — every budget unit buys a
+    UNIQUE design."""
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    runner = CampaignRunner(ev, proxy=get_evaluator("proxy"), seed=0)
+    ref_idx = SPACE.encode_nearest(A100_REFERENCE)
+    dup = SPACE.sample(RNG, 1)[0]
+    res = runner.run(budget=6, seeds={
+        "memory_bw": ref_idx[None, :],           # duplicates the a100 start
+        "tensor_compute": np.stack([dup, dup]),  # internal duplicate
+        "interconnect": dup[None, :],            # cross-class duplicate
+    })
+    assert len(res.samples) == 6
+    assert len({tuple(s.idx) for s in res.samples}) == 6
+    # the all-duplicate classes never became campaigns
+    assert set(res.per_campaign) == {REFERENCE_CAMPAIGN, "tensor_compute"}
+
+
+def test_campaign_runner_skips_empty_seed_classes():
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    runner = CampaignRunner(ev, proxy=get_evaluator("proxy"), seed=0)
+    seeds = {
+        "memory_bw": SPACE.sample(RNG, 2),
+        "interconnect": np.zeros((0, SPACE.n_params), dtype=np.int32),
+        "vector_compute": np.zeros((0,), dtype=np.int32),  # degenerate shape
+    }
+    res = runner.run(budget=8, seeds=seeds)
+    assert set(res.per_campaign) == {REFERENCE_CAMPAIGN, "memory_bw"}
+    assert len(res.samples) == 8
+    with pytest.raises(ValueError, match="no campaigns"):
+        CampaignRunner(ev, proxy=get_evaluator("proxy")).run(
+            budget=4, seeds={"memory_bw": np.zeros((0, SPACE.n_params))},
+            include_reference=False)
+
+
+# ---------------------------------------------------- fused round batching
+@pytest.fixture(scope="module")
+def oracle():
+    return OracleEvaluator(get_evaluator("proxy"),
+                           sweep_kwargs=dict(chunk_size=8_192, stall_topk=8,
+                                             stall_rank="ref"),
+                           stop=60_000)
+
+
+def test_k_campaigns_batch_to_one_dispatch_per_round(oracle):
+    """Acceptance: K seeded campaigns at shared budget B issue ~B/K + O(1)
+    fused dispatches (batched rounds), far below the B an unbatched runner
+    would spend."""
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    runner = CampaignRunner(ev, proxy=get_evaluator("proxy"), seed=0)
+    budget = 20
+    res = runner.run(budget=budget, sweep=oracle.sweep_result())
+    k = len(res.per_campaign)
+    assert k >= 3                         # a100 + >= 2 non-empty stall classes
+    assert len(res.samples) == budget
+    assert res.rounds <= -(-budget // k) + 1
+    # fused dispatches: <= 1 per round + 1 per seed class (minimax scoring),
+    # certainly far below one per evaluation
+    assert res.dispatches <= res.rounds + k + 1
+    assert res.dispatches < budget
+
+
+def test_regret_curve_monotone_and_json_roundtrip(oracle, tmp_path):
+    """The merged archive's per-step regret never increases, its PHV
+    fraction never decreases, and the telemetry series survives the JSON
+    round trip."""
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    runner = CampaignRunner(ev, proxy=get_evaluator("proxy"),
+                            oracle=oracle, seed=0)
+    res = runner.run(budget=15, sweep=oracle.sweep_result())
+    regret = res.regret_curve()
+    phv_frac = res.phv_frac_curve()
+    assert regret.shape == (15, 3) and not np.isnan(regret).any()
+    assert (np.diff(regret, axis=0) <= 1e-12).all()
+    assert (np.diff(phv_frac) >= -1e-12).all()
+    path = tmp_path / "telemetry.json"
+    res.save_telemetry(str(path))
+    data = json.loads(path.read_text())
+    assert len(data["records"]) == 15
+    assert data["records"][0]["eval_i"] == 1
+    got = np.array([r["regret"] for r in data["records"]])
+    assert np.allclose(got, regret)
+    # every record names a live campaign
+    assert set(r["campaign"] for r in data["records"]) \
+        <= set(data["campaigns"])
+
+
+# ---------------------------------------------------- seed lists + callback
+def test_run_accepts_seed_list_and_step_callback():
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    seeds = np.stack([SPACE.encode_nearest(A100_REFERENCE),
+                      SPACE.sample(RNG, 1)[0]])
+    seen = []
+    res = LuminaDSE(ev, proxy=get_evaluator("proxy"), seed=0).run(
+        budget=6, init=seeds,
+        step_callback=lambda campaign, sample: seen.append(sample.step))
+    assert len(res.samples) == 6
+    assert len(seen) == 6
+    # both seeds were evaluated first (step 0), then the trajectory moved on
+    assert [tuple(s.idx) for s in res.samples[:2]] == \
+        [tuple(r) for r in seeds]
+    assert res.samples[0].step == 0 and res.samples[1].step == 0
+    assert res.samples[2].step == 1
+
+
+def test_shared_engine_budget_across_campaigns():
+    """Two LuminaDSE instances sharing one ExplorationEngine draw from one
+    budget pool (the CampaignRunner contract)."""
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    ee = ExplorationEngine(ev)
+    proxy = get_evaluator("proxy")
+    a = LuminaDSE(ev, proxy=proxy, engine=ee, seed=0)
+    b = LuminaDSE(ev, proxy=proxy, engine=ee, seed=1)
+    a.run(budget=5)
+    assert ee.evals == 5
+    b.run(budget=5)                      # its OWN 5, on top of a's
+    assert ee.evals == 10

@@ -1,14 +1,13 @@
 """Unified tiered Evaluator API (the PR's redesign invariants).
 
-Covers: the fused multi-workload dispatch is bit-identical to the legacy
-per-model ``eval_ppa``/``objectives`` paths on both fidelity tiers; the
-Pallas kernel backend agrees with the traced roofline backend; one DSE step
-costs exactly one fused dispatch; deprecation shims still work (and warn);
-the oracle tier normalizes PHV against the exhaustive front; and the sweep's
+Covers: the fused multi-workload dispatch is bit-identical to per-model
+single-workload dispatches on both fidelity tiers; the batched multi-design
+path is bit-identical to N single-design dispatches; the Pallas kernel
+backend agrees with the traced roofline backend; one DSE step costs exactly
+one fused dispatch; the pre-PR-2 deprecation shims are GONE; the oracle
+tier normalizes PHV against the exhaustive front; and the sweep's
 per-stall-class top-k matches brute force.
 """
-import warnings
-
 import numpy as np
 import pytest
 
@@ -18,7 +17,8 @@ from repro.perfmodel import (CompassModel, EvalRequest, ModelEvaluator,
                              get_evaluator, make_evaluator,
                              gpt3_layer_prefill, gpt3_layer_decode)
 from repro.perfmodel.designspace import SPACE, A100_REFERENCE
-from repro.perfmodel.evaluator import as_evaluator, resolve_backend
+from repro.perfmodel.evaluator import (as_evaluator, evaluator_for_model,
+                                       resolve_backend)
 from repro.perfmodel.sweep import SweepEngine
 
 RNG = np.random.default_rng(11)
@@ -37,31 +37,46 @@ def tier_setup(request):
     return ev, mt, mp
 
 
-# ------------------------------------------------------- fused == legacy
-def test_fused_bit_identical_to_legacy_eval_ppa(tier_setup, sample_idx):
-    """The fused stalls-detail dispatch reproduces both models' eval_ppa
-    outputs EXACTLY (same traced subgraphs, shared decode)."""
+# ------------------------------------------------- fused == single-workload
+def test_fused_bit_identical_to_single_workload(tier_setup, sample_idx):
+    """The fused two-workload stalls dispatch reproduces each model's
+    single-workload evaluation EXACTLY (same traced subgraphs, shared
+    decode)."""
     ev, mt, mp = tier_setup
     rep = ev.stalls(sample_idx)
     for name, model in (("ttft", mt), ("tpot", mp)):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            legacy = model.eval_ppa(sample_idx)
-        assert np.array_equal(rep.latency[name], legacy["latency"])
-        assert np.array_equal(rep.stall[name], legacy["stall"])
-        assert np.array_equal(rep.op_time[name], legacy["op_time"])
-        assert np.array_equal(rep.op_class[name], legacy["op_class"])
-        assert np.array_equal(rep.area, legacy["area"])
+        solo = evaluator_for_model(model, name).stalls(sample_idx)
+        assert np.array_equal(rep.latency[name], solo.latency[name])
+        assert np.array_equal(rep.stall[name], solo.stall[name])
+        assert np.array_equal(rep.op_time[name], solo.op_time[name])
+        assert np.array_equal(rep.op_class[name], solo.op_class[name])
+        assert np.array_equal(rep.area, solo.area)
 
 
-def test_fused_objectives_bit_identical(tier_setup, sample_idx):
-    ev, mt, mp = tier_setup
-    y = ev.objectives(sample_idx)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        lt, area = mt.objectives(sample_idx)
-        lp, _ = mp.objectives(sample_idx)
-    assert np.array_equal(y, np.stack([lt, lp, area], axis=1))
+# ------------------------------------------------- batched == N x single
+def test_batched_multi_design_bit_identical_to_singles(tier_setup):
+    """The batched multi-design EvalRequest path (one fused dispatch for N
+    designs) is bit-identical to N single-design dispatches — the invariant
+    behind CampaignRunner's one-dispatch-per-round batching.  N equals the
+    smallest bucket size so the padded single-design calls compile to the
+    same executable shape."""
+    ev, _, _ = tier_setup
+    idx = SPACE.sample(np.random.default_rng(5), 8)
+    batched = ev.evaluate(EvalRequest(idx, detail="stalls"))
+    for i in range(idx.shape[0]):
+        single = ev.evaluate(EvalRequest(idx[i], detail="stalls"))
+        assert np.array_equal(batched.area[i:i + 1], single.area)
+        for w in ev.workloads:
+            assert np.array_equal(batched.latency[w][i:i + 1],
+                                  single.latency[w])
+            assert np.array_equal(batched.stall[w][i:i + 1], single.stall[w])
+            assert np.array_equal(batched.op_time[w][i:i + 1],
+                                  single.op_time[w])
+        # the row() view extracts the same single-design report
+        row = batched.row(i)
+        assert np.array_equal(row.area, single.area)
+        assert row.stall_report("ttft").dominant == \
+            single.stall_report("ttft").dominant
 
 
 def test_detail_levels_and_subsets(tier_setup, sample_idx):
@@ -146,33 +161,27 @@ def test_evaluator_memoized_per_tier():
     assert get_evaluator("proxy") is not get_evaluator("target")
 
 
-# ------------------------------------------------------- deprecation shims
-def test_legacy_model_shims_warn_and_match(sample_idx):
-    mt = get_evaluator("proxy").models["ttft"]
-    with pytest.deprecated_call():
-        out = mt.eval_ppa(sample_idx[:8])
-    with pytest.deprecated_call():
-        lat, area = mt.objectives(sample_idx[:8])
-    assert np.array_equal(out["latency"], lat)
-    assert np.array_equal(out["area"], area)
-    with pytest.deprecated_call():
-        assert mt.latency(sample_idx[:8]).shape == (8,)
-
-
-def test_legacy_pair_construction_warns():
+# ------------------------------------------- deprecation shims are GONE
+def test_legacy_shims_removed():
+    """The one-release deprecation window closed: per-model eval paths and
+    the (ttft, tpot) pair signature no longer exist."""
     mt, mp = (get_evaluator("proxy").models[w] for w in ("ttft", "tpot"))
-    with pytest.deprecated_call():
-        ev = as_evaluator(mt, mp)
-    assert ev.workloads == ("ttft", "tpot")
+    for attr in ("eval_ppa", "objectives", "latency"):
+        assert not hasattr(mt, attr), attr
+    with pytest.raises(TypeError):
+        as_evaluator(mt, mp)
+    with pytest.raises(TypeError):
+        from repro.core.loop import LuminaDSE
+        LuminaDSE(mt, mp)
+    with pytest.raises(ImportError):
+        from repro.perfmodel import make_paper_evaluator  # noqa: F401
 
 
-def test_make_paper_evaluator_shim():
-    from repro.perfmodel import make_paper_evaluator
-    mt, mp, ev = make_paper_evaluator("roofline")
-    assert ev is get_evaluator("proxy")
-    assert ev.models["ttft"] is mt and ev.models["tpot"] is mp
-    y = ev(SPACE.encode_nearest(A100_REFERENCE)[None, :])   # callable shim
-    assert y.shape == (1, 3)
+def test_single_model_coercion():
+    mt = get_evaluator("proxy").models["ttft"]
+    ev = as_evaluator(mt)
+    assert ev.workloads == ("lat",)
+    assert as_evaluator(ev) is ev
 
 
 # ------------------------------------------------------- oracle tier

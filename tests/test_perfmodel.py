@@ -40,18 +40,18 @@ def test_table4_area_ratios():
 
 
 @pytest.fixture(scope="module")
-def compass_pair():
-    return CompassModel(gpt3_layer_prefill()), CompassModel(gpt3_layer_decode())
+def target_ev():
+    from repro.perfmodel import get_evaluator
+    return get_evaluator("target")
 
 
-def test_table4_perf_ratios(compass_pair):
+def test_table4_perf_ratios(target_ev):
     """Normalized TTFT/TPOT of Lumina's designs A/B vs the A100, against the
     paper's reported values (TTFT exact to ~1%, TPOT within ~6%)."""
-    mt, mp = compass_pair
     vals = {}
     for tag, des in (("A100", A100_REFERENCE), ("A", DESIGN_A), ("B", DESIGN_B)):
-        idx = SPACE.encode_nearest(des)
-        vals[tag] = (mt.latency(idx)[0], mp.latency(idx)[0])
+        y = target_ev.objectives(SPACE.encode_nearest(des))[0]
+        vals[tag] = (y[0], y[1])
     ttft_a = vals["A"][0] / vals["A100"][0]
     ttft_b = vals["B"][0] / vals["A100"][0]
     tpot_a = vals["A"][1] / vals["A100"][1]
@@ -60,25 +60,21 @@ def test_table4_perf_ratios(compass_pair):
     assert tpot_a == pytest.approx(0.947, abs=0.06)   # paper: 0.947
 
 
-def test_more_channels_never_slower(compass_pair):
+def test_more_channels_never_slower(target_ev):
     """Monotonicity: adding a memory channel can't increase latency."""
-    mt, _ = compass_pair
     idx = SPACE.encode_nearest(A100_REFERENCE)
     ci = SPACE.names.index("mem_channels")
-    lats = []
-    for c in range(int(SPACE.cardinalities[ci])):
-        j = idx.copy()
-        j[ci] = c
-        lats.append(mt.latency(j)[0])
+    batch = np.repeat(idx[None, :], int(SPACE.cardinalities[ci]), axis=0)
+    batch[:, ci] = np.arange(batch.shape[0])
+    lats = target_ev.objectives(batch)[:, 0]
     assert all(lats[i + 1] <= lats[i] * 1.0001 for i in range(len(lats) - 1))
 
 
 def test_influence_map_structure():
     """§3.2.1's example: vector throughput depends on core/sublane/vector
     width but NOT on the systolic array; interconnect only on links."""
-    mt = RooflineModel(gpt3_layer_prefill())
-    mp = RooflineModel(gpt3_layer_decode())
-    imap = derive_influence_map(mt, mp, n_probes=6, seed=0)
+    from repro.perfmodel import get_evaluator
+    imap = derive_influence_map(get_evaluator("proxy"), n_probes=6, seed=0)
     assert "interconnect" in imap.stall_edges["link_count"]
     assert "interconnect" not in imap.stall_edges["sa_dim"]
     assert "area" in imap.metric_edges["core_count"]
@@ -88,10 +84,9 @@ def test_influence_map_structure():
 
 
 def test_sensitivity_signs():
-    mt = RooflineModel(gpt3_layer_prefill())
-    mp = RooflineModel(gpt3_layer_decode())
+    from repro.perfmodel import get_evaluator
     idx = SPACE.encode_nearest(A100_REFERENCE)
-    sens = sensitivity_analysis(mt, mp, idx)
+    sens = sensitivity_analysis(get_evaluator("proxy"), idx)
     assert sens.delta["mem_channels"]["area"] > 0       # +channel = +area
     assert sens.delta["mem_channels"]["tpot"] < 0       # +channel = faster decode
     assert sens.delta["link_count"]["ttft"] < 0         # +links = faster prefill
@@ -104,6 +99,8 @@ def test_arch_workloads_evaluate(arch):
     cfg = ARCHS[arch]
     for decode in (False, True):
         wl = from_arch(cfg, batch=4, seq=512, decode=decode, kv_len=512)
-        m = RooflineModel(wl)
-        out = m.eval_ppa(SPACE.encode_nearest(A100_REFERENCE))
-        assert np.isfinite(out["latency"]).all() and (out["latency"] > 0).all()
+        from repro.perfmodel.evaluator import evaluator_for_model
+        rep = evaluator_for_model(RooflineModel(wl)).stalls(
+            SPACE.encode_nearest(A100_REFERENCE))
+        lat = rep.latency[rep.workloads[0]]
+        assert np.isfinite(lat).all() and (lat > 0).all()

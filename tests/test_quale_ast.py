@@ -4,15 +4,13 @@ import pytest
 
 from repro.core.quale import derive_influence_map
 from repro.core.quale_ast import derive_influence_map_from_source
-from repro.perfmodel import gpt3_layer_prefill, gpt3_layer_decode, RooflineModel
+from repro.perfmodel import get_evaluator
 from repro.perfmodel.designspace import PARAM_NAMES
 
 
 def test_source_map_covers_probed_map():
     src_map = derive_influence_map_from_source()
-    mt = RooflineModel(gpt3_layer_prefill())
-    mp = RooflineModel(gpt3_layer_decode())
-    probed = derive_influence_map(mt, mp, n_probes=6, seed=0)
+    probed = derive_influence_map(get_evaluator("proxy"), n_probes=6, seed=0)
     for p in PARAM_NAMES:
         # static reachability is an over-approximation of observed influence
         assert probed.metric_edges[p] <= src_map[p], (

@@ -12,7 +12,7 @@ import pytest
 
 from repro.core.pareto import (ParetoArchive, dominates_ref, hypervolume,
                                pareto_front, pareto_mask)
-from repro.perfmodel import make_paper_evaluator
+from repro.perfmodel import get_evaluator
 from repro.perfmodel.designspace import SPACE
 from repro.perfmodel.sweep import SweepEngine, _unrank
 
@@ -38,8 +38,7 @@ def _reference_pareto_mask(y):
 
 @pytest.fixture(scope="module")
 def engine():
-    mt, mp, _ = make_paper_evaluator("roofline")
-    return SweepEngine(mt, mp, chunk_size=16_384)
+    return SweepEngine(get_evaluator("proxy"), chunk_size=16_384)
 
 
 # ------------------------------------------------------------ pareto_mask
@@ -130,7 +129,7 @@ def test_truncated_sweep_matches_brute_force(engine):
     res = engine.run(0, SUBSPACE)
     assert res.n_evaluated == SUBSPACE
 
-    _, _, evaluator = make_paper_evaluator("roofline")
+    evaluator = get_evaluator("proxy")
     ys = evaluator(SPACE.flat_to_idx(np.arange(SUBSPACE)))
 
     # exact superior-to-reference count
@@ -149,13 +148,11 @@ def test_truncated_sweep_matches_brute_force(engine):
             ys[:, o].min(), rel=1e-6)
 
 
-def test_sweep_objectives_match_eval_ppa(engine):
-    """Sweep-path objectives == the models' public eval_ppa path."""
-    mt, mp, _ = make_paper_evaluator("roofline")
+def test_sweep_objectives_match_evaluator(engine):
+    """Sweep-path objectives == the evaluator's public fused path."""
     res = engine.run(0, 4096)
     idx = SPACE.flat_to_idx(res.pareto_ids)
-    ot, op = mt.eval_ppa(idx), mp.eval_ppa(idx)
-    direct = np.stack([ot["latency"], op["latency"], ot["area"]], axis=1)
+    direct = get_evaluator("proxy").objectives(idx)
     assert np.allclose(res.pareto_y, direct, rtol=1e-6)
 
 
@@ -174,29 +171,26 @@ def test_sweep_checkpoint_resume(engine, tmp_path):
 def test_sweep_checkpoint_rejects_mismatched_config(engine, tmp_path):
     ck = os.path.join(tmp_path, "sweep_ck2")
     engine.run(0, 20_000, checkpoint_path=ck)
-    mt, mp, _ = make_paper_evaluator("compass")
-    other = SweepEngine(mt, mp, chunk_size=16_384)
+    other = SweepEngine(get_evaluator("target"), chunk_size=16_384)
     with pytest.raises(ValueError, match="different"):
         other.run(0, 40_000, resume_from=ck)
     # same config but a different reference point: superiority counts could
     # not be continued, so resume must refuse too
-    mt2, mp2, _ = make_paper_evaluator("roofline")
-    shifted = SweepEngine(mt2, mp2, chunk_size=16_384,
+    shifted = SweepEngine(get_evaluator("proxy"), chunk_size=16_384,
                           ref_point=engine.ref_point * 2.0)
     with pytest.raises(ValueError, match="reference point"):
         shifted.run(0, 40_000, resume_from=ck)
 
 
 def test_pallas_backend_rejects_compass_models():
-    mt, mp, _ = make_paper_evaluator("compass")
     with pytest.raises(ValueError, match="pallas"):
-        SweepEngine(mt, mp, backend="pallas")
+        SweepEngine(get_evaluator("target"), backend="pallas")
 
 
 # ----------------------------------------------------- run_method plumbing
 def test_run_method_incremental_phv_curve():
     from repro.core.baselines import METHODS, run_method
-    _, _, evaluator = make_paper_evaluator("roofline")
+    evaluator = get_evaluator("proxy")
     from repro.perfmodel.designspace import A100_REFERENCE
     ref = evaluator(SPACE.encode_nearest(A100_REFERENCE)[None, :])[0]
     r = run_method(METHODS["GA"], evaluator, budget=100, ref_point=ref,

@@ -3,7 +3,8 @@ import numpy as np
 import pytest
 
 from repro.perfmodel import (gpt3_layer_prefill, gpt3_layer_decode,
-                             RooflineModel, CompassModel, attribute_stalls)
+                             RooflineModel, CompassModel, ModelEvaluator,
+                             attribute_stalls)
 from repro.perfmodel.designspace import SPACE, A100_REFERENCE
 from repro.core.loop import LuminaDSE
 from repro.core.llm import RuleOracle, DegradedOracle
@@ -12,15 +13,18 @@ from repro.core.llm import RuleOracle, DegradedOracle
 @pytest.fixture(scope="module")
 def models():
     pre, dec = gpt3_layer_prefill(), gpt3_layer_decode()
-    return (CompassModel(pre), CompassModel(dec),
-            RooflineModel(pre), RooflineModel(dec))
+    target = ModelEvaluator({"ttft": CompassModel(pre),
+                             "tpot": CompassModel(dec)}, tier="target")
+    proxy = ModelEvaluator({"ttft": RooflineModel(pre),
+                            "tpot": RooflineModel(dec)})
+    return target, proxy
 
 
 def test_lumina_20_budget_finds_superior_designs(models):
     """Paper §5.3: under a strict 20-evaluation budget on the LLMCompass
     model, Lumina finds >= 6 designs that dominate the A100 reference."""
-    ct, cp, rt, rp = models
-    dse = LuminaDSE(ct, cp, proxy_models=(rt, rp), seed=0)
+    target, proxy = models
+    dse = LuminaDSE(target, proxy=proxy, seed=0)
     res = dse.run(budget=20)
     assert len(res.samples) == 20        # budget counts every simulator eval
     assert res.superior_count >= 6
@@ -28,8 +32,8 @@ def test_lumina_20_budget_finds_superior_designs(models):
 
 
 def test_lumina_no_duplicate_evaluations(models):
-    ct, cp, rt, rp = models
-    res = LuminaDSE(ct, cp, proxy_models=(rt, rp), seed=1).run(budget=15)
+    target, proxy = models
+    res = LuminaDSE(target, proxy=proxy, seed=1).run(budget=15)
     keys = {tuple(s.idx) for s in res.samples}
     assert len(keys) == len(res.samples)
 
@@ -38,8 +42,8 @@ def test_lumina_discovers_paper_strategy(models):
     """The discovered Pareto designs should reflect Table 4's pattern:
     fewer-or-equal cores than A100 with a larger systolic array, and at
     least as many memory channels."""
-    ct, cp, rt, rp = models
-    res = LuminaDSE(ct, cp, proxy_models=(rt, rp), seed=0).run(budget=20)
+    target, proxy = models
+    res = LuminaDSE(target, proxy=proxy, seed=0).run(budget=20)
     ref = SPACE.decode_np(SPACE.encode_nearest(A100_REFERENCE))
     hits = 0
     for s in res.pareto:
@@ -52,17 +56,17 @@ def test_lumina_discovers_paper_strategy(models):
 def test_refinement_recovers_from_degraded_oracle(models):
     """With an error-injecting oracle, the deny-list/refinement loop should
     still produce superior designs (robustness, paper §3.4)."""
-    ct, cp, rt, rp = models
-    dse = LuminaDSE(ct, cp, proxy_models=(rt, rp),
+    target, proxy = models
+    dse = LuminaDSE(target, proxy=proxy,
                     llm=DegradedOracle(0.3, seed=3), seed=3)
     res = dse.run(budget=20)
     assert res.superior_count >= 2
 
 
 def test_stall_attribution_sums_to_latency(models):
-    ct, _, rt, _ = models
+    target, proxy = models
     idx = SPACE.encode_nearest(A100_REFERENCE)
-    for model in (ct, rt):
+    for model in (target.models["ttft"], proxy.models["ttft"]):
         rep = attribute_stalls(model, idx)
         total = sum(rep.stall_seconds.values())
         assert total == pytest.approx(rep.latency, rel=1e-5)
