@@ -8,13 +8,18 @@ A100-start campaign, at the SAME shared budget, with
 * per-step regret (per objective, vs the exhaustive oracle front) and
   PHV-fraction curves — persisted as a JSON time series;
 * the fused-dispatch counter: K campaigns cost ~1 batched dispatch per
-  round, not K (the acceptance invariant: dispatches << budget).
+  round, not K (the acceptance invariant: dispatches << budget);
+* the scheduling-policy ablation: ``policy="adaptive"`` (budget
+  reallocation toward falling-regret campaigns + early-stop of stalled
+  ones) vs the ``"uniform"`` round-robin, at the same budget;
+* the ``seeds_per_campaign`` axis: do multi-seed step-0 lists beat
+  spending those evaluations on more search steps at equal budget?
 """
 from __future__ import annotations
 
 import os
 import tempfile
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -27,7 +32,8 @@ _SMOKE_STOP = 600_000
 
 
 def run(budget: int = 20, smoke: bool = False,
-        telemetry_dir: Optional[str] = None) -> List[str]:
+        telemetry_dir: Optional[str] = None,
+        seeds_axis: Optional[Tuple[int, ...]] = None) -> List[str]:
     ev = get_evaluator("proxy")
     oracle = OracleEvaluator(ev, stop=_SMOKE_STOP if smoke else None,
                              sweep_kwargs=dict(stall_topk=16,
@@ -74,6 +80,33 @@ def run(budget: int = 20, smoke: bool = False,
                  f"{int(results['seeded'].phv >= results['a100'].phv)}")
     lines.append(f"campaigns,seeded_phv_gain,"
                  f"{results['seeded'].phv / max(results['a100'].phv, 1e-300):.2f}x")
+
+    # ---- scheduling-policy ablation: adaptive vs uniform, same budget ----
+    # (the "seeded" run above IS policy="uniform")
+    adaptive = CampaignRunner(ev, proxy=proxy, oracle=oracle, seed=0,
+                              policy="adaptive").run(budget=budget,
+                                                     sweep=sweep)
+    lines.append(f"campaigns,adaptive_phv_frac_final,"
+                 f"{adaptive.phv_frac_curve()[-1]:.4f}")
+    lines.append(f"campaigns,adaptive_rounds,{adaptive.rounds}")
+    lines.append(f"campaigns,adaptive_early_stopped,"
+                 f"{len(adaptive.early_stopped)}")
+    lines.append(f"campaigns,adaptive_fused_dispatches,{adaptive.dispatches}")
+    lines.append(f"campaigns,adaptive_vs_uniform_phv,"
+                 f"{adaptive.phv / max(results['seeded'].phv, 1e-300):.3f}x")
+
+    # ---- seeds_per_campaign axis: multi-seed step-0 vs more SE steps ----
+    if seeds_axis is None:
+        seeds_axis = (1, 2) if smoke else (1, 2, 3)
+    for spc in seeds_axis:
+        r = CampaignRunner(ev, proxy=proxy, oracle=oracle, seed=0,
+                           seeds_per_campaign=spc).run(budget=budget,
+                                                       sweep=sweep)
+        lines.append(f"campaigns,seeds{spc}_phv_frac_final,"
+                     f"{r.phv_frac_curve()[-1]:.4f}")
+        lines.append(f"campaigns,seeds{spc}_superior,{r.superior_count}")
+        lines.append(f"campaigns,seeds{spc}_campaign_count,"
+                     f"{len(r.per_campaign)}")
     return lines
 
 

@@ -1,0 +1,123 @@
+"""Distributed evaluation service benchmark: sharded workers + coalescing.
+
+Measures the new `repro.distributed` layer end to end:
+
+* `ShardedEvaluator` bit-identity vs the local fused path (both tiers)
+  and its batch throughput relative to one in-process evaluator;
+* the N-worker `SweepEngine.run(workers=N)` id-range sharding — the merged
+  result must reproduce the single-process Pareto front / top-k /
+  stall-seed tables EXACTLY;
+* `EvalService` coalescing: K concurrent clients' requests fuse into ONE
+  dispatch per tick, and a `CampaignRunner` driven through the service
+  keeps the ~1-dispatch-per-round invariant WITHOUT owning the batching.
+
+``smoke=True`` (CI) bounds every range for a sub-minute run.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.campaign import CampaignRunner
+from repro.distributed import EvalService, ShardedEvaluator
+from repro.perfmodel import EvalRequest, ModelEvaluator, get_evaluator
+from repro.perfmodel.designspace import SPACE
+from repro.perfmodel.sweep import SweepEngine
+
+_WORKERS = 2
+
+
+def _identical(a, b) -> bool:
+    if not (np.array_equal(a.area, b.area)
+            and a.workloads == b.workloads):
+        return False
+    for w in a.workloads:
+        if not np.array_equal(a.latency[w], b.latency[w]):
+            return False
+        if a.stall is not None and not np.array_equal(a.stall[w], b.stall[w]):
+            return False
+    return True
+
+
+def run(smoke: bool = False, workers: int = _WORKERS) -> List[str]:
+    lines: List[str] = []
+    rng = np.random.default_rng(0)
+    batch = SPACE.sample(rng, 2_048 if smoke else 16_384)
+
+    # ---- sharded bit-identity + throughput (both tiers) ----
+    for tier in ("proxy", "target"):
+        base = ModelEvaluator(get_evaluator(tier).models, tier=tier)
+        sharded = ShardedEvaluator(ModelEvaluator(get_evaluator(tier).models,
+                                                  tier=tier), workers=workers)
+        req = EvalRequest(batch, detail="stalls")
+        local_rep = base.evaluate(req)
+        shard_rep = sharded.evaluate(req)
+        lines.append(f"distributed,sharded_identical_{tier},"
+                     f"{int(_identical(shard_rep, local_rep))}")
+        base.objectives(batch)                      # warm both paths
+        sharded.objectives(batch)
+        t0 = time.perf_counter()
+        base.objectives(batch)
+        t_local = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sharded.objectives(batch)
+        t_shard = time.perf_counter() - t0
+        lines.append(f"distributed,sharded_speedup_{tier},"
+                     f"{t_local / max(t_shard, 1e-9):.2f}x")
+        sharded.close()
+
+    # ---- N-worker sweep: merged result == single-process result ----
+    stop = 300_000 if smoke else 1_200_000
+    eng = SweepEngine(get_evaluator("proxy"), chunk_size=65_536,
+                      stall_topk=8, stall_rank="ref")
+    single = eng.run(0, stop)
+    t0 = time.perf_counter()
+    multi = eng.run(0, stop, workers=workers)
+    t_multi = time.perf_counter() - t0
+    same_front = (np.array_equal(single.pareto_ids, multi.pareto_ids)
+                  and np.array_equal(single.pareto_y, multi.pareto_y))
+    same_topk = np.array_equal(single.topk_val, multi.topk_val)
+    seeds_s, seeds_m = single.stall_seeds(), multi.stall_seeds()
+    same_seeds = all(np.array_equal(seeds_s[k], seeds_m[k]) for k in seeds_s)
+    lines.append(f"distributed,sweep_workers,{workers}")
+    lines.append(f"distributed,sweep_front_identical,{int(same_front)}")
+    lines.append(f"distributed,sweep_topk_identical,{int(same_topk)}")
+    lines.append(f"distributed,sweep_stall_seeds_identical,{int(same_seeds)}")
+    lines.append(f"distributed,sweep_worker_points_per_sec,"
+                 f"{stop / max(t_multi, 1e-9):.0f}")
+
+    # ---- service coalescing: K clients -> 1 fused dispatch per tick ----
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    svc = EvalService(ev)
+    k_clients = 6
+    d0 = ev.dispatches
+    futs = [svc.submit(EvalRequest(SPACE.sample(rng, 4), detail="stalls"))
+            for _ in range(k_clients)]
+    svc.tick()
+    for f in futs:
+        f.result()
+    lines.append(f"distributed,service_clients,{k_clients}")
+    lines.append(f"distributed,service_dispatches_per_tick,"
+                 f"{ev.dispatches - d0}")
+
+    # ---- campaigns through the service: batching lives in the service ----
+    proxy = ModelEvaluator(get_evaluator("proxy").models)
+    runner = CampaignRunner(svc, proxy=proxy, seed=0)
+    seeds = {"memory_bw": SPACE.sample(rng, 2),
+             "tensor_compute": SPACE.sample(rng, 2)}
+    budget = 12 if smoke else 20
+    res = runner.run(budget=budget, seeds=seeds)
+    k = len(res.per_campaign)
+    lines.append(f"distributed,campaign_count,{k}")
+    lines.append(f"distributed,campaign_rounds,{res.rounds}")
+    lines.append(f"distributed,campaign_fused_dispatches,{res.dispatches}")
+    lines.append(f"distributed,campaign_dispatch_invariant_ok,"
+                 f"{int(res.dispatches <= res.rounds + k + 2)}")
+    lines.append(f"distributed,service_cache_hits,{svc.cache_hits}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run(smoke=True)))

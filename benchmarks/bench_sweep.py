@@ -50,6 +50,26 @@ def run(full: bool = False, smoke: bool = False) -> List[str]:
     lines.append(f"sweep,best_area_mm2,{res.topk_val[2][0]:.5g}")
     for stall, seeds in res.stall_seeds().items():
         lines.append(f"sweep,stall_seeds_{stall},{len(seeds)}")
+
+    # ---- chunk-size autotune: the timed probe picks the chunk for this
+    # host (smoke probes smaller candidates to bound CI compile time) ----
+    cands = (32_768, 65_536) if smoke else (65_536, 131_072, 262_144)
+    auto = SweepEngine(evaluator, chunk_size="auto", chunk_candidates=cands,
+                       stall_topk=8)
+    lines.append(f"sweep,auto_chunk_size,{auto.chunk_size}")
+    auto_res = auto.run(0, 600_000 if smoke else None)
+    lines.append(f"sweep,auto_chunk_points_per_sec,"
+                 f"{auto_res.points_per_sec:.0f}")
+
+    # ---- archive-capacity sensitivity at --full scale: how small can the
+    # bounded host archive get before the exact front starts truncating? ----
+    if full:
+        for cap in (1_024, 4_096, 16_384):
+            e2 = SweepEngine(evaluator, archive_capacity=cap)
+            r2 = e2.run()
+            lines.append(f"sweep,archive_cap_{cap}_front,{len(r2.pareto_ids)}")
+            lines.append(f"sweep,archive_cap_{cap}_truncated,"
+                         f"{int(r2.archive_truncated)}")
     return lines
 
 

@@ -24,7 +24,7 @@ def main() -> None:
                          "space once — a few seconds)")
     ap.add_argument("--only", default=None,
                     help="comma list: table3,fig45,fig6,budget20,table4,"
-                         "sweep,campaigns,kernels,archs,ablation")
+                         "sweep,campaigns,distributed,kernels,archs,ablation")
     args = ap.parse_args()
     if args.full and args.smoke:
         raise SystemExit("--full and --smoke are mutually exclusive")
@@ -59,6 +59,10 @@ def main() -> None:
         from benchmarks import bench_campaigns
         benches.append(("campaigns",
                         lambda: bench_campaigns.run(smoke=args.smoke)))
+    if only is None or "distributed" in only:
+        from benchmarks import bench_distributed
+        benches.append(("distributed",
+                        lambda: bench_distributed.run(smoke=args.smoke)))
     if only is None or "kernels" in only:
         from benchmarks import bench_kernels
         benches.append(("kernels", bench_kernels.run))

@@ -14,6 +14,20 @@ proposes its next candidate, the K candidates are evaluated in ONE batched
 then observes its (now cache-resident) result dispatch-free.  K campaigns
 at budget B therefore cost ~B/K + O(1) fused dispatches instead of B.
 
+The runner accepts an ``Evaluator`` OR an :class:`~repro.distributed.
+service.EvalService`.  With a service, the runner stops owning the
+batching: each campaign submits its own single-design request and one
+``service.tick()`` coalesces the K clients (plus any interleaved
+baseline/benchmark submitters) into the same ONE fused dispatch per round,
+with the service's shared cross-client cache serving the follow-up reads.
+
+Scheduling is pluggable (``policy=``): ``"uniform"`` gives every live
+campaign one evaluation per round (round-robin clipping); ``"adaptive"``
+reallocates the shared budget toward campaigns whose regret is still
+falling — campaigns that have not improved the merged archive (new Pareto
+point or per-objective best) for ``patience`` rounds are early-stopped and
+their remaining budget flows to the campaigns still making progress.
+
 Every observation is instrumented: the merged archive's per-objective
 regret against the oracle front (:meth:`~repro.perfmodel.evaluator.
 OracleEvaluator.regret`) and its PHV as a fraction of the oracle front's
@@ -33,14 +47,17 @@ from repro.core.llm import LLMBackend
 from repro.core.loop import Campaign, DSEResult, LuminaDSE
 from repro.core.memory import Sample, TrajectoryMemory
 from repro.perfmodel.designspace import DesignSpace, SPACE, A100_REFERENCE
-from repro.perfmodel.evaluator import Evaluator, OracleEvaluator, as_evaluator
+from repro.perfmodel.evaluator import (EvalRequest, Evaluator,
+                                       OracleEvaluator, as_evaluator)
 
 if TYPE_CHECKING:                       # avoid perfmodel <-> core import cycle
     from repro.perfmodel.sweep import SweepResult
 
 REFERENCE_CAMPAIGN = "a100"
 
-TELEMETRY_VERSION = 1
+POLICIES = ("uniform", "adaptive")
+
+TELEMETRY_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -66,6 +83,9 @@ class CampaignSetResult:
     telemetry: List[StepRecord]
     dispatches: int                    # fused target-tier dispatches spent
     rounds: int
+    policy: str = "uniform"
+    early_stopped: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # ^ campaign label -> round at which the adaptive policy stopped it
 
     def telemetry_dict(self) -> dict:
         return {
@@ -73,6 +93,8 @@ class CampaignSetResult:
             "campaigns": sorted(self.per_campaign),
             "rounds": self.rounds,
             "dispatches": self.dispatches,
+            "policy": self.policy,
+            "early_stopped": dict(self.early_stopped),
             "records": [dataclasses.asdict(r) for r in self.telemetry],
         }
 
@@ -100,7 +122,11 @@ class CampaignRunner:
     ----------
     evaluator:
         The budgeted target-tier :class:`~repro.perfmodel.evaluator.
-        Evaluator` (every campaign's EE dispatches land here, fused).
+        Evaluator` (every campaign's EE dispatches land here, fused) — or
+        an :class:`~repro.distributed.service.EvalService`, in which case
+        each campaign submits its own request and the SERVICE coalesces
+        the round into one fused dispatch (the runner no longer owns the
+        batching, so interleaved external clients fuse too).
     proxy:
         Free acquisition-tier evaluator (QualE/QuanE); defaults to
         ``evaluator``.
@@ -111,6 +137,16 @@ class CampaignRunner:
     seeds_per_campaign:
         How many sweep seeds each stall-class campaign starts from (its
         step-0 seed list; all are evaluated — they spend budget).
+    policy:
+        ``"uniform"`` — one evaluation per live campaign per round with
+        round-robin clipping.  ``"adaptive"`` — budget flows toward
+        campaigns whose regret is still falling: when the remaining budget
+        cannot cover every campaign, the most-recently-improving ones
+        propose first, and a campaign that has not improved the merged
+        archive for ``patience`` rounds is early-stopped (its share of the
+        budget is reallocated to the survivors).
+    patience:
+        Adaptive-policy stall window, in rounds.
     """
 
     def __init__(self, evaluator: Evaluator, *,
@@ -121,12 +157,25 @@ class CampaignRunner:
                  ref_point: Optional[np.ndarray] = None,
                  area_budget: Optional[float] = None,
                  seed: int = 0,
-                 seeds_per_campaign: int = 1):
+                 seeds_per_campaign: int = 1,
+                 policy: str = "uniform",
+                 patience: int = 3):
+        # deferred import: repro.distributed pulls perfmodel (and through
+        # it this module) back in — binding it lazily breaks the cycle for
+        # processes whose import chain starts at repro.distributed
+        from repro.distributed.service import EvalService
         self.space = space
         self.evaluator = as_evaluator(evaluator)
+        self._service = (self.evaluator
+                         if isinstance(self.evaluator, EvalService) else None)
         self.ee = ExplorationEngine(self.evaluator)
         self.oracle = oracle
         self.seeds_per_campaign = int(seeds_per_campaign)
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, "
+                             f"got {policy!r}")
+        self.policy = policy
+        self.patience = max(1, int(patience))
         # one LuminaDSE holds the shared pieces (engine, proxy, imap, ref);
         # campaigns are stepwise views onto it
         self.dse = LuminaDSE(self.evaluator, proxy=proxy, llm=llm,
@@ -211,23 +260,42 @@ class CampaignRunner:
         best = np.full(len(self.ref_point), np.inf)
         budget_stop = self.ee.evals + int(budget)
         rounds = 0
+        prev_phv = 0.0
+        last_gain: Dict[str, int] = {label: 0 for label in campaigns}
+        early_stopped: Dict[str, int] = {}
 
         order = list(campaigns)
         while self.ee.evals < budget_stop:
             rounds += 1
             room = budget_stop - self.ee.evals
+            if self.policy == "adaptive":
+                # budget flows to falling-regret campaigns: the most
+                # recently improving propose first when `room` clips
+                order.sort(key=lambda lb: -last_gain[lb])
             proposals = []
             for label in order[:room]:
                 camp = campaigns[label]
                 idx, directive = camp.propose()
                 proposals.append((label, camp, idx, directive))
-            # ---- the fused round dispatch: K candidates, ONE EvalRequest
-            self.ee.prefetch(np.stack([p[2] for p in proposals]))
+            # ---- the fused round dispatch: K candidates, ONE dispatch.
+            # With a plain evaluator the RUNNER batches (one prefetched
+            # EvalRequest); with an EvalService each campaign submits its
+            # own request and the SERVICE's coalescing tick fuses them.
+            if self._service is not None:
+                futures = [self._service.submit(
+                    EvalRequest(p[2][None, :], detail="stalls"))
+                    for p in proposals]
+                self._service.tick()
+                for fut in futures:
+                    fut.result()
+            else:
+                self.ee.prefetch(np.stack([p[2] for p in proposals]))
             for label, camp, idx, directive in proposals:
                 sample = self.ee.evaluate(idx, step=camp.step,
                                           directive=directive)
                 camp.observe(sample)
                 merged.add(sample)
+                improved = bool((sample.objectives < best).any())
                 best = np.minimum(best, sample.objectives)
                 record = StepRecord(
                     eval_i=self.ee.evals, round_i=rounds, campaign=label,
@@ -235,6 +303,9 @@ class CampaignRunner:
                     objectives=[float(v) for v in sample.objectives],
                     phv=merged.phv(),
                 )
+                if record.phv > prev_phv or improved:
+                    last_gain[label] = rounds   # its regret is still falling
+                prev_phv = record.phv
                 if self.oracle is not None:
                     record.regret = [float(v)
                                      for v in self.oracle.regret(best[None, :])]
@@ -243,6 +314,15 @@ class CampaignRunner:
                 telemetry.append(record)
                 if step_callback is not None:
                     step_callback(record, sample)
+            if self.policy == "adaptive":
+                # early-stop campaigns whose archive contribution stalled
+                # for `patience` rounds; their budget share flows onward
+                for label in [lb for lb in order
+                              if rounds - last_gain[lb] >= self.patience]:
+                    if len(order) == 1:
+                        break                   # always keep one campaign
+                    order.remove(label)
+                    early_stopped[label] = rounds
             # round-robin fairness: rotate which campaign is clipped when
             # the remaining budget no longer covers every live campaign
             order = order[1:] + order[:1]
@@ -256,4 +336,6 @@ class CampaignRunner:
             telemetry=telemetry,
             dispatches=getattr(self.evaluator, "dispatches", 0) - d0,
             rounds=rounds,
+            policy=self.policy,
+            early_stopped=early_stopped,
         )

@@ -14,6 +14,14 @@ contract to many designs at once: the candidate sets of K parallel campaigns
 are fused into ONE batched dispatch per round, which is what makes
 :class:`~repro.core.campaign.CampaignRunner` cost ~1 dispatch/round instead
 of K.
+
+:class:`~repro.distributed.service.EvalService` generalizes prefetch one
+level further — from "one engine batches its own candidates" to "any
+concurrent clients coalesce through one queue": an engine whose evaluator
+is a service still issues one logical request per step/prefetch, but the
+service's tick fuses it with every OTHER client's requests and serves
+repeats from a shared cross-client cache, so this per-engine LRU becomes
+the second (local) cache level.
 """
 from __future__ import annotations
 

@@ -7,6 +7,11 @@ instances: the *target* evaluator is the budgeted simulation environment
 QualE probing and QuanE sensitivity for free (§3.2.2: "the QuanE can focus
 on estimating only power and area, which are faster to evaluate").  Budget
 accounting follows the paper: only EE dispatches on the target tier count.
+Either tier may also be an :class:`~repro.distributed.service.EvalService`
+(it implements the Evaluator protocol): the loop's requests then coalesce
+with any other client's through the service's shared cache — and a
+:class:`~repro.distributed.sharded.ShardedEvaluator` fans each request
+across workers, transparently to the loop.
 
 The loop is exposed at two altitudes:
 

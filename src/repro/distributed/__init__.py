@@ -1,0 +1,30 @@
+"""Distributed evaluation service layer.
+
+Two composable pieces turn the single-process evaluator into a service
+that can absorb heavy concurrent DSE traffic:
+
+* :class:`~repro.distributed.sharded.ShardedEvaluator` — fans ONE
+  :class:`~repro.perfmodel.evaluator.EvalRequest`'s design batch across N
+  workers (in-process threads, spawned processes, or per-device pins) and
+  reassembles a single bit-identical
+  :class:`~repro.perfmodel.evaluator.PPAReport`, with per-shard retry and
+  straggler re-dispatch.  ``get_evaluator(..., workers=N)`` wraps the
+  paper evaluators in one.
+* :class:`~repro.distributed.service.EvalService` — an async request
+  queue whose coalescing batcher merges concurrent requests from ANY
+  number of clients (K campaigns, baselines, benches) into one fused
+  dispatch per tick, resolved via futures and a shared cross-client
+  report cache.
+
+The two compose: ``EvalService(ShardedEvaluator(base, workers=N))``
+coalesces across clients and shards across workers.  The multi-worker
+full-space sweep lives with its engine:
+``SweepEngine(...).run(workers=N)``.
+"""
+
+from repro.distributed.service import EvalService
+from repro.distributed.sharded import (MODES, ShardedEvaluator, ShardPayload,
+                                       concat_reports)
+
+__all__ = ["EvalService", "ShardedEvaluator", "ShardPayload",
+           "concat_reports", "MODES"]

@@ -1,0 +1,273 @@
+"""Async evaluation service: request queue + coalescing batcher + futures.
+
+:class:`EvalService` generalizes :meth:`~repro.core.explore.
+ExplorationEngine.prefetch` from "one runner batches its own candidates"
+to "ANY concurrent clients coalesce": K campaigns, interleaved baseline
+sweeps and benchmark probes all :meth:`~EvalService.submit` their
+:class:`~repro.perfmodel.evaluator.EvalRequest`\\ s, and each
+:meth:`~EvalService.tick` drains the queue into ONE fused dispatch on the
+underlying evaluator — deduplicating design rows across clients and
+resolving every request's future from the shared result.
+
+* **Coalescing**: a tick evaluates the union of queued rows once, at the
+  maximum detail level any queued request asked for (``objectives`` <
+  ``ppa`` < ``stalls`` — latencies are bit-identical across levels, so
+  higher detail only adds fields).
+* **Shared cross-client cache**: every evaluated design row is cached
+  (bounded LRU); a request whose rows are all cached at sufficient detail
+  resolves at :meth:`~EvalService.submit` time with NO dispatch, whoever
+  evaluated it first.
+* **Evaluator protocol**: the service itself implements ``evaluate`` /
+  ``objectives`` / ``workloads`` — hand it to ``CampaignRunner``,
+  ``LuminaDSE``, a baseline driver or a bench wherever an ``Evaluator``
+  is expected.  A synchronous ``evaluate`` call self-ticks when its rows
+  are not already resolved.
+* **Ticking**: call :meth:`tick` explicitly (deterministic — what the
+  round-driven ``CampaignRunner`` does), or construct with
+  ``autostart=True`` for a background batcher thread that ticks after a
+  short coalescing window.
+
+The underlying evaluator may itself be a :class:`~repro.distributed.
+sharded.ShardedEvaluator`, composing "coalesce across clients" with
+"shard across workers".
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.perfmodel.evaluator import (DETAILS, EvalRequest, PPAReport,
+                                       as_evaluator)
+
+_DETAIL_LEVEL = {name: i for i, name in enumerate(DETAILS)}
+
+
+@dataclass
+class _Pending:
+    idx: np.ndarray                      # (n, n_params) int32
+    detail: str
+    names: Tuple[str, ...]
+    future: Future
+
+
+def _assemble(rows: List[PPAReport], names: Tuple[str, ...],
+              detail: str) -> PPAReport:
+    """Stack cached single-row reports into one response, restricted to the
+    request's workloads and demoted to its detail level."""
+    rep = PPAReport(
+        workloads=names, detail=detail,
+        area=np.concatenate([r.area for r in rows]),
+        latency={nm: np.concatenate([r.latency[nm] for r in rows])
+                 for nm in names})
+    if detail in ("ppa", "stalls"):
+        rep.op_time = {nm: np.concatenate([r.op_time[nm] for r in rows])
+                       for nm in names}
+        rep.op_names = {nm: rows[0].op_names[nm] for nm in names}
+    if detail == "stalls":
+        rep.stall = {nm: np.concatenate([r.stall[nm] for r in rows])
+                     for nm in names}
+        rep.op_class = {nm: np.concatenate([r.op_class[nm] for r in rows])
+                        for nm in names}
+    return rep
+
+
+class EvalService:
+    """Coalescing evaluation front-end over one (possibly sharded) evaluator.
+
+    Parameters
+    ----------
+    evaluator:
+        Anything :func:`~repro.perfmodel.evaluator.as_evaluator` accepts —
+        typically a :class:`~repro.perfmodel.evaluator.ModelEvaluator` or a
+        :class:`~repro.distributed.sharded.ShardedEvaluator`.
+    cache_rows:
+        Bound on the shared per-design report cache (LRU beyond it).
+    autostart:
+        Start a background batcher thread that ticks whenever requests sit
+        in the queue longer than ``window_s`` (the coalescing window).
+        Without it, call :meth:`tick` yourself — synchronous ``evaluate``
+        calls also self-tick.
+    """
+
+    def __init__(self, evaluator, *, cache_rows: int = 65_536,
+                 autostart: bool = False, window_s: float = 0.002):
+        self.evaluator = as_evaluator(evaluator)
+        self.space = self.evaluator.space
+        self.tier = self.evaluator.tier
+        self.cache_rows = int(cache_rows)
+        self.window_s = float(window_s)
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._queue: List[_Pending] = []
+        # design-row cache: key -> (detail level, 1-row PPAReport, all names)
+        self._cache: "OrderedDict[bytes, Tuple[int, PPAReport]]" = OrderedDict()
+        self._closed = False
+        # traffic counters
+        self.submits = 0                 # requests received
+        self.cache_hits = 0              # requests resolved straight from cache
+        self.fused_dispatches = 0        # ticks that reached the evaluator
+        self.coalesced_requests = 0      # requests resolved by a fused tick
+        self._batcher: Optional[threading.Thread] = None
+        if autostart:
+            self._batcher = threading.Thread(target=self._batch_loop,
+                                             name="eval-service-batcher",
+                                             daemon=True)
+            self._batcher.start()
+
+    # -- protocol surface ----------------------------------------------
+    @property
+    def workloads(self) -> Tuple[str, ...]:
+        return self.evaluator.workloads
+
+    @property
+    def models(self):
+        return self.evaluator.models
+
+    @property
+    def dispatches(self) -> int:
+        """Fused device dispatches spent by the underlying evaluator."""
+        return getattr(self.evaluator, "dispatches", 0)
+
+    # -- async API ------------------------------------------------------
+    def submit(self, request: EvalRequest) -> Future:
+        """Enqueue one request; the returned future resolves to a PPAReport.
+
+        Requests whose rows are ALL cached at sufficient detail resolve
+        immediately (no queue, no dispatch) — the shared cross-client
+        cache path.
+        """
+        idx = np.atleast_2d(np.asarray(request.idx, dtype=np.int32))
+        names = (self.workloads if request.workloads is None
+                 else tuple(request.workloads))
+        unknown = set(names) - set(self.workloads)
+        if unknown:
+            raise KeyError(f"unknown workloads {sorted(unknown)}; "
+                           f"have {self.workloads}")
+        pend = _Pending(idx, request.detail, names, Future())
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("EvalService is closed")
+            self.submits += 1
+            if self._try_resolve(pend):
+                self.cache_hits += 1
+            else:
+                self._queue.append(pend)
+                self._cond.notify()
+        return pend.future
+
+    def tick(self) -> int:
+        """Drain the queue into ONE fused dispatch; resolve every future.
+
+        Returns the number of design rows actually dispatched (0 when the
+        queue was empty or fully cache-resident).  The fused dispatch runs
+        OUTSIDE the service lock, so concurrent clients keep submitting
+        (their requests form the next tick's batch); an evaluator failure
+        lands on the drained futures as an exception instead of orphaning
+        them, so blocked ``result()`` callers — and the autostart batcher —
+        always make progress.
+        """
+        with self._lock:
+            pending, self._queue = self._queue, []
+            if not pending:
+                return 0
+            level = max(_DETAIL_LEVEL[p.detail] for p in pending)
+            detail = DETAILS[level]
+            fresh_rows: List[np.ndarray] = []
+            fresh_keys: List[bytes] = []
+            seen: set = set()
+            for p in pending:
+                for row in p.idx:
+                    key = row.tobytes()
+                    if key in seen:
+                        continue
+                    ent = self._cache.get(key)
+                    if ent is None or ent[0] < level:
+                        seen.add(key)
+                        fresh_keys.append(key)
+                        fresh_rows.append(row)
+        rep = None
+        if fresh_rows:
+            try:                               # dispatch without the lock
+                rep = self.evaluator.evaluate(
+                    EvalRequest(np.stack(fresh_rows), detail=detail))
+            except BaseException as exc:
+                for p in pending:
+                    p.future.set_exception(exc)
+                return 0
+        with self._lock:
+            if rep is not None:
+                self.fused_dispatches += 1
+                for i, key in enumerate(fresh_keys):
+                    self._cache[key] = (level, rep.row(i))
+                    self._cache.move_to_end(key)
+            for p in pending:
+                self.coalesced_requests += 1
+                if not self._try_resolve(p):   # unreachable by construction
+                    p.future.set_exception(
+                        RuntimeError("coalesced rows missing from cache"))
+            while len(self._cache) > self.cache_rows:
+                self._cache.popitem(last=False)
+        return len(fresh_rows)
+
+    def _try_resolve(self, pend: _Pending) -> bool:
+        """Resolve a request from cache alone (caller holds the lock)."""
+        level = _DETAIL_LEVEL[pend.detail]
+        rows: List[PPAReport] = []
+        for row in pend.idx:
+            ent = self._cache.get(row.tobytes())
+            if ent is None or ent[0] < level:
+                return False
+            rows.append(ent[1])
+        for row in pend.idx:                   # touch AFTER the full check
+            self._cache.move_to_end(row.tobytes())
+        pend.future.set_result(_assemble(rows, pend.names, pend.detail))
+        return True
+
+    # -- synchronous Evaluator facade ----------------------------------
+    def evaluate(self, request: EvalRequest) -> PPAReport:
+        """Submit + (self-)tick + result: the drop-in Evaluator call."""
+        fut = self.submit(request)
+        if not fut.done() and self._batcher is None:
+            self.tick()
+        return fut.result()
+
+    def objectives(self, idx: np.ndarray) -> np.ndarray:
+        return self.evaluate(EvalRequest(idx, detail="objectives")).objectives
+
+    def ppa(self, idx: np.ndarray) -> PPAReport:
+        return self.evaluate(EvalRequest(idx, detail="ppa"))
+
+    def stalls(self, idx: np.ndarray) -> PPAReport:
+        return self.evaluate(EvalRequest(idx, detail="stalls"))
+
+    def __call__(self, idx: np.ndarray) -> np.ndarray:
+        return self.objectives(idx)
+
+    # -- lifecycle ------------------------------------------------------
+    def _batch_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._closed:
+                    self._cond.wait()
+                if self._closed:
+                    return
+            time.sleep(self.window_s)          # the coalescing window
+            self.tick()
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        if self._batcher is not None:
+            self._batcher.join(timeout=1.0)
+        self.tick()                            # drain any stragglers
+
+    def cache_clear(self) -> None:
+        with self._lock:
+            self._cache.clear()

@@ -1,0 +1,373 @@
+"""Sharded multi-worker evaluation behind the Evaluator protocol.
+
+:class:`ShardedEvaluator` splits one :class:`~repro.perfmodel.evaluator.
+EvalRequest`'s design batch into N contiguous shards, dispatches them to a
+worker pool, and reassembles a single :class:`~repro.perfmodel.evaluator.
+PPAReport` **bit-identical** to the local :class:`~repro.perfmodel.
+evaluator.ModelEvaluator` on the same request (every per-design value is
+row-wise, so shard boundaries never change a float).
+
+Worker pools
+------------
+``inline``   — the ``workers=1`` in-process fallback: evaluate on the
+               caller's thread (zero overhead, always available).
+``thread``   — a thread pool over ONE process-local evaluator; jitted
+               executables are shared, shards overlap host pre/post work.
+               The default for ``workers > 1``.
+``process``  — spawned worker processes, each constructing its own
+               evaluator from a pickled (model class, workload, space)
+               spec — the multi-host template: nothing is shared but the
+               request/report wire format.
+``device``   — thread pool that pins shard k to ``jax.devices()[k % D]``
+               (round-robin), for hosts with more than one accelerator.
+
+Fault handling
+--------------
+A shard that raises is retried up to ``retries`` times on a fresh worker;
+a straggler — a shard still pending after ``straggler_factor`` x the
+median completed-shard time — is speculatively re-dispatched and whichever
+twin finishes first wins (results are identical by construction, so the
+race is benign).  ``worker_dispatches`` / ``retried`` /
+``straggler_redispatches`` count the traffic.
+"""
+from __future__ import annotations
+
+import itertools
+import pickle
+import time
+from concurrent.futures import (FIRST_COMPLETED, Future, ProcessPoolExecutor,
+                                ThreadPoolExecutor, wait)
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.perfmodel.evaluator import (EvalRequest, ModelEvaluator, PPAReport,
+                                       as_evaluator)
+
+MODES = ("auto", "inline", "thread", "process", "device")
+
+
+@dataclass(frozen=True)
+class ShardPayload:
+    """One shard of an EvalRequest on the worker wire format."""
+    idx: np.ndarray
+    detail: str
+    workloads: Optional[Tuple[str, ...]]
+
+
+def _eval_payload(evaluator, payload: ShardPayload) -> PPAReport:
+    return evaluator.evaluate(EvalRequest(payload.idx, payload.detail,
+                                          payload.workloads))
+
+
+def concat_reports(parts: List[PPAReport]) -> PPAReport:
+    """Reassemble shard reports into one batch report (shard order)."""
+    first = parts[0]
+    if len(parts) == 1:
+        return first
+    names = first.workloads
+
+    def cat(field):
+        return {nm: np.concatenate([getattr(p, field)[nm] for p in parts])
+                for nm in names}
+
+    rep = PPAReport(workloads=names, detail=first.detail,
+                    area=np.concatenate([p.area for p in parts]),
+                    latency=cat("latency"))
+    if first.op_time is not None:
+        rep.op_time = cat("op_time")
+        rep.op_names = first.op_names
+    if first.stall is not None:
+        rep.stall = cat("stall")
+        rep.op_class = cat("op_class")
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# worker pools
+# ---------------------------------------------------------------------------
+
+class _InlinePool:
+    """workers=1 fallback: evaluate on the caller's thread."""
+    mode = "inline"
+
+    def __init__(self, base, workers: int = 1):
+        self._base = base
+        self.workers = 1
+
+    def submit(self, payload: ShardPayload) -> Future:
+        fut: Future = Future()
+        try:
+            fut.set_result(_eval_payload(self._base, payload))
+        except BaseException as exc:            # surfaced via fut.result()
+            fut.set_exception(exc)
+        return fut
+
+    def close(self) -> None:
+        pass
+
+
+class _ThreadPool:
+    """Thread workers over one shared process-local evaluator."""
+    mode = "thread"
+
+    def __init__(self, base, workers: int):
+        self._base = base
+        self.workers = int(workers)
+        self._ex = ThreadPoolExecutor(max_workers=self.workers,
+                                      thread_name_prefix="shard-eval")
+
+    def submit(self, payload: ShardPayload) -> Future:
+        return self._ex.submit(_eval_payload, self._base, payload)
+
+    def close(self) -> None:
+        self._ex.shutdown(wait=False, cancel_futures=True)
+
+
+class _DevicePool(_ThreadPool):
+    """Thread workers, shard k pinned to jax device k % D (round-robin)."""
+    mode = "device"
+
+    def __init__(self, base, workers: int):
+        super().__init__(base, workers)
+        import jax
+        devs = jax.devices()
+        self._devices = [devs[i % len(devs)] for i in range(self.workers)]
+        self._rr = itertools.count()
+
+    def submit(self, payload: ShardPayload) -> Future:
+        import jax
+        dev = self._devices[next(self._rr) % self.workers]
+
+        def task():
+            with jax.default_device(dev):
+                return _eval_payload(self._base, payload)
+
+        return self._ex.submit(task)
+
+
+# -- process pool: workers rebuild the evaluator from a pickled spec --------
+
+_WORKER_EVALUATOR: Optional[ModelEvaluator] = None
+
+
+def _worker_spec(base: ModelEvaluator) -> bytes:
+    """(model class, workload, space, tier, backend) — everything a spawned
+    worker needs to reconstruct an equivalent evaluator from scratch."""
+    return pickle.dumps({
+        "models": {nm: (type(m), m.wl) for nm, m in base.models.items()},
+        "space": base.space,
+        "tier": base.tier,
+        "backend": base.backend,
+    })
+
+
+def _process_init(spec_bytes: bytes) -> None:
+    global _WORKER_EVALUATOR
+    spec = pickle.loads(spec_bytes)
+    models = {nm: cls(wl, spec["space"])
+              for nm, (cls, wl) in spec["models"].items()}
+    _WORKER_EVALUATOR = ModelEvaluator(models, tier=spec["tier"],
+                                       backend=spec["backend"])
+
+
+def _process_eval(payload: ShardPayload) -> PPAReport:
+    return _eval_payload(_WORKER_EVALUATOR, payload)
+
+
+class _ProcessPool:
+    """Spawned local processes — the multi-host sharding template."""
+    mode = "process"
+
+    def __init__(self, base, workers: int):
+        if not isinstance(base, ModelEvaluator):
+            raise TypeError("mode='process' needs a ModelEvaluator base "
+                            "(workers rebuild it from its models)")
+        import multiprocessing as mp
+        self.workers = int(workers)
+        self._ex = ProcessPoolExecutor(
+            max_workers=self.workers,
+            mp_context=mp.get_context("spawn"),
+            initializer=_process_init, initargs=(_worker_spec(base),))
+
+    def submit(self, payload: ShardPayload) -> Future:
+        return self._ex.submit(_process_eval, payload)
+
+    def close(self) -> None:
+        self._ex.shutdown(wait=False, cancel_futures=True)
+
+
+_POOLS = {"inline": _InlinePool, "thread": _ThreadPool,
+          "process": _ProcessPool, "device": _DevicePool}
+
+
+# ---------------------------------------------------------------------------
+# the sharded evaluator
+# ---------------------------------------------------------------------------
+
+class ShardedEvaluator:
+    """Fan one EvalRequest across N workers; gather one PPAReport.
+
+    Implements the :class:`~repro.perfmodel.evaluator.Evaluator` protocol,
+    so every existing consumer (``ExplorationEngine``, ``SweepEngine``,
+    baselines, benches) can be handed a sharded evaluator unchanged.
+
+    Parameters
+    ----------
+    base:
+        The local evaluator each worker runs (``mode='process'`` workers
+        rebuild an equivalent one from its models).
+    workers:
+        Shard fan-out.  ``workers=1`` always evaluates in-process.
+    mode:
+        One of ``auto | inline | thread | process | device`` (``auto`` =
+        ``inline`` for one worker, ``thread`` otherwise).
+    min_shard_rows:
+        Never split below this many designs per shard — tiny batches stay
+        on one worker instead of paying fan-out overhead.
+    retries:
+        Re-dispatches allowed per shard after worker failures.
+    straggler_factor / straggler_min_s:
+        A pending shard is speculatively re-dispatched once it has been
+        outstanding longer than ``max(straggler_min_s, factor x median
+        completed-shard time)``.  ``speculate=False`` disables it.
+        Speculation never consumes the failure-retry budget — the twin
+        carries the same attempt number as its original.
+    cold_straggler_s:
+        Speculation deadline for the FIRST wave, before any shard has
+        completed (no median exists yet to scale from) — generous by
+        default so cold-start compiles never trigger spurious twins.
+    """
+
+    def __init__(self, base, *, workers: int = 2, mode: str = "auto",
+                 min_shard_rows: int = 1, retries: int = 2,
+                 straggler_factor: float = 4.0, straggler_min_s: float = 0.05,
+                 cold_straggler_s: float = 60.0, speculate: bool = True):
+        base = as_evaluator(base)
+        if not hasattr(base, "models"):
+            raise TypeError("ShardedEvaluator needs a model-backed evaluator")
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        self.base = base
+        self.space = base.space
+        self.tier = base.tier
+        self.workers = max(1, int(workers))
+        if self.workers == 1:
+            mode = "inline"                    # the in-process fallback
+        elif mode == "auto":
+            mode = "thread"
+        self.mode = mode
+        self._pool = _POOLS[mode](base, self.workers)
+        self.min_shard_rows = max(1, int(min_shard_rows))
+        self.retries = int(retries)
+        self.straggler_factor = float(straggler_factor)
+        self.straggler_min_s = float(straggler_min_s)
+        self.cold_straggler_s = float(cold_straggler_s)
+        self.speculate = bool(speculate)
+        # traffic counters
+        self.dispatches = 0                 # logical fused requests served
+        self.worker_dispatches = 0          # shard tasks sent to workers
+        self.retried = 0                    # shard retries after failures
+        self.straggler_redispatches = 0     # speculative twin dispatches
+
+    # -- identity / protocol surface -----------------------------------
+    @property
+    def workloads(self) -> Tuple[str, ...]:
+        return self.base.workloads
+
+    @property
+    def models(self):
+        return self.base.models
+
+    @property
+    def backend(self):
+        return getattr(self.base, "backend", None)
+
+    # -- public API -----------------------------------------------------
+    def evaluate(self, request: EvalRequest) -> PPAReport:
+        idx = np.atleast_2d(np.asarray(request.idx, dtype=np.int32))
+        n = idx.shape[0]
+        n_shards = min(self.workers, max(1, n // self.min_shard_rows))
+        self.dispatches += 1
+        if self.mode == "inline" or n_shards <= 1:
+            self.worker_dispatches += 1
+            return self.base.evaluate(
+                EvalRequest(idx, request.detail, request.workloads))
+        payloads = [ShardPayload(s, request.detail, request.workloads)
+                    for s in np.array_split(idx, n_shards)]
+        return concat_reports(self._gather(payloads))
+
+    def objectives(self, idx: np.ndarray) -> np.ndarray:
+        return self.evaluate(EvalRequest(idx, detail="objectives")).objectives
+
+    def ppa(self, idx: np.ndarray) -> PPAReport:
+        return self.evaluate(EvalRequest(idx, detail="ppa"))
+
+    def stalls(self, idx: np.ndarray) -> PPAReport:
+        return self.evaluate(EvalRequest(idx, detail="stalls"))
+
+    def __call__(self, idx: np.ndarray) -> np.ndarray:
+        return self.objectives(idx)
+
+    def close(self) -> None:
+        self._pool.close()
+
+    # -- shard dispatch with retry + straggler speculation --------------
+    def _gather(self, payloads: List[ShardPayload]) -> List[PPAReport]:
+        results: List[Optional[PPAReport]] = [None] * len(payloads)
+        pending: Dict[Future, Tuple[int, int]] = {}   # fut -> (shard, attempt)
+        started: Dict[Future, float] = {}
+        speculated: set = set()
+        durations: List[float] = []
+
+        def submit(i: int, attempt: int) -> None:
+            fut = self._pool.submit(payloads[i])
+            started[fut] = time.perf_counter()
+            pending[fut] = (i, attempt)
+            self.worker_dispatches += 1
+
+        for i in range(len(payloads)):
+            submit(i, 0)
+        while any(r is None for r in results):
+            timeout = None
+            if self.speculate and any(i not in speculated
+                                      for i, r in enumerate(results)
+                                      if r is None):
+                # cold first wave: no median to scale from yet — use the
+                # generous absolute deadline instead of waiting forever
+                timeout = (max(self.straggler_min_s, self.straggler_factor
+                               * float(np.median(durations)))
+                           if durations else self.cold_straggler_s)
+            done, _ = wait(list(pending), timeout=timeout,
+                           return_when=FIRST_COMPLETED)
+            now = time.perf_counter()
+            if not done:
+                # every outstanding shard is a straggler: one twin each,
+                # at the SAME attempt (speculation is not a failure and
+                # must not consume the retry budget)
+                for fut, (i, attempt) in list(pending.items()):
+                    if results[i] is None and i not in speculated:
+                        speculated.add(i)
+                        self.straggler_redispatches += 1
+                        submit(i, attempt)
+                continue
+            for fut in done:
+                i, attempt = pending.pop(fut)
+                if results[i] is not None:
+                    continue                   # a faster twin already landed
+                try:
+                    rep = fut.result()
+                except Exception as exc:
+                    if attempt >= self.retries:
+                        raise RuntimeError(
+                            f"shard {i} failed after {attempt + 1} attempts "
+                            f"on the {self.mode!r} pool") from exc
+                    self.retried += 1
+                    submit(i, attempt + 1)
+                    continue
+                results[i] = rep
+                durations.append(now - started.get(fut, now))
+        for fut in pending:                    # abandoned twins
+            fut.cancel()
+        return results

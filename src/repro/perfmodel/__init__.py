@@ -45,7 +45,13 @@ Supporting pieces:
 * :mod:`repro.perfmodel.critical_path` — per-op stall attribution (the
   paper's critical-path extension of LLMCompass).
 * :mod:`repro.perfmodel.sweep`       — streaming full-space sweep engine
-  (the oracle tier's substrate; also emits per-stall-class seed designs).
+  (the oracle tier's substrate; also emits per-stall-class seed designs;
+  ``run(workers=N)`` shards the id range with an exact host merge).
+* :mod:`repro.distributed`           — the service layer above this one:
+  :class:`~repro.distributed.sharded.ShardedEvaluator` fans one request
+  across worker pools (``get_evaluator(..., workers=N)``) and
+  :class:`~repro.distributed.service.EvalService` coalesces concurrent
+  clients into one fused dispatch per tick.
 """
 
 from repro.perfmodel.designspace import DesignSpace, A100_REFERENCE

@@ -478,7 +478,8 @@ _PAPER_EVALUATORS: Dict[tuple, "Evaluator"] = {}
 
 
 def get_evaluator(tier: str = "proxy", backend: Optional[str] = None,
-                  *, oracle_stop: Optional[int] = None) -> Evaluator:
+                  *, oracle_stop: Optional[int] = None,
+                  workers: int = 1, mode: str = "auto") -> Evaluator:
     """The paper's GPT-3 workload evaluator at a fidelity tier (memoized).
 
     tier="proxy"  -> roofline models (cheap acquisition tier);
@@ -486,10 +487,20 @@ def get_evaluator(tier: str = "proxy", backend: Optional[str] = None,
     tier="oracle" -> OracleEvaluator over the chosen backend's models
                      (default roofline), exposing the exhaustive front.
     backend: "roofline" | "compass" | "pallas" | "auto" | None.
+    workers: > 1 wraps the evaluator in a :class:`~repro.distributed.
+             sharded.ShardedEvaluator` that fans each EvalRequest's batch
+             across N workers (`mode`: "thread" | "process" | "device" |
+             "auto"); the report stays bit-identical to the local path.
     """
     if tier not in TIERS:
         raise ValueError(f"tier must be one of {TIERS}, got {tier!r}")
-    key = (tier, backend, oracle_stop)
+    from repro.distributed.sharded import MODES  # leaf dep (mode validation)
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    workers = max(1, int(workers))
+    if workers == 1:
+        mode = "auto"      # inert knobs: collapse onto the memoized base key
+    key = (tier, backend, oracle_stop, workers, mode)
     cached = _PAPER_EVALUATORS.get(key)
     if cached is not None:
         return cached
@@ -497,7 +508,8 @@ def get_evaluator(tier: str = "proxy", backend: Optional[str] = None,
     if tier == "oracle":
         base_backend = backend or "roofline"
         base_tier = "target" if base_backend == "compass" else "proxy"
-        base = get_evaluator(base_tier, base_backend)
+        base = get_evaluator(base_tier, base_backend,
+                             workers=workers, mode=mode)
         ev: Evaluator = OracleEvaluator(base, stop=oracle_stop)
     else:
         model_backend = backend if backend not in (None, "auto", "pallas") \
@@ -506,6 +518,9 @@ def get_evaluator(tier: str = "proxy", backend: Optional[str] = None,
         models = {"ttft": cls(gpt3_layer_prefill()),
                   "tpot": cls(gpt3_layer_decode())}
         ev = ModelEvaluator(models, tier=tier, backend=backend)
+        if workers > 1:
+            from repro.distributed.sharded import ShardedEvaluator  # leaf dep
+            ev = ShardedEvaluator(ev, workers=workers, mode=mode)
     _PAPER_EVALUATORS[key] = ev
     return ev
 

@@ -16,7 +16,15 @@ the Pallas ``ppa_eval`` kernel) in fixed-size chunks, with
   few filter survivors per chunk, so the final front equals the brute-force
   ``pareto_front`` of all evaluated points (while under archive capacity);
 * donated carry buffers (no per-chunk reallocation), checkpoint/resume of
-  partial sweeps, and optional sharding of the id range across devices.
+  partial sweeps, and optional sharding of the id range across devices;
+* **multi-worker sharding of the id range** (``run(workers=N)``): the range
+  splits into N contiguous chunk-aligned spans, each worker streams its own
+  span (its own carry, archive and checkpoint file in the unchanged
+  format), and the host merges top-k, per-stall-class seeds and the Pareto
+  archive — reproducing the single-process result exactly;
+* ``chunk_size="auto"``: a short timed probe over ``chunk_candidates``
+  picks the fastest chunk size for this process (memoized), the same
+  benchmark-driven selection ``backend="auto"`` uses for backends.
 
 Objectives follow the repo convention: ``[ttft, tpot, area]``, all minimized.
 """
@@ -25,7 +33,8 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Dict, Optional, Tuple
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +49,9 @@ _FMT_VERSION = 2
 
 # stall classes in carry order (matches critical_path.STALL_CLASSES)
 _N_STALL = 4
+
+# chunk_size="auto" probe results, memoized per (platform, backend, config)
+_CHUNK_AUTO_CACHE: Dict[tuple, int] = {}
 
 
 # --------------------------------------------------------------------------
@@ -140,7 +152,9 @@ class SweepEngine:
         *competitive* representative of each bottleneck regime instead of
         a latency-minimal max-area corner.
     chunk_size:
-        Designs per device step.  Rounded up to a multiple of the device
+        Designs per device step, or ``"auto"`` to pick the fastest of
+        ``chunk_candidates`` by a short timed probe (memoized per process,
+        like ``backend="auto"``).  Rounded up to a multiple of the device
         count when sharding.
     topk:
         Running best-k designs kept per objective.
@@ -165,12 +179,14 @@ class SweepEngine:
 
     def __init__(self, ttft_model, tpot_model: Optional[RooflineModel] = None,
                  space: DesignSpace = SPACE, *,
-                 chunk_size: int = 131_072, topk: int = 16,
+                 chunk_size: Union[int, str] = 131_072, topk: int = 16,
                  filter_size: int = 128, local_filter: int = 32,
                  archive_capacity: Optional[int] = 16_384,
                  ref_point: Optional[np.ndarray] = None,
                  backend: str = "roofline", shard: bool = False,
-                 stall_topk: int = 0, stall_rank: str = "ttft"):
+                 stall_topk: int = 0, stall_rank: str = "ttft",
+                 chunk_candidates: Tuple[int, ...] = (65_536, 131_072,
+                                                      262_144)):
         evaluator = None
         if tpot_model is None and hasattr(ttft_model, "models"):
             # unified-API construction: SweepEngine(evaluator)
@@ -214,6 +230,19 @@ class SweepEngine:
         self.backend = backend
         self.archive_capacity = archive_capacity
 
+        self._cards = tuple(int(c) for c in space.cardinalities)
+
+        if ref_point is None:
+            ref_idx = space.encode_nearest(A100_REFERENCE)[None, :]
+            ref_point = self._host_objectives(ref_idx)[0]
+        self.ref_point = np.asarray(ref_point, dtype=np.float64)
+
+        if isinstance(chunk_size, str):
+            if chunk_size != "auto":
+                raise ValueError(
+                    f"chunk_size must be an int or 'auto', got {chunk_size!r}")
+            chunk_size = self._autotune_chunk(chunk_candidates, shard)
+
         self._sharding = None
         ndev = len(jax.devices())
         # the chunk must divide by the device count when sharding AND by the
@@ -227,19 +256,47 @@ class SweepEngine:
             multiple = ndev
         if backend == "pallas":
             multiple = math.lcm(multiple, 256)
+        chunk_size = int(chunk_size)
         chunk_size += (-chunk_size) % multiple
         self.chunk_size = int(chunk_size)
         iota = jnp.arange(self.chunk_size, dtype=jnp.int32)
         self._iota = (jax.device_put(iota, self._sharding)
                       if self._sharding is not None else iota)
 
-        if ref_point is None:
-            ref_idx = space.encode_nearest(A100_REFERENCE)[None, :]
-            ref_point = self._host_objectives(ref_idx)[0]
-        self.ref_point = np.asarray(ref_point, dtype=np.float64)
-
-        self._cards = tuple(int(c) for c in space.cardinalities)
         self._step = jax.jit(self._step_impl, donate_argnums=(0,))
+
+    def _autotune_chunk(self, candidates: Tuple[int, ...],
+                        shard: bool) -> int:
+        """Timed probe: one warmed chunk step per candidate size, keep the
+        highest-throughput one (memoized per process, like backend="auto").
+        Probe engines inherit the parent's shard flag so a sharded sweep is
+        tuned on the sharded execution path."""
+        if not candidates:
+            raise ValueError("chunk_size='auto' needs a non-empty "
+                             "chunk_candidates tuple")
+        key = (jax.default_backend(), self.backend, self.fingerprint(),
+               int(self.stall_topk), bool(shard),
+               tuple(int(c) for c in candidates))
+        cached = _CHUNK_AUTO_CACHE.get(key)
+        if cached is not None:
+            return cached
+        best, best_rate = int(candidates[0]), -1.0
+        for cand in candidates:
+            eng = SweepEngine(
+                self.evaluator, chunk_size=int(cand), topk=self.topk,
+                filter_size=self.filter_size, local_filter=self.local_filter,
+                archive_capacity=self.archive_capacity,
+                ref_point=self.ref_point, backend=self.backend, shard=shard,
+                stall_topk=self.stall_topk, stall_rank=self.stall_rank)
+            span = min(eng.chunk_size, self.size)
+            eng.run(0, span)                       # compile + warm
+            t0 = time.perf_counter()
+            eng.run(0, span)
+            rate = span / max(time.perf_counter() - t0, 1e-9)
+            if rate > best_rate:
+                best, best_rate = int(eng.chunk_size), rate
+        _CHUNK_AUTO_CACHE[key] = best
+        return best
 
     # ------------------------------------------------------------------
     def _host_objectives(self, idx: np.ndarray) -> np.ndarray:
@@ -393,17 +450,75 @@ class SweepEngine:
 
     # ------------------------------------------------------------------
     def run(self, start: int = 0, stop: Optional[int] = None, *,
+            workers: int = 1,
             checkpoint_path: Optional[str] = None,
             checkpoint_every: Optional[int] = None,
             resume_from: Optional[str] = None,
             progress: bool = False) -> SweepResult:
         """Sweep flat ids [start, stop) and reduce to a SweepResult.
 
-        ``checkpoint_path``/``checkpoint_every`` persist partial state every
-        N chunks; ``resume_from`` restores it (and overrides ``start``).
+        ``workers=N`` shards the id range into N contiguous chunk-aligned
+        spans streamed concurrently (each worker has its own carry and
+        archive); the host merge reproduces the single-process result
+        exactly.  ``checkpoint_path``/``checkpoint_every`` persist partial
+        state every N chunks; ``resume_from`` restores it (and overrides
+        ``start``).  Multi-worker runs keep one checkpoint file per worker
+        (``{path}.w{i}of{N}``, unchanged single-worker format with the
+        worker's span stamped into the fingerprint), so a resume must use
+        the same range and worker count.
         """
         stop = self.size if stop is None else min(int(stop), self.size)
-        state = (self._load(resume_from) if resume_from
+        workers = max(1, int(workers))
+        t0 = time.perf_counter()
+        if workers == 1:
+            states = [self._run_range(
+                start, stop, checkpoint_path=checkpoint_path,
+                checkpoint_every=checkpoint_every, resume_from=resume_from,
+                progress=progress)]
+        else:
+            spans = self._worker_spans(start, stop, workers)
+            n = len(spans)
+            with ThreadPoolExecutor(max_workers=n,
+                                    thread_name_prefix="sweep") as ex:
+                futs = []
+                for w, (s0, s1) in enumerate(spans):
+                    suffix = f".w{w}of{n}"
+                    futs.append(ex.submit(
+                        self._run_range, s0, s1,
+                        checkpoint_path=(f"{checkpoint_path}{suffix}"
+                                         if checkpoint_path else None),
+                        checkpoint_every=checkpoint_every,
+                        resume_from=(f"{resume_from}{suffix}"
+                                     if resume_from else None),
+                        progress=progress, label=f"w{w}: ",
+                        fp_extra=f"|span={s0}:{s1}"))
+                states = [f.result() for f in futs]
+        return self._reduce_states(states, time.perf_counter() - t0)
+
+    def _worker_spans(self, start: int, stop: int,
+                      workers: int) -> List[Tuple[int, int]]:
+        """Contiguous chunk-aligned spans covering [start, stop) — every
+        worker streams the same chunk sequence a single process would."""
+        n_chunks = -(-max(0, stop - start) // self.chunk_size)
+        if n_chunks == 0:
+            return [(start, stop)]
+        per = -(-n_chunks // min(workers, n_chunks))
+        spans, s = [], start
+        while s < stop:
+            e = min(stop, s + per * self.chunk_size)
+            spans.append((s, e))
+            s = e
+        return spans
+
+    def _run_range(self, start: int, stop: int, *,
+                   checkpoint_path: Optional[str] = None,
+                   checkpoint_every: Optional[int] = None,
+                   resume_from: Optional[str] = None,
+                   progress: bool = False, label: str = "",
+                   fp_extra: str = "") -> Dict:
+        """Stream one contiguous id span; returns its final state dict
+        (plus the resumed-eval count under ``"resumed"``)."""
+        state = (self._load(resume_from, fp_extra) if resume_from
                  else self._fresh_state(start))
         archive: ParetoArchive = state["archive"]
         carry = state["carry"]
@@ -431,38 +546,92 @@ class SweepEngine:
                 # rate counts only ids swept in THIS process (resumed ids
                 # were paid for in a previous one)
                 here = int(carry["n_eval"]) - n_eval_resumed
-                print(f"sweep: {done:,}/{stop:,} ids  front={len(archive)}  "
+                print(f"{label}sweep: {done:,}/{stop:,} ids  "
+                      f"front={len(archive)}  "
                       f"{here / max(time.perf_counter() - t0, 1e-9):,.0f} ids/s",
                       flush=True)
             if (checkpoint_path and checkpoint_every
                     and chunk_i % checkpoint_every == 0):
-                self._save(checkpoint_path, state)
+                self._save(checkpoint_path, state, fp_extra)
         if checkpoint_path:
-            self._save(checkpoint_path, state)
+            self._save(checkpoint_path, state, fp_extra)
+        state["resumed"] = n_eval_resumed
+        return state
 
-        seconds = time.perf_counter() - t0
-        n_eval = int(carry["n_eval"])
+    def _reduce_states(self, states: List[Dict],
+                       seconds: float) -> SweepResult:
+        """Merge worker states into one SweepResult.  The top-k merges are
+        stable in span order, so ties resolve exactly as the single-process
+        streaming reduction would."""
+        resumed = sum(st.get("resumed", 0) for st in states)
+        n_eval = sum(int(st["carry"]["n_eval"]) for st in states)
+        n_super = sum(int(st["carry"]["n_super"]) for st in states)
+
+        k = self.topk
+        vals = np.concatenate(
+            [np.asarray(st["carry"]["topk_val"]) for st in states], axis=1)
+        cand = np.concatenate(
+            [np.asarray(st["carry"]["topk_id"]) for st in states], axis=1)
+        topk_val = np.empty((3, k), vals.dtype)
+        topk_id = np.empty((3, k), cand.dtype)
+        for o in range(3):
+            order = np.argsort(vals[o], kind="stable")[:k]
+            topk_val[o] = vals[o][order]
+            topk_id[o] = cand[o][order]
+
+        stall_val = stall_id = None
+        if self.stall_topk:
+            sk = self.stall_topk
+            svals = np.concatenate(
+                [np.asarray(st["carry"]["stall_topk_val"]) for st in states],
+                axis=1)
+            scand = np.concatenate(
+                [np.asarray(st["carry"]["stall_topk_id"]) for st in states],
+                axis=1)
+            stall_val = np.empty((_N_STALL, sk), svals.dtype)
+            stall_id = np.empty((_N_STALL, sk), scand.dtype)
+            for c in range(_N_STALL):
+                order = np.argsort(svals[c], kind="stable")[:sk]
+                stall_val[c] = svals[c][order]
+                stall_id[c] = np.where(np.isfinite(stall_val[c]),
+                                       scand[c][order], -1)
+
+        if len(states) == 1:
+            archive: ParetoArchive = states[0]["archive"]
+            truncated = archive.truncated
+        else:
+            archive = ParetoArchive(3, capacity=self.archive_capacity)
+            truncated = False
+            n_seen = 0
+            for st in states:
+                a: ParetoArchive = st["archive"]
+                truncated |= a.truncated
+                n_seen += a.n_seen
+                if len(a):
+                    archive.insert(a.y, ids=a.ids)
+            truncated |= archive.truncated
+            archive.n_seen = n_seen
+            archive.truncated = truncated
+
         order = np.argsort(archive.ids, kind="stable")
         return SweepResult(
             n_evaluated=n_eval,
-            n_superior=int(carry["n_super"]),
+            n_superior=n_super,
             pareto_y=archive.y[order],
             pareto_ids=archive.ids[order],
-            topk_val=np.asarray(carry["topk_val"]),
-            topk_ids=np.asarray(carry["topk_id"]),
+            topk_val=topk_val,
+            topk_ids=topk_id,
             ref_point=self.ref_point.copy(),
             seconds=seconds,
             # resumed runs only time the ids swept in *this* process
-            points_per_sec=(n_eval - n_eval_resumed) / max(seconds, 1e-9),
-            archive_truncated=archive.truncated,
-            stall_topk_val=(np.asarray(carry["stall_topk_val"])
-                            if self.stall_topk else None),
-            stall_topk_ids=(np.asarray(carry["stall_topk_id"])
-                            if self.stall_topk else None),
+            points_per_sec=(n_eval - resumed) / max(seconds, 1e-9),
+            archive_truncated=truncated,
+            stall_topk_val=stall_val,
+            stall_topk_ids=stall_id,
         )
 
     # ------------------------------------------------------------------
-    def _save(self, path: str, state: Dict) -> None:
+    def _save(self, path: str, state: Dict, fp_extra: str = "") -> None:
         archive: ParetoArchive = state["archive"]
         extra = {}
         if self.stall_topk:
@@ -471,7 +640,7 @@ class SweepEngine:
         np.savez(
             path,
             version=_FMT_VERSION,
-            fingerprint=self.fingerprint(),
+            fingerprint=self.fingerprint() + fp_extra,
             next=state["next"],
             n_super=np.asarray(state["carry"]["n_super"]),
             n_eval=np.asarray(state["carry"]["n_eval"]),
@@ -485,17 +654,18 @@ class SweepEngine:
             **extra,
         )
 
-    def _load(self, path: str) -> Dict:
+    def _load(self, path: str, fp_extra: str = "") -> Dict:
         z = np.load(path if str(path).endswith(".npz") else f"{path}.npz",
                     allow_pickle=False)
         if int(z["version"]) > _FMT_VERSION:
             raise ValueError(
                 f"checkpoint format v{int(z['version'])} is newer than this "
                 f"build's v{_FMT_VERSION}; refusing to resume")
-        if str(z["fingerprint"]) != self.fingerprint():
+        if str(z["fingerprint"]) != self.fingerprint() + fp_extra:
             raise ValueError(
                 "checkpoint was produced by a different space/workload/"
-                "backend configuration; refusing to resume")
+                "backend configuration (or a different worker span); "
+                "refusing to resume")
         if not np.allclose(np.asarray(z["ref_point"]), self.ref_point,
                            rtol=1e-6):
             raise ValueError(

@@ -215,6 +215,62 @@ def test_regret_curve_monotone_and_json_roundtrip(oracle, tmp_path):
         <= set(data["campaigns"])
 
 
+# ---------------------------------------------------- scheduling policies
+def test_policy_validation():
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    with pytest.raises(ValueError, match="policy"):
+        CampaignRunner(ev, policy="greedy")
+
+
+def test_uniform_policy_never_early_stops():
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    runner = CampaignRunner(ev, proxy=get_evaluator("proxy"), seed=0)
+    res = runner.run(budget=8, seeds={"memory_bw": SPACE.sample(RNG, 2)})
+    assert res.policy == "uniform"
+    assert res.early_stopped == {}
+
+
+def test_adaptive_policy_early_stops_and_reallocates():
+    """A campaign whose samples stop improving the merged archive for
+    `patience` rounds is dropped and its budget flows to the survivors —
+    but the shared budget is still spent exactly."""
+    rng = np.random.default_rng(11)
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    runner = CampaignRunner(ev, proxy=get_evaluator("proxy"), seed=0,
+                            policy="adaptive", patience=1)
+    seeds = {"memory_bw": SPACE.sample(rng, 2),
+             "interconnect": SPACE.sample(rng, 2)}
+    res = runner.run(budget=18, seeds=seeds)
+    assert res.policy == "adaptive"
+    assert len(res.samples) == 18                # budget spent exactly
+    assert len({tuple(s.idx) for s in res.samples}) == 18
+    assert res.early_stopped                     # someone stalled at patience=1
+    # a stopped campaign never observes a sample after its stop round
+    for label, stop_round in res.early_stopped.items():
+        assert all(t.round_i <= stop_round for t in res.telemetry
+                   if t.campaign == label)
+    # the survivors keep spending: rounds exceed the uniform bound B/K
+    assert res.rounds > -(-18 // len(res.per_campaign))
+    # serialization carries the policy + stop records
+    data = res.telemetry_dict()
+    assert data["policy"] == "adaptive"
+    assert set(data["early_stopped"]) == set(res.early_stopped)
+
+
+def test_seeds_per_campaign_multi_seed_step0():
+    """seeds_per_campaign > 1: the stall-class campaign drains its whole
+    step-0 seed list before the trajectory moves on."""
+    rng = np.random.default_rng(5)
+    ev = ModelEvaluator(get_evaluator("proxy").models)
+    runner = CampaignRunner(ev, proxy=get_evaluator("proxy"), seed=0,
+                            seeds_per_campaign=2)
+    res = runner.run(budget=8, seeds={"memory_bw": SPACE.sample(rng, 3)})
+    camp = res.per_campaign["memory_bw"]
+    steps = [s.step for s in camp.samples]
+    assert steps[:2] == [0, 0]                   # both seeds evaluated first
+    assert len(steps) < 3 or steps[2] == 1
+
+
 # ---------------------------------------------------- seed lists + callback
 def test_run_accepts_seed_list_and_step_callback():
     ev = ModelEvaluator(get_evaluator("proxy").models)
