@@ -24,7 +24,8 @@ def main() -> None:
                          "space once — a few seconds)")
     ap.add_argument("--only", default=None,
                     help="comma list: table3,fig45,fig6,budget20,table4,"
-                         "sweep,campaigns,distributed,kernels,archs,ablation")
+                         "sweep,campaigns,portfolio,distributed,kernels,"
+                         "archs,ablation")
     args = ap.parse_args()
     if args.full and args.smoke:
         raise SystemExit("--full and --smoke are mutually exclusive")
@@ -59,6 +60,11 @@ def main() -> None:
         from benchmarks import bench_campaigns
         benches.append(("campaigns",
                         lambda: bench_campaigns.run(smoke=args.smoke)))
+    if only is None or "portfolio" in only:
+        from benchmarks import bench_portfolio
+        benches.append(("portfolio",
+                        lambda: bench_portfolio.run(full=args.full,
+                                                    smoke=args.smoke)))
     if only is None or "distributed" in only:
         from benchmarks import bench_distributed
         benches.append(("distributed",

@@ -16,10 +16,17 @@ at budget B therefore cost ~B/K + O(1) fused dispatches instead of B.
 
 The runner accepts an ``Evaluator`` OR an :class:`~repro.distributed.
 service.EvalService`.  With a service, the runner stops owning the
-batching: each campaign submits its own single-design request and one
-``service.tick()`` coalesces the K clients (plus any interleaved
+batching: each campaign submits its own single-design request (tagged with
+its campaign label as the service ``client`` for round-robin fairness) and
+one ``service.tick()`` coalesces the K clients (plus any interleaved
 baseline/benchmark submitters) into the same ONE fused dispatch per round,
 with the service's shared cross-client cache serving the follow-up reads.
+
+``scenario=`` (or ``workloads=``) points the whole runner at ONE scenario
+of a multi-workload zoo-suite evaluator: the campaigns optimize that
+scenario's (prefill, decode) pair, and seeding them from
+``SweepResult.stall_seeds(scenario=...)`` launches bottleneck campaigns
+per scenario class.
 
 Scheduling is pluggable (``policy=``): ``"uniform"`` gives every live
 campaign one evaluation per round (round-robin clipping); ``"adaptive"``
@@ -159,7 +166,9 @@ class CampaignRunner:
                  seed: int = 0,
                  seeds_per_campaign: int = 1,
                  policy: str = "uniform",
-                 patience: int = 3):
+                 patience: int = 3,
+                 workloads: Optional[tuple] = None,
+                 scenario: Optional[str] = None):
         # deferred import: repro.distributed pulls perfmodel (and through
         # it this module) back in — binding it lazily breaks the cycle for
         # processes whose import chain starts at repro.distributed
@@ -168,7 +177,20 @@ class CampaignRunner:
         self.evaluator = as_evaluator(evaluator)
         self._service = (self.evaluator
                          if isinstance(self.evaluator, EvalService) else None)
-        self.ee = ExplorationEngine(self.evaluator)
+        if scenario is not None:
+            # pick a zoo-suite scenario by name: its (prefill, decode)
+            # workload pair becomes this runner's objective pair
+            scenarios = getattr(self.evaluator, "scenarios", None) or ()
+            match = [s for s in scenarios if s.name == scenario]
+            if not match:
+                raise KeyError(
+                    f"unknown scenario {scenario!r}; evaluator has "
+                    f"{tuple(s.name for s in scenarios)}")
+            if workloads is not None:
+                raise ValueError("pass workloads= or scenario=, not both")
+            workloads = (match[0].prefill, match[0].decode)
+        self.scenario = scenario
+        self.ee = ExplorationEngine(self.evaluator, workloads=workloads)
         self.oracle = oracle
         self.seeds_per_campaign = int(seeds_per_campaign)
         if policy not in POLICIES:
@@ -181,7 +203,7 @@ class CampaignRunner:
         self.dse = LuminaDSE(self.evaluator, proxy=proxy, llm=llm,
                              space=space, ref_point=ref_point,
                              area_budget=area_budget, seed=seed,
-                             engine=self.ee)
+                             engine=self.ee, workloads=workloads)
         self.ref_point = self.dse.ref_point
 
     # ------------------------------------------------------------------
@@ -283,9 +305,12 @@ class CampaignRunner:
             # own request and the SERVICE's coalescing tick fuses them.
             if self._service is not None:
                 futures = [self._service.submit(
-                    EvalRequest(p[2][None, :], detail="stalls"))
+                    EvalRequest(p[2][None, :], detail="stalls"),
+                    client=p[0])                 # campaign label = client
                     for p in proposals]
                 self._service.tick()
+                while not all(f.done() for f in futures):
+                    self._service.tick()         # row-capped service ticks
                 for fut in futures:
                     fut.result()
             else:

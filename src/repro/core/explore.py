@@ -6,26 +6,29 @@ evaluation through the unified :class:`~repro.perfmodel.evaluator.Evaluator`
 contract, and returns the structured sample for the Trajectory Memory.
 
 One DSE step costs exactly ONE fused jitted dispatch: the evaluator computes
-TTFT, TPOT and stall attribution together, and the resulting
-:class:`~repro.perfmodel.evaluator.PPAReport` is cached per design (bounded
-LRU) so follow-up ``reports()`` reads (the SE re-reading the current base
-design) are free.  :meth:`ExplorationEngine.prefetch` extends the same
-contract to many designs at once: the candidate sets of K parallel campaigns
-are fused into ONE batched dispatch per round, which is what makes
+both latency objectives and stall attribution together, and each design's
+:class:`~repro.perfmodel.evaluator.PPAReport` row lands in a
+:class:`~repro.perfmodel.evaluator.RowCache` so follow-up ``reports()``
+reads (the SE re-reading the current base design) are free.
+:meth:`ExplorationEngine.prefetch` extends the same contract to many designs
+at once: the candidate sets of K parallel campaigns are fused into ONE
+batched dispatch per round, which is what makes
 :class:`~repro.core.campaign.CampaignRunner` cost ~1 dispatch/round instead
 of K.
 
-:class:`~repro.distributed.service.EvalService` generalizes prefetch one
-level further — from "one engine batches its own candidates" to "any
-concurrent clients coalesce through one queue": an engine whose evaluator
-is a service still issues one logical request per step/prefetch, but the
-service's tick fuses it with every OTHER client's requests and serves
-repeats from a shared cross-client cache, so this per-engine LRU becomes
-the second (local) cache level.
+There is ONE cache design, not two: when the engine's evaluator is an
+:class:`~repro.distributed.service.EvalService`, the engine reads the
+SERVICE's shared cross-client row cache directly (rows the service already
+evaluated for any client resolve here without a dispatch, and vice versa);
+otherwise it keeps a private bounded ``RowCache`` with the same
+eviction-aware LRU semantics.
+
+``workloads=`` selects which (prefill, decode) pair of a multi-workload
+evaluator drives this engine — the hook that points a DSE campaign at ONE
+scenario of a zoo-suite evaluator (``get_evaluator(suite="zoo")``).
 """
 from __future__ import annotations
 
-from collections import OrderedDict
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -33,9 +36,10 @@ import numpy as np
 from repro.core.memory import Sample
 from repro.core.strategy import Directive
 from repro.perfmodel.critical_path import StallReport
-from repro.perfmodel.evaluator import EvalRequest, Evaluator, as_evaluator
+from repro.perfmodel.evaluator import (EvalRequest, Evaluator, PPAReport,
+                                       RowCache, as_evaluator)
 
-_CACHE_CAP = 4096        # evaluated-design reports kept per engine (LRU)
+_CACHE_CAP = 4096        # evaluated-design report rows kept per engine (LRU)
 
 ReportPair = Tuple[StallReport, StallReport]
 
@@ -48,14 +52,31 @@ class ExplorationEngine:
     every campaign driving this engine.
     """
 
-    def __init__(self, evaluator: Evaluator):
+    def __init__(self, evaluator: Evaluator,
+                 workloads: Optional[Tuple[str, str]] = None,
+                 cache: Optional[RowCache] = None):
         self.evaluator = as_evaluator(evaluator)
-        if len(self.evaluator.workloads) < 2:
-            raise ValueError("the DSE loop needs a two-workload evaluator "
-                             "(ttft + tpot)")
-        self._wt, self._wp = self.evaluator.workloads[:2]
+        if workloads is None:
+            if len(self.evaluator.workloads) < 2:
+                raise ValueError("the DSE loop needs a two-workload "
+                                 "evaluator (prefill + decode)")
+            workloads = tuple(self.evaluator.workloads[:2])
+        else:
+            workloads = tuple(workloads)
+            if len(workloads) != 2:
+                raise ValueError("workloads must be a (prefill, decode) pair")
+            unknown = set(workloads) - set(self.evaluator.workloads)
+            if unknown:
+                raise KeyError(f"unknown workloads {sorted(unknown)}; "
+                               f"have {self.evaluator.workloads}")
+        self._wt, self._wp = workloads
         self.evals = 0        # simulator invocations (the sampling budget)
-        self._reports: "OrderedDict[bytes, ReportPair]" = OrderedDict()
+        # ONE cache: the service's shared cross-client row cache when the
+        # evaluator is a service, a private same-semantics one otherwise
+        self._cache: RowCache = (
+            cache if cache is not None
+            else getattr(self.evaluator, "row_cache", None)
+            or RowCache(_CACHE_CAP))
         # per-objective latency scales for the dominant-stall merge; the DSE
         # loop sets this to its reference point so TTFT (whole prefill, ms)
         # and TPOT (per token, us) stalls compare on their own scales
@@ -70,32 +91,40 @@ class ExplorationEngine:
     def tpot_model(self):
         return self.evaluator.models[self._wp]
 
-    # -- bounded LRU report cache --------------------------------------
-    def _cache_put(self, key: bytes, pair: ReportPair) -> None:
-        # bounded LRU: evict only the coldest entries, never the whole map —
-        # clearing would drop the hot base design and force a re-dispatch on
-        # the SE's very next reports() read
-        while len(self._reports) >= _CACHE_CAP:
-            self._reports.popitem(last=False)
-        self._reports[key] = pair
+    @property
+    def workload_pair(self) -> Tuple[str, str]:
+        return (self._wt, self._wp)
+
+    # -- shared row cache ----------------------------------------------
+    def _cached_row(self, key: bytes) -> Optional[PPAReport]:
+        return self._cache.get(key, "stalls", (self._wt, self._wp))
 
     def _report_pair(self, idx: np.ndarray) -> ReportPair:
         """Both workloads' critical-path reports from one fused dispatch."""
         idx = np.asarray(idx, dtype=np.int32)
-        key = idx.tobytes()
-        pair = self._reports.get(key)
-        if pair is None:
-            rep = self.evaluator.evaluate(EvalRequest(idx, detail="stalls"))
-            pair = (rep.stall_report(self._wt), rep.stall_report(self._wp))
-            self._cache_put(key, pair)
-        else:
-            self._reports.move_to_end(key)       # keep the base design hot
-        return pair
+        key = RowCache.key(idx)
+        row = self._cached_row(key)
+        if row is None:
+            rep = self.evaluator.evaluate(
+                EvalRequest(idx, detail="stalls",
+                            workloads=self._request_names()))
+            row = rep.row(0)
+            self._cache.put(key, "stalls", row)
+        return (row.stall_report(self._wt), row.stall_report(self._wp))
+
+    def _request_names(self) -> Optional[Tuple[str, ...]]:
+        """A service evaluates (and caches) its FULL workload set per tick
+        anyway — request it all so the shared rows serve every client; a
+        plain evaluator only pays for this engine's pair."""
+        if getattr(self.evaluator, "row_cache", None) is self._cache \
+                and self._cache is not None:
+            return None
+        return (self._wt, self._wp)
 
     def prefetch(self, idx_batch: np.ndarray) -> int:
         """Evaluate many designs in ONE fused batched dispatch.
 
-        Fills the report cache so the follow-up per-design
+        Fills the row cache so the follow-up per-design
         :meth:`evaluate`/:meth:`reports` calls are dispatch-free — the
         batched multi-design path behind multi-campaign rounds.  Designs
         already cached are not re-evaluated.  Returns the number of designs
@@ -106,8 +135,8 @@ class ExplorationEngine:
         fresh_rows: List[np.ndarray] = []
         seen = set()
         for row in batch:
-            key = row.tobytes()
-            if key in self._reports or key in seen:
+            key = RowCache.key(row)
+            if key in seen or self._cached_row(key) is not None:
                 continue
             seen.add(key)
             fresh_keys.append(key)
@@ -115,10 +144,10 @@ class ExplorationEngine:
         if not fresh_rows:
             return 0
         rep = self.evaluator.evaluate(
-            EvalRequest(np.stack(fresh_rows), detail="stalls"))
+            EvalRequest(np.stack(fresh_rows), detail="stalls",
+                        workloads=self._request_names()))
         for i, key in enumerate(fresh_keys):
-            self._cache_put(key, (rep.stall_report(self._wt, i),
-                                  rep.stall_report(self._wp, i)))
+            self._cache.put(key, "stalls", rep.row(i))
         return len(fresh_rows)
 
     # ------------------------------------------------------------------

@@ -38,7 +38,7 @@ from repro.core.quane import sensitivity_analysis
 from repro.core.refine import RefinementLoop
 from repro.core.strategy import Directive, StrategyEngine
 from repro.perfmodel.designspace import DesignSpace, SPACE, A100_REFERENCE
-from repro.perfmodel.evaluator import Evaluator, as_evaluator
+from repro.perfmodel.evaluator import Evaluator, as_evaluator, pair_view
 
 FOCUS_CYCLE = ("ttft", "tpot", "area")
 
@@ -145,14 +145,23 @@ class LuminaDSE:
                  area_budget: Optional[float] = None,
                  seed: int = 0,
                  engine: Optional[ExplorationEngine] = None,
-                 imap: Optional[InfluenceMap] = None):
+                 imap: Optional[InfluenceMap] = None,
+                 workloads: Optional[Tuple[str, str]] = None):
         """``engine`` lets parallel campaigns share ONE ExplorationEngine
         (one budget counter, one report cache); ``imap`` injects an already
-        derived influence map so K campaigns pay acquisition once."""
+        derived influence map so K campaigns pay acquisition once;
+        ``workloads`` picks the (prefill, decode) pair of a multi-workload
+        evaluator this loop optimizes (e.g. one zoo-suite scenario)."""
         self.space = space
         evaluator = as_evaluator(evaluator)
-        self.ee = engine if engine is not None else ExplorationEngine(evaluator)
-        self.proxy = proxy if proxy is not None else evaluator
+        self.ee = (engine if engine is not None
+                   else ExplorationEngine(evaluator, workloads=workloads))
+        proxy = proxy if proxy is not None else evaluator
+        if workloads is not None and hasattr(proxy, "models"):
+            # scenario campaigns: QualE/QuanE read objective columns 0/1,
+            # so the proxy must expose exactly this (prefill, decode) pair
+            proxy = pair_view(proxy, workloads)
+        self.proxy = proxy
         self.llm = llm or RuleOracle(enhanced=True)
         self.refiner = RefinementLoop()
         self.seed = seed

@@ -7,7 +7,7 @@ better than the reference in every objective contribute nothing.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
@@ -96,11 +96,24 @@ class ParetoArchive:
 
     Optionally carries one integer id per point (e.g. the flat design id) so
     sweep results remain traceable back to design vectors.
+
+    ``capacity="auto"`` sizes the bound from the observed front width
+    instead of a user guess: after every insert the cap is raised to
+    ``auto_headroom`` x the widest (post-dominance) front seen so far
+    (never below ``auto_floor``), BEFORE any pruning could fire — auto
+    never truncates, memory stays proportional to the true front width,
+    and the final ``capacity`` is the data-derived bound a fixed-capacity
+    run of the same stream should use.
     """
 
-    def __init__(self, n_obj: int, capacity: Optional[int] = None):
+    def __init__(self, n_obj: int, capacity: Union[int, str, None] = None, *,
+                 auto_floor: int = 2_048, auto_headroom: float = 2.0):
         self.n_obj = int(n_obj)
-        self.capacity = capacity
+        self.auto = capacity == "auto"
+        self.auto_floor = int(auto_floor)
+        self.auto_headroom = float(auto_headroom)
+        self._peak = 0               # widest front observed (auto sizing)
+        self.capacity = self.auto_floor if self.auto else capacity
         self.y = np.empty((0, self.n_obj), dtype=np.float64)
         self.ids = np.empty((0,), dtype=np.int64)
         self.n_seen = 0
@@ -138,7 +151,14 @@ class ParetoArchive:
             return 0
         self.y = np.concatenate([self.y, y], axis=0)
         self.ids = np.concatenate([self.ids, ids], axis=0)
-        if self.capacity is not None and len(self) > self.capacity:
+        if self.auto:
+            # raise the cap from the observed (post-dominance) width FIRST
+            # so auto never prunes — not even on a first insert wider than
+            # the floor; the cap is the data-derived recommendation
+            self._peak = max(self._peak, len(self))
+            self.capacity = max(self.auto_floor,
+                                int(self.auto_headroom * self._peak))
+        elif self.capacity is not None and len(self) > self.capacity:
             self._prune_to(self.capacity)
         return y.shape[0]
 

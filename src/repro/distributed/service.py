@@ -13,10 +13,20 @@ resolving every request's future from the shared result.
   maximum detail level any queued request asked for (``objectives`` <
   ``ppa`` < ``stalls`` — latencies are bit-identical across levels, so
   higher detail only adds fields).
-* **Shared cross-client cache**: every evaluated design row is cached
-  (bounded LRU); a request whose rows are all cached at sufficient detail
-  resolves at :meth:`~EvalService.submit` time with NO dispatch, whoever
-  evaluated it first.
+* **Shared cross-client cache**: every evaluated design row lands in ONE
+  :class:`~repro.perfmodel.evaluator.RowCache` (``service.row_cache``) —
+  the same object :class:`~repro.core.explore.ExplorationEngine` reads
+  when its evaluator is a service, so there is one report cache in the
+  process, not two.  A request whose rows are all cached at sufficient
+  detail resolves at :meth:`~EvalService.submit` time with NO dispatch,
+  whoever evaluated it first.
+* **Per-client fairness**: requests queue per client (``submit(...,
+  client=...)``) and the tick drains them ROUND-ROBIN across clients, one
+  request per client per pass, rotating the starting client between
+  ticks.  With ``max_rows_per_tick`` set, a chatty client that floods the
+  queue can no longer starve the others: every tick serves each live
+  client before granting anyone a second request, and leftovers stay
+  queued for the next tick.
 * **Evaluator protocol**: the service itself implements ``evaluate`` /
   ``objectives`` / ``workloads`` — hand it to ``CampaignRunner``,
   ``LuminaDSE``, a baseline driver or a bench wherever an ``Evaluator``
@@ -35,15 +45,15 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from concurrent.futures import Future
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, List, Optional, Tuple
 
 import numpy as np
 
 from repro.perfmodel.evaluator import (DETAILS, EvalRequest, PPAReport,
-                                       as_evaluator)
+                                       RowCache, as_evaluator)
 
 _DETAIL_LEVEL = {name: i for i, name in enumerate(DETAILS)}
 
@@ -54,6 +64,7 @@ class _Pending:
     detail: str
     names: Tuple[str, ...]
     future: Future
+    client: str
 
 
 def _assemble(rows: List[PPAReport], names: Tuple[str, ...],
@@ -88,6 +99,15 @@ class EvalService:
         :class:`~repro.distributed.sharded.ShardedEvaluator`.
     cache_rows:
         Bound on the shared per-design report cache (LRU beyond it).
+        Ignored when an external ``cache`` is injected.
+    cache:
+        An existing :class:`~repro.perfmodel.evaluator.RowCache` to share
+        (e.g. with another service over the same evaluator).
+    max_rows_per_tick:
+        Cap on FRESH design rows dispatched per tick.  None (default) =
+        unbounded — every queued request resolves in one tick.  With a cap,
+        the round-robin drain guarantees each client gets a request served
+        before any client gets a second one.
     autostart:
         Start a background batcher thread that ticks whenever requests sit
         in the queue longer than ``window_s`` (the coalescing window).
@@ -96,17 +116,24 @@ class EvalService:
     """
 
     def __init__(self, evaluator, *, cache_rows: int = 65_536,
+                 cache: Optional[RowCache] = None,
+                 max_rows_per_tick: Optional[int] = None,
                  autostart: bool = False, window_s: float = 0.002):
         self.evaluator = as_evaluator(evaluator)
         self.space = self.evaluator.space
         self.tier = self.evaluator.tier
-        self.cache_rows = int(cache_rows)
         self.window_s = float(window_s)
+        self.max_rows_per_tick = (None if max_rows_per_tick is None
+                                  else int(max_rows_per_tick))
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
-        self._queue: List[_Pending] = []
-        # design-row cache: key -> (detail level, 1-row PPAReport, all names)
-        self._cache: "OrderedDict[bytes, Tuple[int, PPAReport]]" = OrderedDict()
+        # per-client FIFO queues, drained round-robin by the tick
+        self._queues: "OrderedDict[str, Deque[_Pending]]" = OrderedDict()
+        self._rr_start = 0               # rotating round-robin entry point
+        # THE shared cross-client design-row cache (ExplorationEngine reads
+        # this same object when its evaluator is a service)
+        self.row_cache: RowCache = (cache if cache is not None
+                                    else RowCache(cache_rows))
         self._closed = False
         # traffic counters
         self.submits = 0                 # requests received
@@ -130,17 +157,30 @@ class EvalService:
         return self.evaluator.models
 
     @property
+    def scenarios(self):
+        return getattr(self.evaluator, "scenarios", None)
+
+    @property
     def dispatches(self) -> int:
         """Fused device dispatches spent by the underlying evaluator."""
         return getattr(self.evaluator, "dispatches", 0)
 
+    @property
+    def cache_rows(self) -> int:
+        return self.row_cache.capacity
+
+    def _queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
     # -- async API ------------------------------------------------------
-    def submit(self, request: EvalRequest) -> Future:
+    def submit(self, request: EvalRequest, *, client: str = "") -> Future:
         """Enqueue one request; the returned future resolves to a PPAReport.
 
-        Requests whose rows are ALL cached at sufficient detail resolve
-        immediately (no queue, no dispatch) — the shared cross-client
-        cache path.
+        ``client`` names the submitting party for round-robin fairness
+        (campaign label, bench name, ...); anonymous submitters share one
+        lane.  Requests whose rows are ALL cached at sufficient detail
+        resolve immediately (no queue, no dispatch) — the shared
+        cross-client cache path.
         """
         idx = np.atleast_2d(np.asarray(request.idx, dtype=np.int32))
         names = (self.workloads if request.workloads is None
@@ -149,7 +189,7 @@ class EvalService:
         if unknown:
             raise KeyError(f"unknown workloads {sorted(unknown)}; "
                            f"have {self.workloads}")
-        pend = _Pending(idx, request.detail, names, Future())
+        pend = _Pending(idx, request.detail, names, Future(), client)
         with self._lock:
             if self._closed:
                 raise RuntimeError("EvalService is closed")
@@ -157,9 +197,44 @@ class EvalService:
             if self._try_resolve(pend):
                 self.cache_hits += 1
             else:
-                self._queue.append(pend)
+                self._queues.setdefault(client, deque()).append(pend)
                 self._cond.notify()
         return pend.future
+
+    def _drain_fair(self) -> List[_Pending]:
+        """Pop requests ROUND-ROBIN across client queues (caller holds the
+        lock): one request per live client per pass, starting after the
+        client served first last tick, until the queues are empty or the
+        planned row count reaches ``max_rows_per_tick``."""
+        clients = list(self._queues)
+        if not clients:
+            return []
+        start = self._rr_start % len(clients)
+        order = clients[start:] + clients[:start]
+        picked: List[_Pending] = []
+        rows = 0
+        while True:
+            progressed = False
+            for client in order:
+                q = self._queues.get(client)
+                if not q:
+                    continue
+                if (self.max_rows_per_tick is not None and picked
+                        and rows >= self.max_rows_per_tick):
+                    break
+                pend = q.popleft()
+                picked.append(pend)
+                rows += pend.idx.shape[0]
+                progressed = True
+            else:
+                if progressed:
+                    continue
+            break
+        for client in list(self._queues):
+            if not self._queues[client]:
+                del self._queues[client]
+        self._rr_start = start + 1        # rotate who goes first next tick
+        return picked
 
     def tick(self) -> int:
         """Drain the queue into ONE fused dispatch; resolve every future.
@@ -173,7 +248,7 @@ class EvalService:
         always make progress.
         """
         with self._lock:
-            pending, self._queue = self._queue, []
+            pending = self._drain_fair()
             if not pending:
                 return 0
             level = max(_DETAIL_LEVEL[p.detail] for p in pending)
@@ -183,11 +258,10 @@ class EvalService:
             seen: set = set()
             for p in pending:
                 for row in p.idx:
-                    key = row.tobytes()
+                    key = RowCache.key(row)
                     if key in seen:
                         continue
-                    ent = self._cache.get(key)
-                    if ent is None or ent[0] < level:
+                    if self.row_cache.get(key, detail, p.names) is None:
                         seen.add(key)
                         fresh_keys.append(key)
                         fresh_rows.append(row)
@@ -204,28 +278,23 @@ class EvalService:
             if rep is not None:
                 self.fused_dispatches += 1
                 for i, key in enumerate(fresh_keys):
-                    self._cache[key] = (level, rep.row(i))
-                    self._cache.move_to_end(key)
+                    self.row_cache.put(key, detail, rep.row(i))
             for p in pending:
                 self.coalesced_requests += 1
                 if not self._try_resolve(p):   # unreachable by construction
                     p.future.set_exception(
                         RuntimeError("coalesced rows missing from cache"))
-            while len(self._cache) > self.cache_rows:
-                self._cache.popitem(last=False)
         return len(fresh_rows)
 
     def _try_resolve(self, pend: _Pending) -> bool:
         """Resolve a request from cache alone (caller holds the lock)."""
-        level = _DETAIL_LEVEL[pend.detail]
         rows: List[PPAReport] = []
         for row in pend.idx:
-            ent = self._cache.get(row.tobytes())
-            if ent is None or ent[0] < level:
+            ent = self.row_cache.get(RowCache.key(row), pend.detail,
+                                     pend.names)
+            if ent is None:
                 return False
-            rows.append(ent[1])
-        for row in pend.idx:                   # touch AFTER the full check
-            self._cache.move_to_end(row.tobytes())
+            rows.append(ent)
         pend.future.set_result(_assemble(rows, pend.names, pend.detail))
         return True
 
@@ -233,8 +302,8 @@ class EvalService:
     def evaluate(self, request: EvalRequest) -> PPAReport:
         """Submit + (self-)tick + result: the drop-in Evaluator call."""
         fut = self.submit(request)
-        if not fut.done() and self._batcher is None:
-            self.tick()
+        while not fut.done() and self._batcher is None:
+            self.tick()                        # bounded ticks drain in turns
         return fut.result()
 
     def objectives(self, idx: np.ndarray) -> np.ndarray:
@@ -253,7 +322,7 @@ class EvalService:
     def _batch_loop(self) -> None:
         while True:
             with self._cond:
-                while not self._queue and not self._closed:
+                while not self._queued() and not self._closed:
                     self._cond.wait()
                 if self._closed:
                     return
@@ -266,8 +335,8 @@ class EvalService:
             self._cond.notify_all()
         if self._batcher is not None:
             self._batcher.join(timeout=1.0)
-        self.tick()                            # drain any stragglers
+        while self._queued():                  # drain any stragglers
+            self.tick()
 
     def cache_clear(self) -> None:
-        with self._lock:
-            self._cache.clear()
+        self.row_cache.clear()

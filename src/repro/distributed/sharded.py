@@ -160,6 +160,8 @@ def _worker_spec(base: ModelEvaluator) -> bytes:
         "space": base.space,
         "tier": base.tier,
         "backend": base.backend,
+        "scenarios": getattr(base, "scenarios", None),
+        "stacked": getattr(base, "stacked", None),
     })
 
 
@@ -169,7 +171,9 @@ def _process_init(spec_bytes: bytes) -> None:
     models = {nm: cls(wl, spec["space"])
               for nm, (cls, wl) in spec["models"].items()}
     _WORKER_EVALUATOR = ModelEvaluator(models, tier=spec["tier"],
-                                       backend=spec["backend"])
+                                       backend=spec["backend"],
+                                       scenarios=spec.get("scenarios"),
+                                       stacked=spec.get("stacked"))
 
 
 def _process_eval(payload: ShardPayload) -> PPAReport:
@@ -283,6 +287,10 @@ class ShardedEvaluator:
     @property
     def backend(self):
         return getattr(self.base, "backend", None)
+
+    @property
+    def scenarios(self):
+        return getattr(self.base, "scenarios", None)
 
     # -- public API -----------------------------------------------------
     def evaluate(self, request: EvalRequest) -> PPAReport:

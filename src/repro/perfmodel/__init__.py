@@ -24,7 +24,13 @@ tiered Evaluator API** of :mod:`repro.perfmodel.evaluator`:
 
 * a **backend registry** (``roofline`` | ``compass`` | ``pallas`` with
   ``backend="auto"`` benchmark-driven selection) choosing the compute
-  substrate independently of the tier.
+  substrate independently of the tier;
+* **workload suites** (``get_evaluator(suite="paper" | "zoo")``): the
+  GPT-3 pair, or every assigned architecture config as a
+  :class:`~repro.perfmodel.workload.Scenario` — all workloads stacked
+  into one deduped op union (:class:`~repro.perfmodel.workload.
+  WorkloadStack`) so a single dispatch (and a single sweep pass) scores
+  the whole zoo.
 
 The evaluator's traced path is *fused*: one jitted dispatch decodes the
 batch, derives hardware once, and evaluates every workload (TTFT + TPOT +
@@ -56,23 +62,30 @@ Supporting pieces:
 
 from repro.perfmodel.designspace import DesignSpace, A100_REFERENCE
 from repro.perfmodel.hardware import derive_hardware, area_mm2
-from repro.perfmodel.workload import Workload, Op, gpt3_layer_prefill, gpt3_layer_decode
-from repro.perfmodel.roofline import RooflineModel
+from repro.perfmodel.workload import (Workload, Op, WorkloadStack, Scenario,
+                                      gpt3_layer_prefill, gpt3_layer_decode,
+                                      from_arch, paper_suite, zoo_suite)
+from repro.perfmodel.roofline import RooflineModel, stacked_workload_batches
 from repro.perfmodel.compass import CompassModel
 from repro.perfmodel.critical_path import attribute_stalls, STALL_CLASSES
 from repro.perfmodel.evaluator import (Evaluator, EvalRequest, PPAReport,
                                        ModelEvaluator, OracleEvaluator,
-                                       get_evaluator, make_evaluator,
-                                       as_evaluator, register_backend,
-                                       backend_names, TIERS, DETAILS)
+                                       RowCache, get_evaluator,
+                                       make_evaluator, as_evaluator,
+                                       pair_view, register_backend,
+                                       backend_names, TIERS, DETAILS, SUITES)
 from repro.perfmodel.sweep import SweepEngine, SweepResult
 
 __all__ = [
     "DesignSpace", "A100_REFERENCE", "derive_hardware", "area_mm2",
-    "Workload", "Op", "gpt3_layer_prefill", "gpt3_layer_decode",
-    "RooflineModel", "CompassModel", "attribute_stalls", "STALL_CLASSES",
+    "Workload", "Op", "WorkloadStack", "Scenario",
+    "gpt3_layer_prefill", "gpt3_layer_decode", "from_arch",
+    "paper_suite", "zoo_suite",
+    "RooflineModel", "CompassModel", "stacked_workload_batches",
+    "attribute_stalls", "STALL_CLASSES",
     "Evaluator", "EvalRequest", "PPAReport", "ModelEvaluator",
-    "OracleEvaluator", "get_evaluator", "make_evaluator", "as_evaluator",
-    "register_backend", "backend_names", "TIERS", "DETAILS",
+    "OracleEvaluator", "RowCache", "get_evaluator", "make_evaluator",
+    "as_evaluator", "pair_view", "register_backend", "backend_names",
+    "TIERS", "DETAILS", "SUITES",
     "SweepEngine", "SweepResult",
 ]

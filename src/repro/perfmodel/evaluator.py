@@ -38,7 +38,9 @@ one-release deprecation window.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from collections import OrderedDict
 from typing import Callable, Dict, Mapping, Optional, Protocol, Tuple
 
 import jax
@@ -50,10 +52,15 @@ from repro.perfmodel.designspace import DesignSpace, SPACE
 from repro.perfmodel.hardware import derive_hardware
 from repro.perfmodel.roofline import (RooflineModel, _JIT_CACHE,
                                       _bucketed_call, _space_key,
-                                      _workload_fingerprint)
+                                      _workload_fingerprint,
+                                      stacked_workload_batches)
+from repro.perfmodel.workload import Scenario, WorkloadStack
 
 DETAILS = ("objectives", "ppa", "stalls")
 TIERS = ("proxy", "target", "oracle")
+SUITES = ("paper", "zoo")
+
+_DETAIL_LEVEL = {name: i for i, name in enumerate(DETAILS)}
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +153,75 @@ class Evaluator(Protocol):
 
 
 # ---------------------------------------------------------------------------
+# shared per-design report-row cache
+# ---------------------------------------------------------------------------
+
+class RowCache:
+    """Bounded LRU of single-design :class:`PPAReport` rows.
+
+    THE report cache: :class:`~repro.distributed.service.EvalService` shares
+    one instance across all its clients, and :class:`~repro.core.explore.
+    ExplorationEngine` uses the service's instance when its evaluator IS a
+    service (one cache, not two) or a private one otherwise.
+
+    Entries are keyed by the design row's index bytes and hold the
+    highest-detail report seen for that design.  A lookup hits only when the
+    cached detail covers the requested level AND the cached report covers
+    the requested workloads — a pair-only row never masquerades as a
+    full-suite one.  Eviction is strictly LRU (hot rows are touched on every
+    hit, so a campaign's base design survives any number of colder
+    evictions).  Thread-safe.
+    """
+
+    def __init__(self, capacity: int = 65_536):
+        self.capacity = int(capacity)
+        self._lock = threading.RLock()
+        self._d: "OrderedDict[bytes, Tuple[int, PPAReport]]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    @staticmethod
+    def key(row: np.ndarray) -> bytes:
+        return np.ascontiguousarray(row, dtype=np.int32).tobytes()
+
+    def get(self, key: bytes, detail: str,
+            names: Tuple[str, ...]) -> Optional[PPAReport]:
+        """The cached row, or None if absent / too shallow / wrong suite."""
+        level = _DETAIL_LEVEL[detail]
+        with self._lock:
+            ent = self._d.get(key)
+            if (ent is None or ent[0] < level
+                    or not set(names) <= set(ent[1].workloads)):
+                self.misses += 1
+                return None
+            self._d.move_to_end(key)
+            self.hits += 1
+            return ent[1]
+
+    def put(self, key: bytes, detail: str, row: PPAReport) -> None:
+        """Insert one single-design report row (never downgrades: an entry
+        with higher detail AND at least the same workloads is kept)."""
+        level = _DETAIL_LEVEL[detail]
+        with self._lock:
+            ent = self._d.get(key)
+            if (ent is not None and ent[0] >= level
+                    and set(row.workloads) <= set(ent[1].workloads)):
+                self._d.move_to_end(key)
+                return
+            self._d[key] = (level, row)
+            self._d.move_to_end(key)
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
+
+
+# ---------------------------------------------------------------------------
 # backend registry
 # ---------------------------------------------------------------------------
 
@@ -183,6 +259,15 @@ _AUTO_CACHE: Dict[tuple, str] = {}
 def _bare_roofline(models: Mapping[str, RooflineModel]) -> bool:
     return all((m.op_overhead_s, m.nonoverlap, m.mem_efficiency) == (0.0, 0.0, 1.0)
                for m in models.values())
+
+
+def homogeneous_models(models: Mapping[str, RooflineModel]) -> bool:
+    """True when every model shares one op-term implementation (class +
+    compass knobs) — the eligibility rule for the stacked evaluator path
+    AND the portfolio sweep's union-level chunk math (one definition, two
+    consumers)."""
+    return len({(type(m), m.op_overhead_s, m.nonoverlap, m.mem_efficiency)
+                for m in models.values()}) == 1
 
 
 def resolve_backend(backend: Optional[str],
@@ -252,7 +337,9 @@ class ModelEvaluator:
     """
 
     def __init__(self, models: Mapping[str, RooflineModel], *,
-                 tier: str = "proxy", backend: Optional[str] = None):
+                 tier: str = "proxy", backend: Optional[str] = None,
+                 scenarios: Optional[Tuple[Scenario, ...]] = None,
+                 stacked: Optional[bool] = None):
         if not models:
             raise ValueError("need at least one workload model")
         self.models: Dict[str, RooflineModel] = dict(models)
@@ -264,16 +351,37 @@ class ModelEvaluator:
         self.space: DesignSpace = next(iter(self.models.values())).space
         self.tier = tier
         self.backend = resolve_backend(backend, self.models)
+        self.scenarios = scenarios
+        # stacked path: ONE op-term pass over the deduped union of all
+        # workloads' op tables instead of a per-workload traced loop —
+        # bit-identical, near-flat cost in the workload count.  Eligible
+        # when every model shares the op-term math (class + compass knobs).
+        eligible = homogeneous_models(self.models)
+        if stacked and not eligible:
+            raise ValueError(
+                "stacked=True needs every workload model to share one class "
+                "and compass-knob set (their op terms fuse into one pass)")
+        self.stacked = eligible if stacked is None else bool(stacked)
         self.dispatches = 0            # fused jitted dispatch count
         self._fns: Dict[tuple, Callable] = {}
+        self._stacks: Dict[Tuple[str, ...], WorkloadStack] = {}
 
     # -- identity ------------------------------------------------------
     @property
     def workloads(self) -> Tuple[str, ...]:
         return tuple(self.models)
 
+    def _stack(self, names: Tuple[str, ...]) -> WorkloadStack:
+        stack = self._stacks.get(names)
+        if stack is None:
+            stack = WorkloadStack.build({nm: self.models[nm].wl
+                                         for nm in names})
+            self._stacks[names] = stack
+        return stack
+
     def _cache_key(self, detail: str, names: Tuple[str, ...]) -> tuple:
-        return ("fused", detail, self.backend, _space_key(self.space),
+        return ("stacked" if self.stacked else "fused", detail, self.backend,
+                _space_key(self.space),
                 tuple((nm, type(m).__qualname__, m._tp,
                        (m.op_overhead_s, m.nonoverlap, m.mem_efficiency),
                        _workload_fingerprint(m.wl))
@@ -298,6 +406,22 @@ class ModelEvaluator:
 
     def _build_traced(self, detail: str, names: Tuple[str, ...]) -> Callable:
         models = {nm: self.models[nm] for nm in names}
+        if self.stacked:
+            stack = self._stack(names)
+            rep_model = models[names[0]]
+
+            def fused(idx: jnp.ndarray) -> Dict:
+                vals = self.space.decode(idx)        # once per batch
+                hw = derive_hardware(vals)           # once per batch
+                hwb = {kk: vv[:, None] for kk, vv in hw.items()}
+                return {"area": hw["area_mm2"],
+                        "per_workload": stacked_workload_batches(
+                            rep_model, stack, hwb, detail,
+                            materialize_objectives=True)}
+
+            return fused
+
+        wl_detail = "objectives+sink" if detail == "objectives" else detail
 
         def fused(idx: jnp.ndarray) -> Dict:
             vals = self.space.decode(idx)            # once per batch
@@ -305,7 +429,8 @@ class ModelEvaluator:
             hwb = {kk: vv[:, None] for kk, vv in hw.items()}
             out = {"area": hw["area_mm2"]}
             out["per_workload"] = {
-                nm: m._workload_batch(hwb, detail) for nm, m in models.items()}
+                nm: m._workload_batch(hwb, wl_detail)
+                for nm, m in models.items()}
             return out
 
         return fused
@@ -451,9 +576,18 @@ class OracleEvaluator:
 
     def regret(self, y: np.ndarray) -> np.ndarray:
         """Per-objective relative regret of a campaign's best points vs the
-        true optima: (best_found - best_possible) / best_possible."""
+        true optima: (best_found - best_possible) / best_possible.
+
+        ``y`` must live in the oracle front's objective space — for a
+        zoo-suite oracle that is the ROBUST [r_prefill, r_decode, area]
+        triple, not raw workload latencies.
+        """
         y = np.atleast_2d(np.asarray(y, dtype=np.float64))
         best_true = self.sweep_result().topk_val[:, 0]
+        if y.shape[1] != best_true.shape[0]:
+            raise ValueError(
+                f"regret expects {best_true.shape[0]}-objective rows "
+                f"(the oracle front's space), got {y.shape[1]}")
         best_found = y.min(axis=0)
         return (best_found - best_true) / np.maximum(best_true, 1e-300)
 
@@ -464,14 +598,17 @@ class OracleEvaluator:
 
 def make_evaluator(workloads: Mapping[str, "object"], *, tier: str = "proxy",
                    backend: Optional[str] = None,
-                   space: DesignSpace = SPACE) -> ModelEvaluator:
+                   space: DesignSpace = SPACE,
+                   scenarios: Optional[Tuple[Scenario, ...]] = None,
+                   stacked: Optional[bool] = None) -> ModelEvaluator:
     """Build a ModelEvaluator from {name: Workload} at a fidelity tier."""
     if tier not in TIER_BACKEND:
         raise ValueError(f"tier must be one of {sorted(TIER_BACKEND)} here; "
                          "use get_evaluator('oracle') for the oracle tier")
     cls = _backend(TIER_BACKEND[tier]).model_cls
     models = {nm: cls(wl, space) for nm, wl in workloads.items()}
-    return ModelEvaluator(models, tier=tier, backend=backend)
+    return ModelEvaluator(models, tier=tier, backend=backend,
+                          scenarios=scenarios, stacked=stacked)
 
 
 _PAPER_EVALUATORS: Dict[tuple, "Evaluator"] = {}
@@ -479,8 +616,9 @@ _PAPER_EVALUATORS: Dict[tuple, "Evaluator"] = {}
 
 def get_evaluator(tier: str = "proxy", backend: Optional[str] = None,
                   *, oracle_stop: Optional[int] = None,
-                  workers: int = 1, mode: str = "auto") -> Evaluator:
-    """The paper's GPT-3 workload evaluator at a fidelity tier (memoized).
+                  workers: int = 1, mode: str = "auto",
+                  suite: str = "paper") -> Evaluator:
+    """The paper-workload (or zoo-portfolio) evaluator per tier (memoized).
 
     tier="proxy"  -> roofline models (cheap acquisition tier);
     tier="target" -> compass models (the budgeted high-fidelity tier);
@@ -491,33 +629,42 @@ def get_evaluator(tier: str = "proxy", backend: Optional[str] = None,
              sharded.ShardedEvaluator` that fans each EvalRequest's batch
              across N workers (`mode`: "thread" | "process" | "device" |
              "auto"); the report stays bit-identical to the local path.
+    suite: "paper" — the GPT-3 (ttft, tpot) pair, one scenario;
+           "zoo"   — every assigned architecture config as a scenario
+           (``<arch>:prefill`` / ``<arch>:decode`` workload pairs built via
+           :func:`~repro.perfmodel.workload.zoo_suite`).  All workloads
+           evaluate in ONE stacked dispatch over the deduped op union, and
+           ``.scenarios`` drives the portfolio sweep's per-scenario fronts.
     """
     if tier not in TIERS:
         raise ValueError(f"tier must be one of {TIERS}, got {tier!r}")
+    if suite not in SUITES:
+        raise ValueError(f"suite must be one of {SUITES}, got {suite!r}")
     from repro.distributed.sharded import MODES  # leaf dep (mode validation)
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     workers = max(1, int(workers))
     if workers == 1:
         mode = "auto"      # inert knobs: collapse onto the memoized base key
-    key = (tier, backend, oracle_stop, workers, mode)
+    key = (tier, backend, oracle_stop, workers, mode, suite)
     cached = _PAPER_EVALUATORS.get(key)
     if cached is not None:
         return cached
-    from repro.perfmodel.workload import gpt3_layer_prefill, gpt3_layer_decode
+    from repro.perfmodel.workload import paper_suite, zoo_suite
     if tier == "oracle":
         base_backend = backend or "roofline"
         base_tier = "target" if base_backend == "compass" else "proxy"
         base = get_evaluator(base_tier, base_backend,
-                             workers=workers, mode=mode)
+                             workers=workers, mode=mode, suite=suite)
         ev: Evaluator = OracleEvaluator(base, stop=oracle_stop)
     else:
         model_backend = backend if backend not in (None, "auto", "pallas") \
             else TIER_BACKEND[tier]
         cls = _backend(model_backend).model_cls
-        models = {"ttft": cls(gpt3_layer_prefill()),
-                  "tpot": cls(gpt3_layer_decode())}
-        ev = ModelEvaluator(models, tier=tier, backend=backend)
+        wls, scenarios = (paper_suite() if suite == "paper" else zoo_suite())
+        models = {nm: cls(wl) for nm, wl in wls.items()}
+        ev = ModelEvaluator(models, tier=tier, backend=backend,
+                            scenarios=scenarios)
         if workers > 1:
             from repro.distributed.sharded import ShardedEvaluator  # leaf dep
             ev = ShardedEvaluator(ev, workers=workers, mode=mode)
@@ -538,6 +685,29 @@ def evaluator_for_model(model: RooflineModel, name: str = "lat") -> ModelEvaluat
             _MODEL_EVALUATORS.clear()
         _MODEL_EVALUATORS[key] = ev
     return ev
+
+
+def pair_view(evaluator, names: Tuple[str, str]) -> Evaluator:
+    """A two-workload view over ``names`` of a model-backed evaluator.
+
+    Scenario campaigns point the DSE stack (QualE probing, QuanE
+    sensitivity — both read objectives columns 0/1) at ONE (prefill,
+    decode) pair of a multi-workload suite.  The view shares the base's
+    model objects, so its compiled executables come out of the same
+    workload-keyed jit cache.
+    """
+    names = tuple(names)
+    if tuple(evaluator.workloads) == names:
+        return evaluator
+    models = evaluator.models
+    unknown = set(names) - set(models)
+    if unknown:
+        raise KeyError(f"unknown workloads {sorted(unknown)}; "
+                       f"have {tuple(models)}")
+    backend = getattr(evaluator, "backend", None)
+    return ModelEvaluator({nm: models[nm] for nm in names},
+                          tier=evaluator.tier,
+                          backend=backend if backend in _BACKENDS else None)
 
 
 def as_evaluator(obj) -> Evaluator:

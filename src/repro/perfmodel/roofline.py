@@ -17,7 +17,7 @@ speedup that lets us run 1000-sample DSE campaigns in CI).
 from __future__ import annotations
 
 import hashlib
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -118,25 +118,41 @@ def _batch_bucket(b: int) -> int:
     return bb
 
 
+def _strip_sinks(tree):
+    """Drop underscore-keyed leaves (device-only materialization sinks like
+    ``"_sink"``) so they are never copied to host."""
+    if isinstance(tree, dict):
+        return {k: _strip_sinks(v) for k, v in tree.items()
+                if not str(k).startswith("_")}
+    return tree
+
+
 def _bucketed_call(fn: Callable, idx: np.ndarray):
     """Pad an index batch to its power-of-two bucket, call a jitted `fn`, and
     slice every output leaf back to the true batch size.
 
     The single pad/slice implementation behind the fused
     :class:`~repro.perfmodel.evaluator.ModelEvaluator` dispatch path.
+    Sink outputs (keys starting with ``_``) exist only to pin the traced
+    executable's materialization and are dropped BEFORE the host transfer.
     """
     idx = np.atleast_2d(np.asarray(idx, dtype=np.int32))
     b = idx.shape[0]
     bb = _batch_bucket(b)
     if bb != b:                       # pad with the last row; slice back
         idx = np.concatenate([idx, np.repeat(idx[-1:], bb - b, axis=0)])
-    out = fn(jnp.asarray(idx))
+    out = _strip_sinks(fn(jnp.asarray(idx)))
     return jax.tree_util.tree_map(lambda v: np.asarray(v)[:b], out)
 
 
-def _attribute(t: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Stall attribution for `_op_terms` output: each op's time goes to its
-    dominant resource.  Returns (dom_class (B, ops), stall (B, 4))."""
+def _dominant_class(t: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Dominant-resource class per op from `_op_terms` components.
+
+    THE attribution rule (ties: comm wins on >=, compute needs a strict >
+    over memory; pure memcpy ops always attribute to MEMORY) — shared by
+    :func:`_attribute` and the portfolio sweep's union-level stall pass so
+    the two can never drift apart.
+    """
     t_compute, t_memory, t_comm = t["t_compute"], t["t_memory"], t["t_comm"]
     dom_is_comm = (t_comm >= t_compute) & (t_comm >= t_memory)
     dom_is_compute = (t_compute > t_memory) & ~dom_is_comm
@@ -145,8 +161,13 @@ def _attribute(t: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
         jnp.where(dom_is_compute,
                   jnp.where(t["is_mm"], TENSOR, VECTORU),
                   MEMORY))
-    # pure memcpy ops always attribute to MEMORY
-    dom_class = jnp.where(t["is_mem"], MEMORY, dom_class)
+    return jnp.where(t["is_mem"], MEMORY, dom_class)
+
+
+def _attribute(t: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stall attribution for `_op_terms` output: each op's time goes to its
+    dominant resource.  Returns (dom_class (B, ops), stall (B, 4))."""
+    dom_class = _dominant_class(t)
     t_op = t["t_op"]
     stall = jnp.stack(
         [jnp.where(dom_class == c, t_op, 0.0).sum(axis=1) for c in range(4)],
@@ -176,17 +197,24 @@ class RooflineModel:
         self._tp = float(wl.tp)
 
     # ------------------------------------------------------------------
-    def _op_terms(self, hwb: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    def _op_terms(self, hwb: Dict[str, jnp.ndarray],
+                  ops: Optional[Dict[str, jnp.ndarray]] = None,
+                  ) -> Dict[str, jnp.ndarray]:
         """Per-op time terms for (B, 1)-broadcast hardware dicts.
 
         Shared by the full eval path and the lean sweep/objectives path.
+        ``ops`` overrides the model's own op table — the stacked path feeds
+        the deduped union of a :class:`~repro.perfmodel.workload.
+        WorkloadStack` through the same traced math (``t_unit`` is the
+        count-free per-op time the gather reassembly multiplies back out).
         """
-        o = self._ops
+        o = self._ops if ops is None else ops
         kind = o["kind"][None, :]
         flops = o["flops"][None, :]
         m, n, k = o["m"][None, :], o["n"][None, :], o["k"][None, :]
         comm = o["comm_bytes"][None, :]
         count = o["count"][None, :]
+        tp = o["tp"][None, :]
 
         util = matmul_utilization(hwb, m, n, k)
         eff_tensor = hwb["tensor_flops"] * util
@@ -205,15 +233,17 @@ class RooflineModel:
             jnp.where(is_vec, flops / hwb["vector_flops"], 0.0))
         t_memory = bytes_eff / (hwb["mem_bw"] * self.mem_efficiency)
         t_comm = jnp.where(
-            is_ar, ring_allreduce_time(hwb, comm, self._tp),
-            jnp.where(is_p2p, a2a_time(hwb, comm, self._tp), 0.0))
+            is_ar, ring_allreduce_time(hwb, comm, tp),
+            jnp.where(is_p2p, a2a_time(hwb, comm, tp), 0.0))
 
         major = jnp.maximum(jnp.maximum(t_compute, t_memory), t_comm)
         minor = t_compute + t_memory + t_comm - major
-        t_op = (major + self.nonoverlap * minor + self.op_overhead_s) * count
+        t_unit = major + self.nonoverlap * minor + self.op_overhead_s
+        t_op = t_unit * count
         return {
-            "t_op": t_op, "t_compute": t_compute, "t_memory": t_memory,
-            "t_comm": t_comm, "count": count, "is_mm": is_mm, "is_mem": is_mem,
+            "t_op": t_op, "t_unit": t_unit, "t_compute": t_compute,
+            "t_memory": t_memory, "t_comm": t_comm, "count": count,
+            "is_mm": is_mm, "is_mem": is_mem,
         }
 
     def _workload_batch(self, hwb: Dict[str, jnp.ndarray],
@@ -231,6 +261,13 @@ class RooflineModel:
         latency = t["t_op"].sum(axis=1)
         if detail == "objectives":
             return {"latency": latency}
+        if detail == "objectives+sink":
+            # evaluator path: emit t_op so the latency reduce consumes a
+            # materialized buffer exactly as at "ppa"/"stalls" (XLA's fused
+            # producer+reduce drifts a ULP on some op tables); the sweep's
+            # on-device step keeps plain "objectives" (the sink would be
+            # dead code there anyway)
+            return {"latency": latency, "_sink": t["t_op"]}
         count = t["count"]
         out = {
             "latency": latency,
@@ -249,3 +286,75 @@ class RooflineModel:
     # removed after their one-release deprecation window: evaluate through
     # repro.perfmodel.evaluator (ModelEvaluator fuses every workload into
     # one dispatch; evaluator_for_model wraps a single model).
+
+
+# --------------------------------------------------------------------------
+# stacked-workload evaluation: op terms ONCE over the deduped union
+# --------------------------------------------------------------------------
+
+def stacked_workload_batches(model: RooflineModel,
+                             stack: "W.WorkloadStack",
+                             hwb: Dict[str, jnp.ndarray],
+                             detail: Union[str, Mapping[str, str]] = "stalls",
+                             materialize_objectives: bool = False,
+                             ) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Every workload's ``_workload_batch`` outputs from ONE op-term pass.
+
+    ``model`` supplies the op-term math (class + compass knobs — every
+    workload in the stack must share them); its :meth:`RooflineModel.
+    _op_terms` runs once over ``stack.unique`` (count-free ``t_unit``), and
+    each workload's per-op arrays are reassembled by gathering its rows out
+    of the union and multiplying its own counts back in.  Because every
+    per-op value is elementwise in the op fields and the per-workload
+    reductions run over the same (B, n_ops_w) arrays in the same op order,
+    the result is BIT-IDENTICAL to looping ``_workload_batch`` per workload
+    — with O(n_unique) instead of O(sum n_ops_w) traced op-term cost.
+
+    ``detail`` is one level for all workloads or a per-workload mapping
+    (the portfolio sweep attributes stalls only on prefill workloads).
+
+    ``materialize_objectives``: at the "objectives" level, also emit each
+    workload's per-op times under a ``"_sink"`` key.  At "ppa"/"stalls"
+    ``t_op`` is an executable OUTPUT, and XLA's materialized-buffer
+    reduction is what the looped path computes; the objectives-only
+    executable otherwise fuses gather+multiply into the latency reduce and
+    drifts a ULP.  The evaluator path sets this (bit-identity across
+    detail levels and vs the looped path is part of its contract); the
+    sweep's on-device step keeps the fully fused reduce.
+    """
+    ones = np.ones(stack.n_unique, dtype=np.float64)
+    uops = {kk: jnp.asarray(vv) for kk, vv in stack.unique.items()}
+    uops["count"] = jnp.asarray(ones)
+    t = model._op_terms(hwb, ops=uops)
+    out: Dict[str, Dict[str, jnp.ndarray]] = {}
+    for nm in stack.names:
+        d = detail if isinstance(detail, str) else detail[nm]
+        mp = jnp.asarray(stack.op_map[nm])
+        cnt = jnp.asarray(stack.counts[nm])[None, :]
+        t_op = t["t_unit"][:, mp] * cnt
+        latency = t_op.sum(axis=1)
+        if d == "objectives":
+            out[nm] = ({"latency": latency, "_sink": t_op}
+                       if materialize_objectives else {"latency": latency})
+            continue
+        ow = {
+            "latency": latency,
+            "op_time": t_op,
+            "t_compute": t["t_compute"][:, mp] * cnt,
+            "t_memory": t["t_memory"][:, mp] * cnt,
+            "t_comm": t["t_comm"][:, mp] * cnt,
+        }
+        if d == "stalls":
+            tw = {
+                "t_op": t_op,
+                "t_compute": t["t_compute"][:, mp],
+                "t_memory": t["t_memory"][:, mp],
+                "t_comm": t["t_comm"][:, mp],
+                "is_mm": t["is_mm"][:, mp],
+                "is_mem": t["is_mem"][:, mp],
+            }
+            dom_class, stall = _attribute(tw)
+            ow["op_class"] = dom_class
+            ow["stall"] = stall
+        out[nm] = ow
+    return out

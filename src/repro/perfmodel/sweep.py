@@ -24,9 +24,21 @@ the Pallas ``ppa_eval`` kernel) in fixed-size chunks, with
   archive — reproducing the single-process result exactly;
 * ``chunk_size="auto"``: a short timed probe over ``chunk_candidates``
   picks the fastest chunk size for this process (memoized), the same
-  benchmark-driven selection ``backend="auto"`` uses for backends.
+  benchmark-driven selection ``backend="auto"`` uses for backends;
+* **portfolio mode**: an evaluator carrying multiple
+  :class:`~repro.perfmodel.workload.Scenario`\\ s (e.g.
+  ``get_evaluator(suite="zoo")``) streams the id range ONCE — one stacked
+  op-term pass over the deduped workload union per chunk — while
+  maintaining per-scenario running top-k, per-scenario exact Pareto
+  archives, per-scenario stall-class seeds AND a robust front under
+  ``robust="worst" | "geomean"`` scalarization of the reference-normalized
+  scenario latencies.  The result's top-level front is the robust one;
+  ``SweepResult.per_scenario`` holds every scenario's own result and
+  ``stall_seeds(scenario=...)`` feeds bottleneck-seeded campaigns per
+  scenario class.
 
-Objectives follow the repo convention: ``[ttft, tpot, area]``, all minimized.
+Objectives follow the repo convention: ``[ttft, tpot, area]`` per scenario
+(prefill latency, decode latency, area), all minimized.
 """
 from __future__ import annotations
 
@@ -43,9 +55,13 @@ import numpy as np
 from repro.core.pareto import ParetoArchive
 from repro.perfmodel.designspace import DesignSpace, SPACE, A100_REFERENCE
 from repro.perfmodel.hardware import derive_hardware
-from repro.perfmodel.roofline import RooflineModel, _workload_fingerprint
+from repro.perfmodel.roofline import (RooflineModel, _dominant_class,
+                                      _workload_fingerprint)
+from repro.perfmodel.workload import WorkloadStack
 
-_FMT_VERSION = 2
+_FMT_VERSION = 3       # v3 adds portfolio (multi-scenario) checkpoints
+
+ROBUST = ("worst", "geomean")
 
 # stall classes in carry order (matches critical_path.STALL_CLASSES)
 _N_STALL = 4
@@ -103,12 +119,29 @@ class SweepResult:
     archive_truncated: bool       # capacity pruning fired (front then inexact)
     stall_topk_val: Optional[np.ndarray] = None   # (4, k) best TTFT latency
     stall_topk_ids: Optional[np.ndarray] = None   # (4, k) per dominant stall
+    archive_capacity: Optional[int] = None        # final (auto-sized) bound
+    # ---- portfolio sweeps: the top-level fields above describe the ROBUST
+    # objectives [robust_prefill, robust_decode, area] (reference-normalized
+    # latencies scalarized across scenarios); per-scenario results nest here
+    scenario_names: Optional[Tuple[str, ...]] = None
+    robust: Optional[str] = None                  # "worst" | "geomean"
+    per_scenario: Optional[Dict[str, "SweepResult"]] = None
 
     def pareto_idx(self, space: DesignSpace = SPACE) -> np.ndarray:
         """Front design-index vectors (p, n_params)."""
         return space.flat_to_idx(self.pareto_ids)
 
-    def stall_seeds(self, space: DesignSpace = SPACE) -> Dict[str, np.ndarray]:
+    def scenario(self, name: str) -> "SweepResult":
+        """One scenario's own sweep result (portfolio sweeps only)."""
+        if not self.per_scenario:
+            raise ValueError("not a portfolio sweep result")
+        if name not in self.per_scenario:
+            raise KeyError(f"unknown scenario {name!r}; "
+                           f"have {self.scenario_names}")
+        return self.per_scenario[name]
+
+    def stall_seeds(self, space: DesignSpace = SPACE,
+                    scenario: Optional[str] = None) -> Dict[str, np.ndarray]:
         """Per-stall-class seed designs for bottleneck-guided DSE.
 
         {stall class -> (k', n_params) index vectors}, the best designs
@@ -117,7 +150,21 @@ class SweepResult:
         dominated by comes back as an EMPTY (0, n_params) array — seeded
         campaign runners must skip it, not crash
         (:meth:`repro.core.campaign.CampaignRunner.seed_starts` does).
+
+        On a portfolio result, ``scenario=<name>`` selects that scenario's
+        seed classes; ``scenario=None`` flattens every scenario into
+        ``"<scenario>:<stall class>"`` keys — ready-made campaign labels
+        for per-scenario-class seeded DSE.
         """
+        if self.per_scenario is not None:
+            if scenario is not None:
+                return self.scenario(scenario).stall_seeds(space)
+            return {f"{nm}:{cls}": arr
+                    for nm in self.scenario_names
+                    for cls, arr in
+                    self.per_scenario[nm].stall_seeds(space).items()}
+        if scenario is not None:
+            raise ValueError("scenario= is only valid on portfolio results")
         if self.stall_topk_ids is None:
             raise ValueError("sweep ran without stall_topk; no stall seeds")
         from repro.perfmodel.critical_path import STALL_CLASSES
@@ -179,21 +226,34 @@ class SweepEngine:
 
     def __init__(self, ttft_model, tpot_model: Optional[RooflineModel] = None,
                  space: DesignSpace = SPACE, *,
-                 chunk_size: Union[int, str] = 131_072, topk: int = 16,
+                 chunk_size: Union[int, str, None] = None, topk: int = 16,
                  filter_size: int = 128, local_filter: int = 32,
-                 archive_capacity: Optional[int] = 16_384,
+                 archive_capacity: Union[int, str, None] = 16_384,
                  ref_point: Optional[np.ndarray] = None,
                  backend: str = "roofline", shard: bool = False,
                  stall_topk: int = 0, stall_rank: str = "ttft",
+                 robust: str = "worst",
                  chunk_candidates: Tuple[int, ...] = (65_536, 131_072,
                                                       262_144)):
         evaluator = None
+        scenarios = None
         if tpot_model is None and hasattr(ttft_model, "models"):
             # unified-API construction: SweepEngine(evaluator)
             evaluator = ttft_model
             if len(evaluator.workloads) < 2:
                 raise ValueError("sweep needs a two-workload evaluator "
                                  "(ttft + tpot)")
+            scenarios = getattr(evaluator, "scenarios", None)
+            if scenarios is not None and len(scenarios) > 1:
+                if backend != "roofline":
+                    raise ValueError("portfolio sweeps run on the traced "
+                                     "roofline path; backend must stay "
+                                     "'roofline'")
+                if getattr(evaluator, "backend", None) == "pallas":
+                    raise ValueError("portfolio sweeps need a traced-backend "
+                                     "evaluator, not 'pallas'")
+            else:
+                scenarios = None
             ttft_model = evaluator.models[evaluator.workloads[0]]
             tpot_model = evaluator.models[evaluator.workloads[1]]
             space = evaluator.space
@@ -225,18 +285,79 @@ class SweepEngine:
             raise ValueError(f"stall_rank must be 'ttft' or 'ref', "
                              f"got {stall_rank!r}")
         self.stall_rank = stall_rank
+        if robust not in ROBUST:
+            raise ValueError(f"robust must be one of {ROBUST}, got {robust!r}")
+        self.robust = robust
         self.filter_size = int(filter_size)
         self.local_filter = int(local_filter)
         self.backend = backend
+        if isinstance(archive_capacity, str) and archive_capacity != "auto":
+            raise ValueError("archive_capacity must be an int, None or "
+                             f"'auto', got {archive_capacity!r}")
         self.archive_capacity = archive_capacity
+
+        # ---- portfolio mode: S > 1 scenarios over one stacked op union ----
+        self.scenarios = scenarios
+        self._portfolio = scenarios is not None
+        if self._portfolio:
+            # deferred import (mirrors the ModelEvaluator import below):
+            # evaluator.py pulls this module back in lazily via the oracle
+            from repro.perfmodel.evaluator import homogeneous_models
+            models = evaluator.models
+            if not homogeneous_models(models):
+                raise ValueError("portfolio sweeps need homogeneous workload "
+                                 "models (one class + compass-knob set)")
+            self._scen_names = tuple(s.name for s in scenarios)
+            self._wl_order = tuple(nm for s in scenarios
+                                   for nm in (s.prefill, s.decode))
+            self._stack = WorkloadStack.build(
+                {nm: models[nm].wl for nm in self._wl_order})
+            self._rep_model = models[self._wl_order[0]]
+            # count matrices for the chunk step's matmul reductions:
+            # per-workload latency = t_unit @ C^T (ONE (c,U)x(U,W) dot
+            # instead of W gather+sum branches), and per-scenario stall
+            # sums contract the class-masked t_unit with the PREFILL rows
+            stack = self._stack
+            self._cmat_all = stack.count_matrix[
+                [stack.names.index(nm) for nm in self._wl_order]]
+            cmat_prefill = stack.count_matrix[
+                [stack.names.index(s.prefill) for s in scenarios]]
+            # stall attribution only touches unique ops some PREFILL
+            # workload uses — restricting the class-masked traversals to
+            # those columns cuts the chunk step's dominant memory traffic
+            self._stall_cols = np.flatnonzero(cmat_prefill.sum(axis=0) > 0)
+            self._cmat_prefill = cmat_prefill[:, self._stall_cols]
+            # per-scenario dominance filters stay lean: the host archive is
+            # exact regardless, and S+1 group filters traverse (c, S+1, f)
+            self._pf_rows = max(8, min(self.filter_size // 4, 32))
 
         self._cards = tuple(int(c) for c in space.cardinalities)
 
-        if ref_point is None:
-            ref_idx = space.encode_nearest(A100_REFERENCE)[None, :]
-            ref_point = self._host_objectives(ref_idx)[0]
-        self.ref_point = np.asarray(ref_point, dtype=np.float64)
+        if self._portfolio:
+            n_scen = len(scenarios)
+            if ref_point is None:
+                ref_points = self._scenario_refs()
+            else:
+                ref_points = np.asarray(ref_point, dtype=np.float64)
+                if ref_points.shape != (n_scen, 3):
+                    raise ValueError(
+                        f"portfolio ref_point must be ({n_scen}, 3) — one "
+                        f"[prefill, decode, area] row per scenario — got "
+                        f"shape {ref_points.shape}")
+            self.ref_points = ref_points
+            # the robust reference: every normalized latency is 1 at the
+            # reference design, area is the raw reference area
+            self.ref_point = np.array([1.0, 1.0, float(ref_points[0, 2])])
+        else:
+            if ref_point is None:
+                ref_idx = space.encode_nearest(A100_REFERENCE)[None, :]
+                ref_point = self._host_objectives(ref_idx)[0]
+            self.ref_point = np.asarray(ref_point, dtype=np.float64)
 
+        if chunk_size is None:
+            # portfolio chunks stream ~10x the op rows per id: keep the
+            # working set cache-friendly by default
+            chunk_size = 65_536 if self._portfolio else 131_072
         if isinstance(chunk_size, str):
             if chunk_size != "auto":
                 raise ValueError(
@@ -263,7 +384,19 @@ class SweepEngine:
         self._iota = (jax.device_put(iota, self._sharding)
                       if self._sharding is not None else iota)
 
-        self._step = jax.jit(self._step_impl, donate_argnums=(0,))
+        self._step = jax.jit(
+            self._step_portfolio_impl if self._portfolio else self._step_impl,
+            donate_argnums=(0,))
+
+    def _scenario_refs(self) -> np.ndarray:
+        """(S, 3) reference [prefill, decode, area] per scenario (A100)."""
+        from repro.perfmodel.evaluator import EvalRequest
+        ref_idx = self.space.encode_nearest(A100_REFERENCE)[None, :]
+        rep = self.evaluator.evaluate(EvalRequest(ref_idx,
+                                                  detail="objectives"))
+        return np.array([[float(rep.latency[s.prefill][0]),
+                          float(rep.latency[s.decode][0]),
+                          float(rep.area[0])] for s in self.scenarios])
 
     def _autotune_chunk(self, candidates: Tuple[int, ...],
                         shard: bool) -> int:
@@ -286,7 +419,9 @@ class SweepEngine:
                 self.evaluator, chunk_size=int(cand), topk=self.topk,
                 filter_size=self.filter_size, local_filter=self.local_filter,
                 archive_capacity=self.archive_capacity,
-                ref_point=self.ref_point, backend=self.backend, shard=shard,
+                ref_point=(self.ref_points if self._portfolio
+                           else self.ref_point),
+                backend=self.backend, shard=shard, robust=self.robust,
                 stall_topk=self.stall_topk, stall_rank=self.stall_rank)
             span = min(eng.chunk_size, self.size)
             eng.run(0, span)                       # compile + warm
@@ -407,9 +542,178 @@ class SweepEngine:
             carry["stall_topk_id"] = stall_id
         return carry, survivor, ys_out, ids
 
+    # ---------------- portfolio (multi-scenario) chunk step ----------------
+    def _chunk_eval_portfolio(self, idx: jnp.ndarray):
+        """(c, n_params) -> ((c, S, 3) per-scenario objectives, (c, S)
+        dominant prefill stall or None).
+
+        ONE stacked op-term pass over the deduped union; every per-workload
+        reduction is a count-matrix contraction (latencies:
+        ``t_unit @ C_all^T``; per-scenario stall sums: the class-masked
+        ``t_unit`` against the prefill rows) — no per-workload unrolling,
+        so both compile time and runtime stay near-flat in W.
+        """
+        vals = self.space.decode(idx)
+        hw = derive_hardware(vals)
+        hwb = {kk: vv[:, None] for kk, vv in hw.items()}
+        stack = self._stack
+        uops = {kk: jnp.asarray(vv) for kk, vv in stack.unique.items()}
+        uops["count"] = jnp.ones(stack.n_unique)
+        t = self._rep_model._op_terms(hwb, ops=uops)
+        lat = t["t_unit"] @ jnp.asarray(self._cmat_all).T   # (c, 2S)
+        area = hw["area_mm2"]
+        S = len(self.scenarios)
+        ys = jnp.stack([lat[:, 0::2], lat[:, 1::2],
+                        jnp.broadcast_to(area[:, None],
+                                         (idx.shape[0], S))], axis=2)
+        dom = None
+        if self.stall_topk:
+            # a SECOND op-term pass statically restricted to prefill-used
+            # rows: consuming t_compute/t_memory/t_comm out of the full
+            # union pass would force XLA to re-materialize its big (c, U)
+            # intermediates — recomputing the small (c, P) chain is 2x
+            # cheaper than widening the first pass's fusion
+            uop2 = {kk: jnp.asarray(vv[self._stall_cols])
+                    for kk, vv in stack.unique.items()}
+            uop2["count"] = jnp.ones(len(self._stall_cols))
+            t2 = self._rep_model._op_terms(hwb, ops=uop2)
+            dom_g = _dominant_class(t2)                     # (c, P)
+            cp = jnp.asarray(self._cmat_prefill).T          # (P, S)
+            stall = jnp.stack(
+                [jnp.where(dom_g == k, t2["t_unit"], 0.0) @ cp
+                 for k in range(_N_STALL)], axis=2)         # (c, S, 4)
+            dom = jnp.argmax(stall, axis=2).astype(jnp.int32)
+        return ys, dom
+
+    def _robust_objectives(self, ys_s: jnp.ndarray) -> jnp.ndarray:
+        """(c, S, 3) -> (c, 3) scalarized [robust_p, robust_d, area]: the
+        reference-normalized latency aggregated across scenarios (worst
+        case or geometric mean), plus the shared raw area."""
+        refs = jnp.asarray(self.ref_points, ys_s.dtype)
+        ratio = ys_s[:, :, :2] / refs[None, :, :2]
+        if self.robust == "worst":
+            r = ratio.max(axis=1)
+        else:
+            r = jnp.exp(jnp.log(jnp.maximum(ratio, 1e-300)).mean(axis=1))
+        return jnp.concatenate([r, ys_s[:, 0, 2:3]], axis=1)
+
+    def _step_portfolio_impl(self, carry: Dict[str, jnp.ndarray],
+                             start: jnp.ndarray, stop: jnp.ndarray,
+                             filt: jnp.ndarray):
+        """One donated-carry portfolio chunk step.
+
+        Group axis: S scenarios then the robust scalarization (index S).
+        Every reduction is batched across groups — ONE top_k call merges
+        all (S+1) x 3 running top-k rows, one merges the S x 4 stall-class
+        rows, one picks every group's local-filter killer rows.
+        """
+        S = len(self.scenarios)
+        S1, k, c = S + 1, self.topk, self.chunk_size
+        ids = start + self._iota
+        valid = ids < stop
+        idx = _unrank(jnp.minimum(ids, self.size - 1), self._cards)
+        ys_s, dom = self._chunk_eval_portfolio(idx)       # (c,S,3), (c,S)
+        ys_r = self._robust_objectives(ys_s)              # (c,3)
+        ys_all = jnp.concatenate([ys_s, ys_r[:, None, :]], axis=1)
+        ysm = jnp.where(valid[:, None, None], ys_all, jnp.inf)
+
+        # ---- per-group reference-superiority counts ----
+        refs_all = jnp.concatenate(
+            [jnp.asarray(self.ref_points, ys_all.dtype),
+             jnp.asarray(self.ref_point, ys_all.dtype)[None, :]], axis=0)
+        sup = (ysm < refs_all[None, :, :]).all(axis=2)    # (c, S1)
+        n_super = carry["n_super"] + sup.sum(axis=0, dtype=jnp.int32)
+        n_eval = carry["n_eval"] + valid.sum(dtype=jnp.int32)
+
+        # ---- running top-k, batched over (S1 x 3) rows ----
+        ysm_rows = jnp.moveaxis(ysm, 0, 2)                # (S1, 3, c)
+        vals = jnp.concatenate(
+            [carry["topk_val"].reshape(S1 * 3, k),
+             ysm_rows.reshape(S1 * 3, c)], axis=1)
+        cand = jnp.concatenate(
+            [carry["topk_id"].reshape(S1 * 3, k),
+             jnp.broadcast_to(ids[None, :], (S1 * 3, c))], axis=1)
+        neg, sel = jax.lax.top_k(-vals, k)
+        topk_val = (-neg).reshape(S1, 3, k)
+        topk_id = jnp.take_along_axis(cand, sel, axis=1).reshape(S1, 3, k)
+
+        # ---- per-scenario stall-class top-k (optional), batched ----
+        stall_val = stall_id = None
+        if self.stall_topk:
+            sk = self.stall_topk
+            refs = refs_all[:S]
+            if self.stall_rank == "ref":
+                rank = (ysm[:, :S, :] / refs[None, :, :]).max(axis=2)
+            else:
+                rank = ysm[:, :S, 0]                      # scenario prefill
+            hit = dom[:, :, None] == jnp.arange(_N_STALL)[None, None, :]
+            masked = jnp.where(hit, rank[:, :, None], jnp.inf)  # (c, S, 4)
+            rows = jnp.moveaxis(masked, 0, 2).reshape(S * _N_STALL, c)
+            vals = jnp.concatenate(
+                [carry["stall_topk_val"].reshape(S * _N_STALL, sk), rows],
+                axis=1)
+            cand = jnp.concatenate(
+                [carry["stall_topk_id"].reshape(S * _N_STALL, sk),
+                 jnp.broadcast_to(ids[None, :], (S * _N_STALL, c))], axis=1)
+            neg, sel = jax.lax.top_k(-vals, sk)
+            stall_val = (-neg).reshape(S, _N_STALL, sk)
+            stall_id = jnp.where(jnp.isfinite(-neg),
+                                 jnp.take_along_axis(cand, sel, axis=1),
+                                 -1).reshape(S, _N_STALL, sk)
+
+        # ---- streaming Pareto reduction, batched over all S1 groups ----
+        # chunk-local killer rows: each group's per-objective minima plus
+        # its best reference-normalized sum (4 rows/group, one argmin pass)
+        normsum = (ysm / refs_all[None, :, :]).sum(axis=2)     # (c, S1)
+        keys = jnp.concatenate([ysm, normsum[:, :, None]], axis=2)
+        sel = jnp.argmin(keys, axis=0)                         # (S1, 4)
+        ysm_t = jnp.moveaxis(ysm, 0, 1)                        # (S1, c, 3)
+        locals_ = jnp.take_along_axis(ysm_t, sel[:, :, None], axis=1)
+        full_filt = jnp.concatenate(
+            [filt.astype(ys_all.dtype), locals_], axis=1)      # (S1, f+4, 3)
+        all_le = jnp.ones((c, S1, full_filt.shape[1]), bool)
+        any_lt = jnp.zeros_like(all_le)
+        for j in range(3):
+            fj = full_filt[None, :, :, j]
+            yj = ysm[:, :, j][:, :, None]
+            all_le &= fj <= yj
+            any_lt |= fj < yj
+        dominated = (all_le & any_lt).any(axis=2)              # (c, S1)
+        survivor = valid[:, None] & ~dominated
+        ys_out = jnp.where(survivor[:, :, None], ys_all, jnp.inf)
+
+        carry = {"n_super": n_super, "n_eval": n_eval,
+                 "topk_val": topk_val, "topk_id": topk_id}
+        if self.stall_topk:
+            carry["stall_topk_val"] = stall_val
+            carry["stall_topk_id"] = stall_id
+        return carry, survivor, ys_out, ids
+
     # ------------------------------------------------------------------
+    @property
+    def _n_groups(self) -> int:
+        """Archive/filter groups: S scenarios + the robust front, or 1."""
+        return len(self.scenarios) + 1 if self._portfolio else 1
+
     def _fresh_state(self, start: int) -> Dict:
         k = self.topk
+        if self._portfolio:
+            S, S1 = len(self.scenarios), self._n_groups
+            carry = {
+                "n_super": jnp.zeros((S1,), jnp.int32),
+                "n_eval": jnp.zeros((), jnp.int32),
+                "topk_val": jnp.full((S1, 3, k), jnp.inf, jnp.float32),
+                "topk_id": jnp.full((S1, 3, k), -1, jnp.int32),
+            }
+            if self.stall_topk:
+                carry["stall_topk_val"] = jnp.full(
+                    (S, _N_STALL, self.stall_topk), jnp.inf, jnp.float32)
+                carry["stall_topk_id"] = jnp.full(
+                    (S, _N_STALL, self.stall_topk), -1, jnp.int32)
+            return {"next": int(start), "carry": carry,
+                    "archives": [ParetoArchive(3,
+                                               capacity=self.archive_capacity)
+                                 for _ in range(S1)]}
         carry = {
             "n_super": jnp.zeros((), jnp.int32),
             "n_eval": jnp.zeros((), jnp.int32),
@@ -424,19 +728,36 @@ class SweepEngine:
         return {"next": int(start), "carry": carry,
                 "archive": ParetoArchive(3, capacity=self.archive_capacity)}
 
-    def _filter_from_archive(self, archive: ParetoArchive) -> np.ndarray:
-        """Up to filter_size spread-out front rows, +inf padded."""
-        filt = np.full((self.filter_size, 3), np.inf, dtype=np.float32)
+    def _filter_from_archive(self, archive: ParetoArchive,
+                             rows: Optional[int] = None) -> np.ndarray:
+        """Up to `rows` (default filter_size) spread-out front rows,
+        +inf padded."""
+        rows = self.filter_size if rows is None else int(rows)
+        filt = np.full((rows, 3), np.inf, dtype=np.float32)
         n = len(archive)
         if n:
             order = np.argsort(archive.y.sum(axis=1), kind="stable")
-            take = order[np.linspace(0, n - 1, min(n, self.filter_size))
+            take = order[np.linspace(0, n - 1, min(n, rows))
                          .astype(np.int64)]
             filt[: take.size] = archive.y[take]
         return filt
 
     def fingerprint(self) -> str:
         """Identity of (space, workloads, knobs) for checkpoint validation."""
+        if self._portfolio:
+            parts = [str(self._cards), self.backend,
+                     f"robust={self.robust}",
+                     type(self._rep_model).__qualname__]
+            for s in self.scenarios:
+                parts.append(f"{s.name}="
+                             + _workload_fingerprint(
+                                 self.evaluator.models[s.prefill].wl)
+                             + ":"
+                             + _workload_fingerprint(
+                                 self.evaluator.models[s.decode].wl))
+            if self.stall_rank != "ttft":
+                parts.append(f"stall_rank={self.stall_rank}")
+            return "|".join(parts)
         parts = [
             str(self._cards), self.backend,
             _workload_fingerprint(self.ttft_model.wl),
@@ -520,22 +841,32 @@ class SweepEngine:
         (plus the resumed-eval count under ``"resumed"``)."""
         state = (self._load(resume_from, fp_extra) if resume_from
                  else self._fresh_state(start))
-        archive: ParetoArchive = state["archive"]
+        archives: List[ParetoArchive] = (state["archives"] if self._portfolio
+                                         else [state["archive"]])
         carry = state["carry"]
         n_eval_resumed = int(carry["n_eval"])
         t0 = time.perf_counter()
         chunk_i = 0
         while state["next"] < stop:
             s = state["next"]
-            filt = jnp.asarray(self._filter_from_archive(archive))
+            rows = self._pf_rows if self._portfolio else None
+            filt = np.stack([self._filter_from_archive(a, rows)
+                             for a in archives])
+            filt = jnp.asarray(filt if self._portfolio else filt[0])
             # ids >= stop are masked invalid on device, so a partial final
             # chunk (or a truncated-range sweep) stays exact for free.
             carry, survivor, ys_out, ids = self._step(
                 carry, jnp.int32(s), jnp.int32(stop), filt)
-            mask = np.asarray(survivor)
+            mask = np.asarray(survivor)       # (c,) or (c, S+1)
             if mask.any():
-                archive.insert(np.asarray(ys_out)[mask],
-                               ids=np.asarray(ids)[mask])
+                ys_np, ids_np = np.asarray(ys_out), np.asarray(ids)
+                if self._portfolio:
+                    for g, a in enumerate(archives):
+                        mg = mask[:, g]
+                        if mg.any():
+                            a.insert(ys_np[mg, g, :], ids=ids_np[mg])
+                else:
+                    archives[0].insert(ys_np[mask], ids=ids_np[mask])
             # clamp to `stop`: ids beyond it were masked invalid, and a later
             # resume with a larger stop must re-visit them
             state["next"] = min(s + self.chunk_size, stop)
@@ -547,7 +878,7 @@ class SweepEngine:
                 # were paid for in a previous one)
                 here = int(carry["n_eval"]) - n_eval_resumed
                 print(f"{label}sweep: {done:,}/{stop:,} ids  "
-                      f"front={len(archive)}  "
+                      f"front={len(archives[-1])}  "
                       f"{here / max(time.perf_counter() - t0, 1e-9):,.0f} ids/s",
                       flush=True)
             if (checkpoint_path and checkpoint_every
@@ -558,11 +889,52 @@ class SweepEngine:
         state["resumed"] = n_eval_resumed
         return state
 
+    @staticmethod
+    def _merge_topk_rows(states: List[Dict], key_val: str, key_id: str,
+                         rows: int, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Stable span-order merge of per-worker running top-k row blocks
+        (each worker contributes a (..., rows, k) carry, flattened)."""
+        vals = np.concatenate(
+            [np.asarray(st["carry"][key_val]).reshape(rows, k)
+             for st in states], axis=1)
+        cand = np.concatenate(
+            [np.asarray(st["carry"][key_id]).reshape(rows, k)
+             for st in states], axis=1)
+        out_v = np.empty((rows, k), vals.dtype)
+        out_i = np.empty((rows, k), cand.dtype)
+        for r in range(rows):
+            order = np.argsort(vals[r], kind="stable")[:k]
+            out_v[r] = vals[r][order]
+            out_i[r] = cand[r][order]
+        return out_v, out_i
+
+    def _merge_archives(self, archive_lists: List[List[ParetoArchive]],
+                        g: int) -> Tuple[ParetoArchive, bool]:
+        """Merge group g's archive across workers (exact host reduction)."""
+        if len(archive_lists) == 1:
+            a = archive_lists[0][g]
+            return a, a.truncated
+        archive = ParetoArchive(3, capacity=self.archive_capacity)
+        truncated = False
+        n_seen = 0
+        for al in archive_lists:
+            a = al[g]
+            truncated |= a.truncated
+            n_seen += a.n_seen
+            if len(a):
+                archive.insert(a.y, ids=a.ids)
+        truncated |= archive.truncated
+        archive.n_seen = n_seen
+        archive.truncated = truncated
+        return archive, truncated
+
     def _reduce_states(self, states: List[Dict],
                        seconds: float) -> SweepResult:
         """Merge worker states into one SweepResult.  The top-k merges are
         stable in span order, so ties resolve exactly as the single-process
         streaming reduction would."""
+        if self._portfolio:
+            return self._reduce_states_portfolio(states, seconds)
         resumed = sum(st.get("resumed", 0) for st in states)
         n_eval = sum(int(st["carry"]["n_eval"]) for st in states)
         n_super = sum(int(st["carry"]["n_super"]) for st in states)
@@ -628,15 +1000,78 @@ class SweepEngine:
             archive_truncated=truncated,
             stall_topk_val=stall_val,
             stall_topk_ids=stall_id,
+            archive_capacity=archive.capacity,
         )
 
+    def _reduce_states_portfolio(self, states: List[Dict],
+                                 seconds: float) -> SweepResult:
+        """Portfolio merge: per-scenario results nested under the robust
+        top-level result (the same stable span-order reduction per group)."""
+        S, S1, k = len(self.scenarios), self._n_groups, self.topk
+        resumed = sum(st.get("resumed", 0) for st in states)
+        n_eval = sum(int(st["carry"]["n_eval"]) for st in states)
+        n_super = np.sum([np.asarray(st["carry"]["n_super"])
+                          for st in states], axis=0)
+        topk_val, topk_id = self._merge_topk_rows(
+            states, "topk_val", "topk_id", S1 * 3, k)
+        topk_val = topk_val.reshape(S1, 3, k)
+        topk_id = topk_id.reshape(S1, 3, k)
+        stall_val = stall_id = None
+        if self.stall_topk:
+            sk = self.stall_topk
+            stall_val, stall_id = self._merge_topk_rows(
+                states, "stall_topk_val", "stall_topk_id", S * _N_STALL, sk)
+            stall_id = np.where(np.isfinite(stall_val), stall_id, -1)
+            stall_val = stall_val.reshape(S, _N_STALL, sk)
+            stall_id = stall_id.reshape(S, _N_STALL, sk)
+        archive_lists = [st["archives"] for st in states]
+        pps = (n_eval - resumed) / max(seconds, 1e-9)
+
+        def group_result(g: int, ref: np.ndarray, **extra) -> SweepResult:
+            archive, truncated = self._merge_archives(archive_lists, g)
+            order = np.argsort(archive.ids, kind="stable")
+            return SweepResult(
+                n_evaluated=n_eval, n_superior=int(n_super[g]),
+                pareto_y=archive.y[order], pareto_ids=archive.ids[order],
+                topk_val=topk_val[g], topk_ids=topk_id[g],
+                ref_point=np.asarray(ref, dtype=np.float64).copy(),
+                seconds=0.0, points_per_sec=0.0,
+                archive_truncated=truncated,
+                archive_capacity=archive.capacity, **extra)
+
+        per = {s.name: group_result(
+                   i, self.ref_points[i],
+                   stall_topk_val=(stall_val[i] if self.stall_topk else None),
+                   stall_topk_ids=(stall_id[i] if self.stall_topk else None))
+               for i, s in enumerate(self.scenarios)}
+        res = group_result(S, self.ref_point)
+        res.seconds = seconds
+        res.points_per_sec = pps
+        res.scenario_names = tuple(s.name for s in self.scenarios)
+        res.robust = self.robust
+        res.per_scenario = per
+        return res
+
     # ------------------------------------------------------------------
+    def _archives_of(self, state: Dict) -> List[ParetoArchive]:
+        return state["archives"] if self._portfolio else [state["archive"]]
+
     def _save(self, path: str, state: Dict, fp_extra: str = "") -> None:
-        archive: ParetoArchive = state["archive"]
+        archives = self._archives_of(state)
         extra = {}
         if self.stall_topk:
             extra["stall_topk_val"] = np.asarray(state["carry"]["stall_topk_val"])
             extra["stall_topk_id"] = np.asarray(state["carry"]["stall_topk_id"])
+        for g, a in enumerate(archives[1:], start=1):
+            # portfolio: scenario archives 1..S1-1 ride alongside the first
+            extra[f"archive{g}_y"] = a.y
+            extra[f"archive{g}_ids"] = a.ids
+            extra[f"archive{g}_seen"] = a.n_seen
+            extra[f"archive{g}_truncated"] = a.truncated
+        if self._portfolio:
+            # the robust ref [1, 1, area] alone cannot detect changed
+            # latency refs (its latency entries are 1 by construction)
+            extra["ref_points"] = self.ref_points
         np.savez(
             path,
             version=_FMT_VERSION,
@@ -646,10 +1081,10 @@ class SweepEngine:
             n_eval=np.asarray(state["carry"]["n_eval"]),
             topk_val=np.asarray(state["carry"]["topk_val"]),
             topk_id=np.asarray(state["carry"]["topk_id"]),
-            archive_y=archive.y,
-            archive_ids=archive.ids,
-            archive_seen=archive.n_seen,
-            archive_truncated=archive.truncated,
+            archive_y=archives[0].y,
+            archive_ids=archives[0].ids,
+            archive_seen=archives[0].n_seen,
+            archive_truncated=archives[0].truncated,
             ref_point=self.ref_point,
             **extra,
         )
@@ -672,27 +1107,52 @@ class SweepEngine:
                 "checkpoint was produced with a different reference point; "
                 "its superiority counts cannot be continued — refusing to "
                 "resume")
-        archive = ParetoArchive(3, capacity=self.archive_capacity)
-        archive.y = np.asarray(z["archive_y"], dtype=np.float64)
-        archive.ids = np.asarray(z["archive_ids"], dtype=np.int64)
-        archive.n_seen = int(z["archive_seen"])
-        archive.truncated = bool(z["archive_truncated"])
+        if self._portfolio:
+            if "ref_points" not in z.files or not np.allclose(
+                    np.asarray(z["ref_points"]), self.ref_points, rtol=1e-6):
+                raise ValueError(
+                    "checkpoint was produced with different per-scenario "
+                    "reference points; its robust scalarization cannot be "
+                    "continued — refusing to resume")
+
+        def load_archive(prefix: str) -> ParetoArchive:
+            a = ParetoArchive(3, capacity=self.archive_capacity)
+            a.y = np.asarray(z[f"{prefix}_y"], dtype=np.float64)
+            a.ids = np.asarray(z[f"{prefix}_ids"], dtype=np.int64)
+            a.n_seen = int(z[f"{prefix}_seen"])
+            a.truncated = bool(z[f"{prefix}_truncated"])
+            if a.auto:
+                a._peak = len(a)
+                a.capacity = max(a.auto_floor,
+                                 int(a.auto_headroom * a._peak))
+            return a
+
         carry = {
             "n_super": jnp.asarray(z["n_super"]),
             "n_eval": jnp.asarray(z["n_eval"]),
             "topk_val": jnp.asarray(z["topk_val"]),
             "topk_id": jnp.asarray(z["topk_id"]),
         }
+        if self._portfolio and carry["topk_val"].ndim != 3:
+            raise ValueError("checkpoint is single-scenario but this engine "
+                             "sweeps a portfolio; refusing to resume")
         if self.stall_topk:
             if "stall_topk_val" not in z.files:
                 raise ValueError(
                     "checkpoint carries no per-stall-class top-k state but "
                     "this engine was built with stall_topk > 0; refusing to "
                     "resume")
-            if z["stall_topk_val"].shape[1] != self.stall_topk:
+            if z["stall_topk_val"].shape[-1] != self.stall_topk:
                 raise ValueError(
                     "checkpoint stall_topk width differs from this engine's; "
                     "refusing to resume")
             carry["stall_topk_val"] = jnp.asarray(z["stall_topk_val"])
             carry["stall_topk_id"] = jnp.asarray(z["stall_topk_id"])
-        return {"next": int(z["next"]), "carry": carry, "archive": archive}
+        if self._portfolio:
+            archives = [load_archive("archive")]
+            archives += [load_archive(f"archive{g}")
+                         for g in range(1, self._n_groups)]
+            return {"next": int(z["next"]), "carry": carry,
+                    "archives": archives}
+        return {"next": int(z["next"]), "carry": carry,
+                "archive": load_archive("archive")}

@@ -13,11 +13,24 @@ Builders:
 * :func:`from_arch` — operator graph for any assigned architecture config
   (dense / MoE / hybrid-SSM / RWKV / enc-dec / VLM backbone), so every arch
   doubles as a DSE workload.
+
+Portfolio pieces:
+
+* :class:`WorkloadStack` — the deduped union of many workloads' op tables:
+  identical ``(kind, flops, bytes, m, n, k, comm_bytes, tp)`` rows across
+  workloads collapse to one unique op, with a ``(W x n_unique)`` count
+  matrix and per-workload gather maps.  The stacked evaluator path runs the
+  op-term model ONCE over the union and reassembles every workload by
+  gather — near-flat cost in W.
+* :class:`Scenario` + :func:`paper_suite` / :func:`zoo_suite` — named
+  (prefill, decode) workload pairs: the paper's GPT-3 pair, or one scenario
+  per assigned architecture config (``repro.configs``), so the whole
+  workload zoo rides the sweep/campaign stack.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -61,6 +74,10 @@ class Workload:
             "kind": kinds, "flops": f("flops"), "bytes": f("bytes"),
             "m": f("m"), "n": f("n"), "k": f("k"),
             "comm_bytes": f("comm_bytes"), "count": f("count"),
+            # per-op TP degree: constant within one workload, but the stacked
+            # union mixes workloads, so tp rides the op table like every
+            # other field (collective times depend on it)
+            "tp": np.full(len(self.ops), float(self.tp), dtype=np.float64),
         }
 
     @property
@@ -325,3 +342,121 @@ def from_arch(cfg, batch: int, seq: int, tp: int = 8, decode: bool = False,
     mode = "decode" if decode else "prefill"
     return Workload(f"{cfg.name}-{mode}-b{batch}-s{seq}-kv{kv_len}-tp{tp}",
                     ops, tp=tp)
+
+
+# --------------------------------------------------------------------------
+# Stacked-workload representation: the deduped union of many op tables
+# --------------------------------------------------------------------------
+
+# fields that define an op's identity for dedup (count is multiplicity and
+# lives in the count matrix; name is presentation-only)
+STACK_KEY_FIELDS = ("kind", "flops", "bytes", "m", "n", "k", "comm_bytes",
+                    "tp")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadStack:
+    """Flat union of W workloads' op tables with cross-workload dedup.
+
+    ``unique`` holds one row per distinct ``STACK_KEY_FIELDS`` tuple across
+    all workloads (first-occurrence order).  Per workload, ``op_map`` gathers
+    its ops (in original op order) out of the union and ``counts`` carries
+    its own multiplicities, so a model that evaluates the union ONCE can
+    reassemble every workload's per-op outputs bit-identically — the
+    representation behind the stacked evaluator path and the portfolio
+    sweep.  ``count_matrix[w, u]`` aggregates workload w's total count of
+    unique op u (duplicate rows within one workload sum).
+    """
+    names: Tuple[str, ...]
+    unique: Dict[str, np.ndarray]            # field -> (n_unique,)
+    op_map: Dict[str, np.ndarray]            # name -> (n_ops_w,) int32
+    counts: Dict[str, np.ndarray]            # name -> (n_ops_w,) float64
+    count_matrix: np.ndarray                 # (W, n_unique) float64
+
+    @property
+    def n_unique(self) -> int:
+        return int(self.count_matrix.shape[1])
+
+    @property
+    def total_ops(self) -> int:
+        return sum(m.shape[0] for m in self.op_map.values())
+
+    @classmethod
+    def build(cls, workloads: Mapping[str, "Workload"]) -> "WorkloadStack":
+        names = tuple(workloads)
+        uniq: Dict[tuple, int] = {}
+        rows: List[tuple] = []
+        op_map: Dict[str, np.ndarray] = {}
+        counts: Dict[str, np.ndarray] = {}
+        per_wl_keys: Dict[str, List[tuple]] = {}
+        for nm in names:
+            a = workloads[nm].arrays()
+            keys = [tuple(a[f][i] for f in STACK_KEY_FIELDS)
+                    for i in range(len(a["count"]))]
+            per_wl_keys[nm] = keys
+            pos = np.empty(len(keys), dtype=np.int32)
+            for i, key in enumerate(keys):
+                u = uniq.get(key)
+                if u is None:
+                    u = uniq[key] = len(rows)
+                    rows.append(key)
+                pos[i] = u
+            op_map[nm] = pos
+            counts[nm] = np.asarray(a["count"], dtype=np.float64)
+        unique = {
+            f: np.array([r[j] for r in rows],
+                        dtype=np.int32 if f == "kind" else np.float64)
+            for j, f in enumerate(STACK_KEY_FIELDS)
+        }
+        cmat = np.zeros((len(names), len(rows)), dtype=np.float64)
+        for w, nm in enumerate(names):
+            np.add.at(cmat[w], op_map[nm], counts[nm])
+        return cls(names=names, unique=unique, op_map=op_map, counts=counts,
+                   count_matrix=cmat)
+
+
+# --------------------------------------------------------------------------
+# Workload suites: named (prefill, decode) scenario pairs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One latency scenario: a (prefill, decode) workload pair whose
+    objective triple is ``[prefill_latency, decode_latency, area]`` — the
+    portfolio generalization of the paper's (ttft, tpot, area)."""
+    name: str
+    prefill: str                 # workload key of the prefill objective
+    decode: str                  # workload key of the decode objective
+
+
+def paper_suite() -> Tuple[Dict[str, "Workload"], Tuple[Scenario, ...]]:
+    """The paper's GPT-3 pair as a one-scenario suite."""
+    wls = {"ttft": gpt3_layer_prefill(), "tpot": gpt3_layer_decode()}
+    return wls, (Scenario("gpt3", "ttft", "tpot"),)
+
+
+def zoo_suite(batch: int = 8, seq: int = 2048, tp: int = 8,
+              out_pos: int = 1024, smoke: bool = False,
+              archs: Optional[Tuple[str, ...]] = None,
+              ) -> Tuple[Dict[str, "Workload"], Tuple[Scenario, ...]]:
+    """Every assigned architecture config as a DSE scenario.
+
+    Each arch contributes a ``<arch>:prefill`` + ``<arch>:decode`` workload
+    pair (decode at KV length ``seq + out_pos``, mirroring the paper's TPOT
+    operating point).  ``smoke=True`` shrinks every config via
+    ``ArchConfig.smoke()`` for CPU-cheap tests; ``archs`` restricts to a
+    subset of config names.
+    """
+    from repro.configs import ARCHS           # leaf import (no cycle)
+    wls: Dict[str, Workload] = {}
+    scenarios: List[Scenario] = []
+    for name in sorted(archs if archs is not None else ARCHS):
+        cfg = ARCHS[name]
+        if smoke:
+            cfg = cfg.smoke()
+        wls[f"{name}:prefill"] = from_arch(cfg, batch, seq, tp=tp,
+                                           decode=False)
+        wls[f"{name}:decode"] = from_arch(cfg, batch, seq, tp=tp,
+                                          decode=True, kv_len=seq + out_pos)
+        scenarios.append(Scenario(name, f"{name}:prefill", f"{name}:decode"))
+    return wls, tuple(scenarios)

@@ -94,7 +94,7 @@ def test_report_cache_lru_keeps_hot_base(monkeypatch):
         ee.evaluate(d, step=step)
     # 12 unique designs -> exactly 12 dispatches despite capacity 4
     assert ev.dispatches - d0 == len(designs)
-    assert len(ee._reports) <= 4
+    assert len(ee._cache) <= 4
 
 
 def test_prefetch_batches_into_one_dispatch():

@@ -340,6 +340,48 @@ def test_campaign_runner_through_service_one_dispatch_per_round():
     assert svc.fused_dispatches <= res.rounds + k + 2
 
 
+def test_service_round_robin_fairness_no_starvation():
+    """A chatty client flooding the queue cannot starve a quiet one: with a
+    per-tick row cap, the round-robin drain serves EVERY client's first
+    request before any client's second — the quiet client's future resolves
+    on the very next tick, not after the flood drains."""
+    svc = EvalService(_fresh(), max_rows_per_tick=4)
+    chatty = [svc.submit(EvalRequest(SPACE.sample(RNG, 1), "objectives"),
+                         client="chatty") for _ in range(24)]
+    quiet = svc.submit(EvalRequest(SPACE.sample(RNG, 1), "objectives"),
+                       client="quiet")
+    svc.tick()
+    assert quiet.done()                          # served in the FIRST tick
+    assert not all(f.done() for f in chatty)     # the flood keeps queueing
+    ticks = 1
+    while not all(f.done() for f in chatty):
+        assert svc.tick() >= 0
+        ticks += 1
+        assert ticks < 50
+    assert ticks > 2                             # the cap really paced it
+    assert all(f.result().n == 1 for f in chatty)
+
+
+def test_service_fair_drain_rotates_between_clients():
+    """Unbounded ticks still resolve everything at once (the CampaignRunner
+    invariant), and leftovers preserve per-client FIFO order under a cap."""
+    svc = EvalService(_fresh())
+    futs = [svc.submit(EvalRequest(SPACE.sample(RNG, 2), "objectives"),
+                       client=f"c{i % 3}") for i in range(9)]
+    svc.tick()
+    assert all(f.done() for f in futs)           # one tick, everyone served
+    # capped: client order within a lane stays FIFO
+    svc2 = EvalService(_fresh(), max_rows_per_tick=1)
+    a1 = svc2.submit(EvalRequest(SPACE.sample(RNG, 1), "objectives"),
+                     client="a")
+    a2 = svc2.submit(EvalRequest(SPACE.sample(RNG, 1), "objectives"),
+                     client="a")
+    svc2.tick()
+    assert a1.done() and not a2.done()           # FIFO within the lane
+    svc2.tick()
+    assert a2.done()
+
+
 def test_service_composes_with_sharded_evaluator():
     """EvalService(ShardedEvaluator(...)): coalesce across clients, then
     shard the fused batch across workers — reports stay bit-identical."""
