@@ -1,0 +1,217 @@
+"""Fault-tolerance benchmark: chaos overhead, recovery latency, degradation.
+
+Measures the always-on evaluation stack's failure behaviour:
+
+* **chaos-off overhead** — the fault machinery (ChaosPool wrapper with an
+  empty plan, receiver-side validation, heartbeat registry) vs the plain
+  sharded path on the same batch; target < 2% wall-clock overhead;
+* **recovery latency vs fault rate** — seeded crash/slow/corrupt plans at
+  increasing rates; every run must stay bit-identical to the fault-free
+  report while wall clock grows only with the injected fault traffic;
+* **degradation-ladder hit rates** — an EvalService walked down each rung
+  (narrow -> proxy -> cached -> deadline) with the rung traffic counters
+  reported, and ZERO unhandled exceptions surfaced to clients;
+* **chaos sweep** — a 2-worker `SweepEngine.run` under a kill-and-replay
+  plan reproducing the clean Pareto front exactly.
+
+``smoke=True`` (the CI chaos smoke step) bounds every range for a
+sub-minute run and ASSERTS the bit-identity invariants instead of just
+reporting them.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.campaign import CampaignRunner
+from repro.distributed import (EvalService, FaultEvent, FaultPlan,
+                               ShardedEvaluator, WorkerFault)
+from repro.perfmodel import EvalRequest, ModelEvaluator, get_evaluator
+from repro.perfmodel.designspace import SPACE
+from repro.perfmodel.sweep import SweepEngine
+
+_WORKERS = 2
+
+
+def _fresh(tier: str = "proxy") -> ModelEvaluator:
+    return ModelEvaluator(get_evaluator(tier).models, tier=tier)
+
+
+def _identical(a, b) -> bool:
+    if not (np.array_equal(a.area, b.area) and a.workloads == b.workloads):
+        return False
+    return all(np.array_equal(a.latency[w], b.latency[w])
+               for w in a.workloads)
+
+
+def _timed(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+class _FlakyDetail:
+    """Service backend whose detailed path fails — exercises the ladder."""
+
+    def __init__(self, base):
+        self._b = base
+        self.workloads = base.workloads
+
+    def evaluate(self, request):
+        if request.detail != "objectives":
+            raise WorkerFault("detail backend down")
+        return self._b.evaluate(request)
+
+
+def run(smoke: bool = False, workers: int = _WORKERS) -> List[str]:
+    lines: List[str] = []
+    rng = np.random.default_rng(0)
+    batch = SPACE.sample(rng, 1_024 if smoke else 8_192)
+    repeats = 3 if smoke else 5
+
+    # ---- chaos-off overhead: full fault machinery, zero events ----
+    plain = ShardedEvaluator(_fresh(), workers=workers, validate=False)
+    armed = ShardedEvaluator(_fresh(), workers=workers, validate=True,
+                             fault_plan=FaultPlan())     # empty plan
+    req = EvalRequest(batch, detail="objectives")
+    ref = plain.evaluate(req)                            # warm both paths
+    armed_rep = armed.evaluate(req)
+    t_plain = _timed(lambda: plain.evaluate(req), repeats)
+    t_armed = _timed(lambda: armed.evaluate(req), repeats)
+    overhead = 100.0 * (t_armed - t_plain) / max(t_plain, 1e-9)
+    lines.append(f"faults,chaos_off_overhead_pct,{overhead:.2f}")
+    lines.append(f"faults,chaos_off_identical,"
+                 f"{int(_identical(armed_rep, ref))}")
+    plain.close()
+    armed.close()
+
+    # ---- recovery latency vs fault rate (bit-identical throughout) ----
+    rounds = 8 if smoke else 24          # cover the plan's dispatch ordinals
+    for rate in (0.0, 0.1, 0.3):
+        plan = FaultPlan.seeded(17, workers=workers,
+                                dispatches=rounds * workers, rate=rate,
+                                kinds=("crash", "slow", "corrupt"),
+                                delay_s=0.01)
+        ev = ShardedEvaluator(_fresh(), workers=workers, retries=8,
+                              fault_plan=plan)
+        t0 = time.perf_counter()
+        ok = True
+        for _ in range(rounds):
+            ok &= _identical(ev.evaluate(EvalRequest(batch, "objectives")),
+                             ref)
+        dt = time.perf_counter() - t0
+        if smoke:
+            assert ok, f"chaos rate={rate} broke bit-identity"
+            assert rate == 0.0 or sum(plan.fired.values()) > 0
+        lines.append(f"faults,recovery_identical_rate{rate},{int(ok)}")
+        lines.append(f"faults,recovery_seconds_rate{rate},{dt:.3f}")
+        lines.append(f"faults,recovery_retried_rate{rate},{ev.retried}")
+        lines.append(f"faults,recovery_fired_rate{rate},"
+                     f"{sum(plan.fired.values())}")
+        ev.close()
+
+    # ---- hang -> timeout -> evict -> re-register round trip ----
+    ev = ShardedEvaluator(_fresh(), workers=workers,
+                          fault_plan=FaultPlan([FaultEvent(0, 0, "hang")]),
+                          shard_timeout_s=0.3, speculate=False)
+    t0 = time.perf_counter()
+    rep = ev.evaluate(EvalRequest(batch, detail="objectives"))
+    dt = time.perf_counter() - t0
+    ok = _identical(rep, ref)
+    if smoke:
+        assert ok and ev.timeouts == 1 and ev.registry.reregistrations == 1
+    lines.append(f"faults,hang_recovery_identical,{int(ok)}")
+    lines.append(f"faults,hang_recovery_seconds,{dt:.3f}")
+    lines.append(f"faults,hang_evictions,{ev.registry.evictions}")
+    ev.close()
+
+    # ---- degradation-ladder hit rates (zero unhandled exceptions) ----
+    svc = EvalService(_fresh())
+    warm = SPACE.sample(rng, 64)
+    svc.evaluate(EvalRequest(warm, detail="ppa"))        # warm the row cache
+    svc.evaluator = _FlakyDetail(_fresh())
+    unhandled = 0
+    n_req = 16 if smoke else 64
+    futs = []
+    for i in range(n_req):
+        if i % 4 == 0:       # cached rung: rows already in the shared cache
+            fut = svc.submit(EvalRequest(warm[i % 64: i % 64 + 8], "stalls"))
+        elif i % 4 == 1:     # deadline rung: demoted before dispatch
+            fut = svc.submit(EvalRequest(SPACE.sample(rng, 8), "stalls"),
+                             deadline_s=0.0)
+        else:                # proxy rung: detailed dispatch fails, demote
+            fut = svc.submit(EvalRequest(SPACE.sample(rng, 8), "ppa"))
+        futs.append(fut)
+        svc.tick()
+    for fut in futs:
+        if fut.exception(timeout=1) is not None:
+            unhandled += 1
+    tel = svc.telemetry()
+    served = tel["coalesced_requests"] + tel["cache_hits"]
+    lines.append(f"faults,degrade_requests,{n_req}")
+    lines.append(f"faults,degrade_unhandled,{unhandled}")
+    for rung in ("deadline", "narrow", "proxy", "cached"):
+        lines.append(f"faults,degrade_{rung}_hits,{tel['degraded'][rung]}")
+    lines.append(f"faults,degrade_served,{served}")
+    if smoke:
+        assert unhandled == 0, "degradation ladder leaked an exception"
+        assert tel["degraded"]["proxy"] > 0
+        assert tel["degraded"]["deadline"] > 0
+
+    # ---- chaos sweep: kill worker 0 mid-sweep, replay, exact merge ----
+    eng = SweepEngine(get_evaluator("proxy"), chunk_size=8_192)
+    n = (4 if smoke else 16) * 8_192
+    t0 = time.perf_counter()
+    clean = eng.run(0, n)
+    t_clean = time.perf_counter() - t0
+    plan = FaultPlan([FaultEvent(0, 1, "crash"),
+                      FaultEvent(1, 1, "slow", delay_s=0.01)])
+    t0 = time.perf_counter()
+    res = eng.run(0, n, workers=2, fault_plan=plan)
+    t_chaos = time.perf_counter() - t0
+    ok = (np.array_equal(clean.pareto_ids, res.pareto_ids)
+          and np.array_equal(clean.topk_ids, res.topk_ids)
+          and clean.n_superior == res.n_superior)
+    if smoke:
+        assert ok, "chaos sweep broke bit-identity"
+        assert plan.fired["crash"] == 1
+    lines.append(f"faults,sweep_chaos_identical,{int(ok)}")
+    lines.append(f"faults,sweep_clean_seconds,{t_clean:.2f}")
+    lines.append(f"faults,sweep_chaos_seconds,{t_chaos:.2f}")
+
+    # ---- campaign through the service under seeded chaos ----
+    budget = 8 if smoke else 16
+    seeds = {"memory_bw": SPACE.sample(np.random.default_rng(1), 2)}
+    clean_res = CampaignRunner(EvalService(_fresh()),
+                               proxy=get_evaluator("proxy"), seed=0).run(
+        budget=budget, seeds={k: v.copy() for k, v in seeds.items()})
+    plan = FaultPlan.seeded(11, workers=workers, dispatches=64, rate=0.25,
+                            kinds=("crash", "slow", "corrupt"), delay_s=0.01)
+    sharded = ShardedEvaluator(_fresh(), workers=workers, retries=8,
+                               fault_plan=plan)
+    chaos_svc = EvalService(sharded)
+    res = CampaignRunner(chaos_svc, proxy=get_evaluator("proxy"),
+                         seed=0).run(budget=budget, seeds=seeds)
+    ok = ([s.idx.tolist() for s in res.samples]
+          == [s.idx.tolist() for s in clean_res.samples]
+          and res.phv == clean_res.phv)
+    if smoke:
+        assert ok, "chaos campaign diverged from the clean run"
+        assert res.service_counters["campaign_resubmits"] == 0
+    lines.append(f"faults,campaign_chaos_identical,{int(ok)}")
+    lines.append(f"faults,campaign_faults_fired,"
+                 f"{sum(plan.fired.values())}")
+    lines.append(f"faults,campaign_resubmits,"
+                 f"{res.service_counters['campaign_resubmits']}")
+    sharded.close()
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in run(smoke=True):
+        print(ln)

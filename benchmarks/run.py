@@ -24,8 +24,8 @@ def main() -> None:
                          "space once — a few seconds)")
     ap.add_argument("--only", default=None,
                     help="comma list: table3,fig45,fig6,budget20,table4,"
-                         "sweep,campaigns,portfolio,distributed,kernels,"
-                         "archs,ablation")
+                         "sweep,campaigns,portfolio,distributed,faults,"
+                         "kernels,archs,ablation")
     args = ap.parse_args()
     if args.full and args.smoke:
         raise SystemExit("--full and --smoke are mutually exclusive")
@@ -69,6 +69,10 @@ def main() -> None:
         from benchmarks import bench_distributed
         benches.append(("distributed",
                         lambda: bench_distributed.run(smoke=args.smoke)))
+    if only is None or "faults" in only:
+        from benchmarks import bench_faults
+        benches.append(("faults",
+                        lambda: bench_faults.run(smoke=args.smoke)))
     if only is None or "kernels" in only:
         from benchmarks import bench_kernels
         benches.append(("kernels", bench_kernels.run))

@@ -93,6 +93,9 @@ class CampaignSetResult:
     policy: str = "uniform"
     early_stopped: Dict[str, int] = dataclasses.field(default_factory=dict)
     # ^ campaign label -> round at which the adaptive policy stopped it
+    service_counters: Optional[dict] = None
+    # ^ EvalService.telemetry() snapshot (degradation ladder counters,
+    #   resubmits) when the runner drove a service; None otherwise
 
     def telemetry_dict(self) -> dict:
         return {
@@ -102,6 +105,7 @@ class CampaignSetResult:
             "dispatches": self.dispatches,
             "policy": self.policy,
             "early_stopped": dict(self.early_stopped),
+            "service": self.service_counters,
             "records": [dataclasses.asdict(r) for r in self.telemetry],
         }
 
@@ -177,6 +181,7 @@ class CampaignRunner:
         self.evaluator = as_evaluator(evaluator)
         self._service = (self.evaluator
                          if isinstance(self.evaluator, EvalService) else None)
+        self.service_resubmits = 0       # failed-request resubmissions
         if scenario is not None:
             # pick a zoo-suite scenario by name: its (prefill, decode)
             # workload pair becomes this runner's objective pair
@@ -311,8 +316,19 @@ class CampaignRunner:
                 self._service.tick()
                 while not all(f.done() for f in futures):
                     self._service.tick()         # row-capped service ticks
-                for fut in futures:
-                    fut.result()
+                # worker loss heals between ticks: a failed request gets
+                # ONE resubmission before its error is surfaced
+                retried = []
+                for p, fut in zip(proposals, futures):
+                    if fut.exception() is not None:
+                        self.service_resubmits += 1
+                        retried.append(self._service.submit(
+                            EvalRequest(p[2][None, :], detail="stalls"),
+                            client=p[0]))
+                while retried and not all(f.done() for f in retried):
+                    self._service.tick()
+                for fut in retried:
+                    fut.result()                 # second failure is real
             else:
                 self.ee.prefetch(np.stack([p[2] for p in proposals]))
             for label, camp, idx, directive in proposals:
@@ -363,4 +379,7 @@ class CampaignRunner:
             rounds=rounds,
             policy=self.policy,
             early_stopped=early_stopped,
+            service_counters=(dict(self._service.telemetry(),
+                                   campaign_resubmits=self.service_resubmits)
+                              if self._service is not None else None),
         )

@@ -1,30 +1,46 @@
 """Distributed evaluation service layer.
 
-Two composable pieces turn the single-process evaluator into a service
-that can absorb heavy concurrent DSE traffic:
+Three composable pieces turn the single-process evaluator into an
+always-on service that can absorb heavy concurrent DSE traffic AND
+survive worker failure:
 
 * :class:`~repro.distributed.sharded.ShardedEvaluator` — fans ONE
   :class:`~repro.perfmodel.evaluator.EvalRequest`'s design batch across N
   workers (in-process threads, spawned processes, or per-device pins) and
   reassembles a single bit-identical
-  :class:`~repro.perfmodel.evaluator.PPAReport`, with per-shard retry and
-  straggler re-dispatch.  ``get_evaluator(..., workers=N)`` wraps the
-  paper evaluators in one.
+  :class:`~repro.perfmodel.evaluator.PPAReport`, with per-shard retry
+  (jittered-backoff :class:`~repro.runtime.fault.RetryPolicy`), shard
+  timeouts, receiver-side payload validation, straggler re-dispatch,
+  heartbeat-tracked worker liveness and elastic pool resize.
+  ``get_evaluator(..., workers=N)`` wraps the paper evaluators in one.
 * :class:`~repro.distributed.service.EvalService` — an async request
   queue whose coalescing batcher merges concurrent requests from ANY
   number of clients (K campaigns, baselines, benches) into one fused
   dispatch per tick, resolved via futures and a shared cross-client
-  report cache.
+  report cache.  On worker loss or deadline pressure a request DEGRADES
+  along a declared ladder (narrow the pool -> objectives proxy -> cached
+  rows) instead of failing.
+* :mod:`~repro.distributed.faults` — the chaos harness proving the
+  above: a seeded deterministic :class:`~repro.distributed.faults.
+  FaultPlan` of crash/hang/slow/corrupt events, a
+  :class:`~repro.distributed.faults.ChaosPool` wrapper composing with
+  every pool, and the :class:`~repro.distributed.faults.WorkerRegistry`
+  liveness tracker.
 
-The two compose: ``EvalService(ShardedEvaluator(base, workers=N))``
-coalesces across clients and shards across workers.  The multi-worker
-full-space sweep lives with its engine:
-``SweepEngine(...).run(workers=N)``.
+The pieces compose: ``EvalService(ShardedEvaluator(base, workers=N,
+fault_plan=plan))`` coalesces across clients, shards across workers and
+injects failures deterministically.  The multi-worker full-space sweep
+lives with its engine: ``SweepEngine(...).run(workers=N,
+fault_plan=plan)``.
 """
 
-from repro.distributed.service import EvalService
+from repro.distributed.faults import (FAULT_KINDS, ChaosPool, FaultEvent,
+                                      FaultPlan, WorkerFault, WorkerRegistry)
+from repro.distributed.service import DEGRADE_RUNGS, EvalService
 from repro.distributed.sharded import (MODES, ShardedEvaluator, ShardPayload,
                                        concat_reports)
 
 __all__ = ["EvalService", "ShardedEvaluator", "ShardPayload",
-           "concat_reports", "MODES"]
+           "concat_reports", "MODES", "DEGRADE_RUNGS",
+           "FaultPlan", "FaultEvent", "ChaosPool", "WorkerFault",
+           "WorkerRegistry", "FAULT_KINDS"]

@@ -58,6 +58,9 @@ from repro.perfmodel.evaluator import (DETAILS, EvalRequest, PPAReport,
 _DETAIL_LEVEL = {name: i for i, name in enumerate(DETAILS)}
 
 
+DEGRADE_RUNGS = ("narrow", "proxy", "cached")
+
+
 @dataclass
 class _Pending:
     idx: np.ndarray                      # (n, n_params) int32
@@ -65,6 +68,7 @@ class _Pending:
     names: Tuple[str, ...]
     future: Future
     client: str
+    deadline: Optional[float] = None     # absolute monotonic deadline
 
 
 def _assemble(rows: List[PPAReport], names: Tuple[str, ...],
@@ -113,12 +117,28 @@ class EvalService:
         in the queue longer than ``window_s`` (the coalescing window).
         Without it, call :meth:`tick` yourself — synchronous ``evaluate``
         calls also self-tick.
+    degrade:
+        The graceful-degradation ladder walked when a fused dispatch
+        fails (or a request's ``deadline_s`` expires), in order:
+
+        * ``narrow`` — halve the sharded evaluator's worker pool
+          (``resize``) and retry the dispatch, repeating down to one
+          worker (worker-loss recovery);
+        * ``proxy``  — retry the dispatch at ``objectives`` detail (the
+          cheap proxy: responses are demoted but correct);
+        * ``cached`` — serve each request from whatever detail the shared
+          row cache holds (possibly shallower than asked).
+
+        Only a request that exhausts every rung sees the evaluator's
+        exception; ``service.degraded`` counts rung traffic and requests
+        NEVER crash the tick.
     """
 
     def __init__(self, evaluator, *, cache_rows: int = 65_536,
                  cache: Optional[RowCache] = None,
                  max_rows_per_tick: Optional[int] = None,
-                 autostart: bool = False, window_s: float = 0.002):
+                 autostart: bool = False, window_s: float = 0.002,
+                 degrade: Tuple[str, ...] = DEGRADE_RUNGS):
         self.evaluator = as_evaluator(evaluator)
         self.space = self.evaluator.space
         self.tier = self.evaluator.tier
@@ -135,11 +155,18 @@ class EvalService:
         self.row_cache: RowCache = (cache if cache is not None
                                     else RowCache(cache_rows))
         self._closed = False
+        unknown_rungs = set(degrade) - set(DEGRADE_RUNGS)
+        if unknown_rungs:
+            raise ValueError(f"unknown degrade rungs {sorted(unknown_rungs)}; "
+                             f"choose from {DEGRADE_RUNGS}")
+        self.degrade = tuple(degrade)
         # traffic counters
         self.submits = 0                 # requests received
         self.cache_hits = 0              # requests resolved straight from cache
         self.fused_dispatches = 0        # ticks that reached the evaluator
         self.coalesced_requests = 0      # requests resolved by a fused tick
+        # degradation counters: deadline demotions + ladder rung traffic
+        self.degraded = {"deadline": 0, "narrow": 0, "proxy": 0, "cached": 0}
         self._batcher: Optional[threading.Thread] = None
         if autostart:
             self._batcher = threading.Thread(target=self._batch_loop,
@@ -173,14 +200,17 @@ class EvalService:
         return sum(len(q) for q in self._queues.values())
 
     # -- async API ------------------------------------------------------
-    def submit(self, request: EvalRequest, *, client: str = "") -> Future:
+    def submit(self, request: EvalRequest, *, client: str = "",
+               deadline_s: Optional[float] = None) -> Future:
         """Enqueue one request; the returned future resolves to a PPAReport.
 
         ``client`` names the submitting party for round-robin fairness
         (campaign label, bench name, ...); anonymous submitters share one
         lane.  Requests whose rows are ALL cached at sufficient detail
         resolve immediately (no queue, no dispatch) — the shared
-        cross-client cache path.
+        cross-client cache path.  ``deadline_s`` bounds queue latency:
+        a request still queued past it is DEGRADED (cached rows, then
+        ``objectives`` proxy detail) rather than failed.
         """
         idx = np.atleast_2d(np.asarray(request.idx, dtype=np.int32))
         names = (self.workloads if request.workloads is None
@@ -189,7 +219,10 @@ class EvalService:
         if unknown:
             raise KeyError(f"unknown workloads {sorted(unknown)}; "
                            f"have {self.workloads}")
-        pend = _Pending(idx, request.detail, names, Future(), client)
+        deadline = (None if deadline_s is None
+                    else time.monotonic() + float(deadline_s))
+        pend = _Pending(idx, request.detail, names, Future(), client,
+                        deadline)
         with self._lock:
             if self._closed:
                 raise RuntimeError("EvalService is closed")
@@ -240,15 +273,34 @@ class EvalService:
         """Drain the queue into ONE fused dispatch; resolve every future.
 
         Returns the number of design rows actually dispatched (0 when the
-        queue was empty or fully cache-resident).  The fused dispatch runs
-        OUTSIDE the service lock, so concurrent clients keep submitting
-        (their requests form the next tick's batch); an evaluator failure
-        lands on the drained futures as an exception instead of orphaning
-        them, so blocked ``result()`` callers — and the autostart batcher —
-        always make progress.
+        queue was empty, fully cache-resident, or the dispatch failed).
+        The fused dispatch runs OUTSIDE the service lock, so concurrent
+        clients keep submitting (their requests form the next tick's
+        batch).  A dispatch failure walks the ``degrade`` ladder (narrow
+        the sharded pool -> objectives proxy -> cached rows) before ANY
+        future sees an exception, so blocked ``result()`` callers — and
+        the autostart batcher — always make progress.
         """
         with self._lock:
             pending = self._drain_fair()
+            if not pending:
+                return 0
+            now = time.monotonic()
+            still: List[_Pending] = []
+            for p in pending:
+                if p.deadline is not None and now >= p.deadline:
+                    # deadline pressure: cached rows first, else demote
+                    # the request to the cheap proxy detail for this tick
+                    if ("cached" in self.degrade
+                            and self._try_resolve_degraded(p)):
+                        self.degraded["deadline"] += 1
+                        self.coalesced_requests += 1
+                        continue
+                    if p.detail != "objectives":
+                        p.detail = "objectives"
+                        self.degraded["deadline"] += 1
+                still.append(p)
+            pending = still
             if not pending:
                 return 0
             level = max(_DETAIL_LEVEL[p.detail] for p in pending)
@@ -265,26 +317,61 @@ class EvalService:
                         seen.add(key)
                         fresh_keys.append(key)
                         fresh_rows.append(row)
-        rep = None
-        if fresh_rows:
-            try:                               # dispatch without the lock
-                rep = self.evaluator.evaluate(
-                    EvalRequest(np.stack(fresh_rows), detail=detail))
-            except BaseException as exc:
-                for p in pending:
-                    p.future.set_exception(exc)
-                return 0
+        rep, used_detail, exc = None, detail, None
+        if fresh_rows:                         # dispatch without the lock
+            rep, used_detail, exc = self._dispatch_degrading(
+                np.stack(fresh_rows), detail)
         with self._lock:
             if rep is not None:
                 self.fused_dispatches += 1
                 for i, key in enumerate(fresh_keys):
-                    self.row_cache.put(key, detail, rep.row(i))
+                    self.row_cache.put(key, used_detail, rep.row(i))
             for p in pending:
-                self.coalesced_requests += 1
-                if not self._try_resolve(p):   # unreachable by construction
-                    p.future.set_exception(
-                        RuntimeError("coalesced rows missing from cache"))
-        return len(fresh_rows)
+                if self._try_resolve(p):
+                    self.coalesced_requests += 1
+                    continue
+                # last rung: serve whatever detail the cache holds
+                if ("cached" in self.degrade
+                        and self._try_resolve_degraded(p)):
+                    self.degraded["cached"] += 1
+                    self.coalesced_requests += 1
+                    continue
+                p.future.set_exception(
+                    exc if exc is not None else
+                    RuntimeError("coalesced rows missing from cache"))
+        return len(fresh_rows) if rep is not None else 0
+
+    def _dispatch_degrading(self, rows: np.ndarray, detail: str):
+        """One fused dispatch, degraded along the ladder on failure.
+
+        Returns ``(report | None, detail actually evaluated, last error)``.
+        """
+        try:
+            return (self.evaluator.evaluate(EvalRequest(rows, detail=detail)),
+                    detail, None)
+        except BaseException as exc:
+            last: BaseException = exc
+        if "narrow" in self.degrade:
+            # worker-loss recovery: halve the sharded pool and retry,
+            # down to a single worker
+            while (getattr(self.evaluator, "workers", 1) > 1
+                   and hasattr(self.evaluator, "resize")):
+                self.evaluator.resize(max(1, self.evaluator.workers // 2))
+                self.degraded["narrow"] += 1
+                try:
+                    return (self.evaluator.evaluate(
+                        EvalRequest(rows, detail=detail)), detail, None)
+                except BaseException as exc:
+                    last = exc
+        if "proxy" in self.degrade and detail != "objectives":
+            try:
+                rep = self.evaluator.evaluate(
+                    EvalRequest(rows, detail="objectives"))
+                self.degraded["proxy"] += 1
+                return rep, "objectives", None
+            except BaseException as exc:
+                last = exc
+        return None, detail, last
 
     def _try_resolve(self, pend: _Pending) -> bool:
         """Resolve a request from cache alone (caller holds the lock)."""
@@ -297,6 +384,40 @@ class EvalService:
             rows.append(ent)
         pend.future.set_result(_assemble(rows, pend.names, pend.detail))
         return True
+
+    def _try_resolve_degraded(self, pend: _Pending) -> bool:
+        """Resolve from cache at WHATEVER detail it holds (caller holds the
+        lock): the response is demoted to the shallowest cached level of
+        its rows — degraded service beats no service."""
+        rows: List[PPAReport] = []
+        floor = pend.detail
+        for row in pend.idx:
+            ent = self.row_cache.get_any(RowCache.key(row), pend.names)
+            if ent is None:
+                return False
+            d, rep = ent
+            if _DETAIL_LEVEL[d] < _DETAIL_LEVEL[floor]:
+                floor = d
+            rows.append(rep)
+        pend.future.set_result(_assemble(rows, pend.names, floor))
+        return True
+
+    def telemetry(self) -> dict:
+        """Service + degradation counters (plus the evaluator's, if any)."""
+        out = {
+            "submits": self.submits,
+            "cache_hits": self.cache_hits,
+            "fused_dispatches": self.fused_dispatches,
+            "coalesced_requests": self.coalesced_requests,
+            "degraded": dict(self.degraded),
+        }
+        for name in ("dispatches", "worker_dispatches", "retried",
+                     "straggler_redispatches", "timeouts",
+                     "corrupt_rejected", "resizes"):
+            val = getattr(self.evaluator, name, None)
+            if isinstance(val, int):
+                out[f"evaluator_{name}"] = val
+        return out
 
     # -- synchronous Evaluator facade ----------------------------------
     def evaluate(self, request: EvalRequest) -> PPAReport:

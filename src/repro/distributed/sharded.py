@@ -23,16 +23,28 @@ Worker pools
 
 Fault handling
 --------------
-A shard that raises is retried up to ``retries`` times on a fresh worker;
-a straggler — a shard still pending after ``straggler_factor`` x the
-median completed-shard time — is speculatively re-dispatched and whichever
-twin finishes first wins (results are identical by construction, so the
-race is benign).  ``worker_dispatches`` / ``retried`` /
-``straggler_redispatches`` count the traffic.
+A shard that raises — or whose report fails the receiver-side integrity
+check (shape mismatch, non-finite or non-positive values: the
+corrupt-payload guard) — is retried on a fresh worker under a
+:class:`~repro.runtime.fault.RetryPolicy` (budget + jittered exponential
+backoff); a shard still pending past ``shard_timeout_s`` is declared
+lost, its worker slot is evicted from the :class:`~repro.distributed.
+faults.WorkerRegistry` and a replacement re-registers (``elastic=True``
+additionally resizes the pool via :func:`~repro.runtime.elastic.
+plan_elastic_pool`).  A straggler — a shard still pending after
+``straggler_factor`` x the median completed-shard time — is speculatively
+re-dispatched and whichever twin finishes first wins (results are
+identical by construction, so the race is benign).  ``worker_dispatches``
+/ ``retried`` / ``timeouts`` / ``corrupt_rejected`` /
+``straggler_redispatches`` / ``resizes`` count the traffic.  A seeded
+:class:`~repro.distributed.faults.FaultPlan` (``fault_plan=``) wraps the
+pool in a :class:`~repro.distributed.faults.ChaosPool` for deterministic
+failure injection without real process kills.
 """
 from __future__ import annotations
 
 import itertools
+import math
 import pickle
 import time
 from concurrent.futures import (FIRST_COMPLETED, Future, ProcessPoolExecutor,
@@ -42,8 +54,12 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.distributed.faults import (ChaosPool, FaultPlan, WorkerFault,
+                                      WorkerRegistry)
 from repro.perfmodel.evaluator import (EvalRequest, ModelEvaluator, PPAReport,
                                        as_evaluator)
+from repro.runtime.elastic import plan_elastic_pool
+from repro.runtime.fault import RetryPolicy
 
 MODES = ("auto", "inline", "thread", "process", "device")
 
@@ -104,6 +120,9 @@ class _InlinePool:
             fut.set_exception(exc)
         return fut
 
+    def resize(self, workers: int) -> None:
+        pass                                   # always exactly one worker
+
     def close(self) -> None:
         pass
 
@@ -121,6 +140,18 @@ class _ThreadPool:
     def submit(self, payload: ShardPayload) -> Future:
         return self._ex.submit(_eval_payload, self._base, payload)
 
+    def resize(self, workers: int) -> None:
+        """Swap in a fresh executor of the new size; in-flight tasks on the
+        old one run to completion (their futures stay valid)."""
+        workers = max(1, int(workers))
+        if workers == self.workers:
+            return
+        old = self._ex
+        self.workers = workers
+        self._ex = ThreadPoolExecutor(max_workers=workers,
+                                      thread_name_prefix="shard-eval")
+        old.shutdown(wait=False)
+
     def close(self) -> None:
         self._ex.shutdown(wait=False, cancel_futures=True)
 
@@ -135,6 +166,12 @@ class _DevicePool(_ThreadPool):
         devs = jax.devices()
         self._devices = [devs[i % len(devs)] for i in range(self.workers)]
         self._rr = itertools.count()
+
+    def resize(self, workers: int) -> None:
+        super().resize(workers)
+        import jax
+        devs = jax.devices()
+        self._devices = [devs[i % len(devs)] for i in range(self.workers)]
 
     def submit(self, payload: ShardPayload) -> Future:
         import jax
@@ -190,13 +227,27 @@ class _ProcessPool:
                             "(workers rebuild it from its models)")
         import multiprocessing as mp
         self.workers = int(workers)
-        self._ex = ProcessPoolExecutor(
+        self._spec = _worker_spec(base)
+        self._mp_context = mp.get_context("spawn")
+        self._ex = self._make_executor()
+
+    def _make_executor(self) -> ProcessPoolExecutor:
+        return ProcessPoolExecutor(
             max_workers=self.workers,
-            mp_context=mp.get_context("spawn"),
-            initializer=_process_init, initargs=(_worker_spec(base),))
+            mp_context=self._mp_context,
+            initializer=_process_init, initargs=(self._spec,))
 
     def submit(self, payload: ShardPayload) -> Future:
         return self._ex.submit(_process_eval, payload)
+
+    def resize(self, workers: int) -> None:
+        workers = max(1, int(workers))
+        if workers == self.workers:
+            return
+        old = self._ex
+        self.workers = workers
+        self._ex = self._make_executor()
+        old.shutdown(wait=False)
 
     def close(self) -> None:
         self._ex.shutdown(wait=False, cancel_futures=True)
@@ -231,7 +282,19 @@ class ShardedEvaluator:
         Never split below this many designs per shard — tiny batches stay
         on one worker instead of paying fan-out overhead.
     retries:
-        Re-dispatches allowed per shard after worker failures.
+        Re-dispatches allowed per shard after worker failures (shorthand
+        for the default ``retry_policy``'s budget).
+    retry_policy:
+        Full :class:`~repro.runtime.fault.RetryPolicy` controlling the
+        per-shard retry budget and the jittered exponential backoff slept
+        before each re-dispatch.  Defaults to ``RetryPolicy(max_retries=
+        retries, retryable=(Exception,))`` — any shard failure retryable,
+        no backoff (the historical behaviour).
+    shard_timeout_s:
+        Absolute deadline per shard dispatch.  A dispatch still pending
+        past it is declared LOST (not merely slow): the future is
+        abandoned, the worker slot evicted, and the shard re-dispatched,
+        consuming retry budget.  ``None`` (default) disables timeouts.
     straggler_factor / straggler_min_s:
         A pending shard is speculatively re-dispatched once it has been
         outstanding longer than ``max(straggler_min_s, factor x median
@@ -242,12 +305,32 @@ class ShardedEvaluator:
         Speculation deadline for the FIRST wave, before any shard has
         completed (no median exists yet to scale from) — generous by
         default so cold-start compiles never trigger spurious twins.
+    fault_plan:
+        Optional :class:`~repro.distributed.faults.FaultPlan`; wraps the
+        pool in a :class:`~repro.distributed.faults.ChaosPool` so the
+        whole retry / timeout / eviction path can be exercised
+        deterministically.
+    elastic / max_workers:
+        ``elastic=True`` resizes the pool after dead-worker eviction via
+        :func:`~repro.runtime.elastic.plan_elastic_pool` (bounded by
+        ``max_workers``, default the initial ``workers``).
+    validate:
+        Receiver-side shard integrity check (row count, finite, strictly
+        positive area/latency); a failing shard raises
+        :class:`~repro.distributed.faults.WorkerFault` into the retry
+        path.  On by default.
     """
 
     def __init__(self, base, *, workers: int = 2, mode: str = "auto",
                  min_shard_rows: int = 1, retries: int = 2,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 shard_timeout_s: Optional[float] = None,
                  straggler_factor: float = 4.0, straggler_min_s: float = 0.05,
-                 cold_straggler_s: float = 60.0, speculate: bool = True):
+                 cold_straggler_s: float = 60.0, speculate: bool = True,
+                 fault_plan: Optional[FaultPlan] = None,
+                 heartbeat_timeout_s: float = 30.0,
+                 elastic: bool = False, max_workers: Optional[int] = None,
+                 validate: bool = True):
         base = as_evaluator(base)
         if not hasattr(base, "models"):
             raise TypeError("ShardedEvaluator needs a model-backed evaluator")
@@ -263,17 +346,37 @@ class ShardedEvaluator:
             mode = "thread"
         self.mode = mode
         self._pool = _POOLS[mode](base, self.workers)
+        if fault_plan is not None:
+            self._pool = ChaosPool(self._pool, fault_plan)
+        self.fault_plan = fault_plan
         self.min_shard_rows = max(1, int(min_shard_rows))
         self.retries = int(retries)
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else RetryPolicy(max_retries=self.retries,
+                                              retryable=(Exception,)))
+        self.shard_timeout_s = (None if shard_timeout_s is None
+                                else float(shard_timeout_s))
         self.straggler_factor = float(straggler_factor)
         self.straggler_min_s = float(straggler_min_s)
         self.cold_straggler_s = float(cold_straggler_s)
         self.speculate = bool(speculate)
+        self.validate = bool(validate)
+        self.elastic = bool(elastic)
+        self.max_workers = max(self.workers, int(max_workers)
+                               if max_workers is not None else self.workers)
+        # worker liveness: slots 0..workers-1, beaten on shard completion
+        self.registry = WorkerRegistry(timeout_s=heartbeat_timeout_s)
+        for s in range(self.workers):
+            self.registry.register(s)
+        self._dispatch_no = 0               # round-robin slot attribution
         # traffic counters
         self.dispatches = 0                 # logical fused requests served
         self.worker_dispatches = 0          # shard tasks sent to workers
         self.retried = 0                    # shard retries after failures
         self.straggler_redispatches = 0     # speculative twin dispatches
+        self.timeouts = 0                   # shards declared lost
+        self.corrupt_rejected = 0           # shards failing integrity check
+        self.resizes = 0                    # elastic pool resizes applied
 
     # -- identity / protocol surface -----------------------------------
     @property
@@ -298,12 +401,14 @@ class ShardedEvaluator:
         n = idx.shape[0]
         n_shards = min(self.workers, max(1, n // self.min_shard_rows))
         self.dispatches += 1
-        if self.mode == "inline" or n_shards <= 1:
+        if (self.mode == "inline" or n_shards <= 1) and self.fault_plan is None:
             self.worker_dispatches += 1
             return self.base.evaluate(
                 EvalRequest(idx, request.detail, request.workloads))
+        # under a fault plan even single-shard requests route through the
+        # pool so injection + recovery cover the inline path too
         payloads = [ShardPayload(s, request.detail, request.workloads)
-                    for s in np.array_split(idx, n_shards)]
+                    for s in np.array_split(idx, max(1, n_shards))]
         return concat_reports(self._gather(payloads))
 
     def objectives(self, idx: np.ndarray) -> np.ndarray:
@@ -321,61 +426,147 @@ class ShardedEvaluator:
     def close(self) -> None:
         self._pool.close()
 
-    # -- shard dispatch with retry + straggler speculation --------------
+    def resize(self, workers: int) -> None:
+        """Resize the worker pool; replacement slots RE-register with the
+        liveness registry, removed slots are evicted."""
+        workers = max(1, min(int(workers), self.max_workers))
+        if workers == self.workers:
+            return
+        old = self.workers
+        self._pool.resize(workers)
+        self.workers = workers
+        self.resizes += 1
+        for s in range(workers):
+            self.registry.register(s)          # fresh/replacement slots
+        for s in range(workers, old):
+            self.registry.mark_dead(s)         # shrunk-away slots
+        self.registry.evict_dead()
+
+    # -- fault plumbing --------------------------------------------------
+    def _check_shard(self, payload: ShardPayload, rep: PPAReport) -> None:
+        """Receiver-side integrity check: a corrupted payload (wrong row
+        count, non-finite or non-positive values) raises WorkerFault into
+        the retry path instead of silently poisoning the merged report."""
+        n = payload.idx.shape[0]
+        area = np.asarray(rep.area)
+        ok = (area.shape[0] == n and bool(np.isfinite(area).all())
+              and bool((area > 0).all()))
+        if ok:
+            for nm in rep.workloads:
+                lat = np.asarray(rep.latency[nm])
+                if (lat.shape[0] != n or not np.isfinite(lat).all()
+                        or bool((lat <= 0).any())):
+                    ok = False
+                    break
+        if not ok:
+            self.corrupt_rejected += 1
+            raise WorkerFault(f"corrupt shard payload rejected "
+                              f"({n} rows, mode={self.mode!r})")
+
+    def _on_worker_failure(self, slot: int, outstanding: int) -> None:
+        """Crash/timeout attribution: evict the slot, re-register its
+        replacement (pools backfill workers), optionally resize."""
+        self.registry.mark_dead(slot)
+        self.registry.evict_dead()
+        if self.elastic:
+            plan = plan_elastic_pool(len(self.registry), outstanding,
+                                     min_workers=1,
+                                     max_workers=self.max_workers)
+            if plan.workers != self.workers:
+                self.resize(plan.workers)
+                return
+        # executor pools replace dead workers transparently — the slot's
+        # replacement re-registers under the same id
+        self.registry.register(slot)
+
+    # -- shard dispatch: retry + timeout + straggler speculation ---------
     def _gather(self, payloads: List[ShardPayload]) -> List[PPAReport]:
+        policy = self.retry_policy
         results: List[Optional[PPAReport]] = [None] * len(payloads)
-        pending: Dict[Future, Tuple[int, int]] = {}   # fut -> (shard, attempt)
+        # fut -> (shard, attempt, worker slot, absolute deadline)
+        pending: Dict[Future, Tuple[int, int, int, float]] = {}
         started: Dict[Future, float] = {}
         speculated: set = set()
         durations: List[float] = []
 
         def submit(i: int, attempt: int) -> None:
+            slot = self._dispatch_no % self.workers
+            self._dispatch_no += 1
             fut = self._pool.submit(payloads[i])
-            started[fut] = time.perf_counter()
-            pending[fut] = (i, attempt)
+            now = time.perf_counter()
+            started[fut] = now
+            deadline = (now + self.shard_timeout_s
+                        if self.shard_timeout_s else math.inf)
+            pending[fut] = (i, attempt, slot, deadline)
             self.worker_dispatches += 1
+
+        def fail(i: int, attempt: int, slot: int, exc: Optional[BaseException],
+                 what: str) -> None:
+            self._on_worker_failure(
+                slot, sum(1 for r in results if r is None))
+            if attempt >= policy.max_retries:
+                raise RuntimeError(
+                    f"shard {i} {what} after {attempt + 1} attempts "
+                    f"on the {self.mode!r} pool") from exc
+            self.retried += 1
+            d = policy.delay(attempt)
+            if d:
+                time.sleep(d)
+            submit(i, attempt + 1)
 
         for i in range(len(payloads)):
             submit(i, 0)
         while any(r is None for r in results):
-            timeout = None
-            if self.speculate and any(i not in speculated
-                                      for i, r in enumerate(results)
-                                      if r is None):
-                # cold first wave: no median to scale from yet — use the
-                # generous absolute deadline instead of waiting forever
-                timeout = (max(self.straggler_min_s, self.straggler_factor
-                               * float(np.median(durations)))
-                           if durations else self.cold_straggler_s)
+            now = time.perf_counter()
+            # next wake-up: earliest shard deadline or straggler threshold
+            thresh = (max(self.straggler_min_s, self.straggler_factor
+                          * float(np.median(durations)))
+                      if durations else self.cold_straggler_s)
+            wake = math.inf
+            for fut, (i, _a, _s, deadline) in pending.items():
+                if results[i] is not None:
+                    continue
+                wake = min(wake, deadline)
+                if self.speculate and i not in speculated:
+                    wake = min(wake, started[fut] + thresh)
+            timeout = None if wake is math.inf else max(0.0, wake - now)
             done, _ = wait(list(pending), timeout=timeout,
                            return_when=FIRST_COMPLETED)
             now = time.perf_counter()
-            if not done:
-                # every outstanding shard is a straggler: one twin each,
-                # at the SAME attempt (speculation is not a failure and
-                # must not consume the retry budget)
-                for fut, (i, attempt) in list(pending.items()):
-                    if results[i] is None and i not in speculated:
-                        speculated.add(i)
-                        self.straggler_redispatches += 1
-                        submit(i, attempt)
-                continue
             for fut in done:
-                i, attempt = pending.pop(fut)
+                i, attempt, slot, _deadline = pending.pop(fut)
+                t0 = started.pop(fut, now)
                 if results[i] is not None:
                     continue                   # a faster twin already landed
                 try:
                     rep = fut.result()
-                except Exception as exc:
-                    if attempt >= self.retries:
-                        raise RuntimeError(
-                            f"shard {i} failed after {attempt + 1} attempts "
-                            f"on the {self.mode!r} pool") from exc
-                    self.retried += 1
-                    submit(i, attempt + 1)
+                    if self.validate:
+                        self._check_shard(payloads[i], rep)
+                except policy.retryable as exc:
+                    fail(i, attempt, slot, exc, "failed")
                     continue
                 results[i] = rep
-                durations.append(now - started.get(fut, now))
+                durations.append(now - t0)
+                self.registry.beat(slot)
+            # shard timeouts: the dispatch is LOST, not merely slow —
+            # abandon the future, evict the slot, consume retry budget
+            for fut, (i, attempt, slot, deadline) in list(pending.items()):
+                if results[i] is not None or now < deadline:
+                    continue
+                pending.pop(fut)
+                started.pop(fut, None)
+                fut.cancel()
+                self.timeouts += 1
+                fail(i, attempt, slot, None, "timed out")
+            # straggler speculation: one twin per slow shard, at the SAME
+            # attempt (speculation never consumes the retry budget)
+            if self.speculate:
+                for fut, (i, attempt, _s, _d) in list(pending.items()):
+                    if (results[i] is None and i not in speculated
+                            and now - started.get(fut, now) >= thresh):
+                        speculated.add(i)
+                        self.straggler_redispatches += 1
+                        submit(i, attempt)
         for fut in pending:                    # abandoned twins
             fut.cancel()
         return results

@@ -201,6 +201,21 @@ class RowCache:
             self.hits += 1
             return ent[1]
 
+    def get_any(self, key: bytes,
+                names: Tuple[str, ...]) -> Optional[Tuple[str, PPAReport]]:
+        """The cached row at WHATEVER detail it has — ``(detail, row)`` —
+        or None if absent / wrong suite.  The graceful-degradation path:
+        when the evaluator is down, a shallower cached row beats an error.
+        """
+        with self._lock:
+            ent = self._d.get(key)
+            if ent is None or not set(names) <= set(ent[1].workloads):
+                self.misses += 1
+                return None
+            self._d.move_to_end(key)
+            self.hits += 1
+            return DETAILS[ent[0]], ent[1]
+
     def put(self, key: bytes, detail: str, row: PPAReport) -> None:
         """Insert one single-design report row (never downgrades: an entry
         with higher detail AND at least the same workloads is kept)."""

@@ -43,8 +43,11 @@ Objectives follow the repo convention: ``[ttft, tpot, area]`` per scenario
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
+import os
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -53,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pareto import ParetoArchive
+from repro.runtime.fault import RetryPolicy, run_with_retries
 from repro.perfmodel.designspace import DesignSpace, SPACE, A100_REFERENCE
 from repro.perfmodel.hardware import derive_hardware
 from repro.perfmodel.roofline import (RooflineModel, _dominant_class,
@@ -68,6 +72,22 @@ _N_STALL = 4
 
 # chunk_size="auto" probe results, memoized per (platform, backend, config)
 _CHUNK_AUTO_CACHE: Dict[tuple, int] = {}
+
+
+def _state_digest(payload: Dict) -> str:
+    """sha256 over the checkpoint payload (sorted keys; dtype + shape +
+    bytes per entry) — detects truncated or bit-flipped checkpoint files
+    before their garbage reaches a resumed sweep."""
+    h = hashlib.sha256()
+    for k in sorted(payload):
+        if k == "digest":
+            continue
+        arr = np.asarray(payload[k])
+        h.update(k.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
 
 
 # --------------------------------------------------------------------------
@@ -775,27 +795,44 @@ class SweepEngine:
             checkpoint_path: Optional[str] = None,
             checkpoint_every: Optional[int] = None,
             resume_from: Optional[str] = None,
-            progress: bool = False) -> SweepResult:
+            progress: bool = False,
+            fault_plan=None,
+            span_retry: Optional[RetryPolicy] = None) -> SweepResult:
         """Sweep flat ids [start, stop) and reduce to a SweepResult.
 
         ``workers=N`` shards the id range into N contiguous chunk-aligned
         spans streamed concurrently (each worker has its own carry and
         archive); the host merge reproduces the single-process result
         exactly.  ``checkpoint_path``/``checkpoint_every`` persist partial
-        state every N chunks; ``resume_from`` restores it (and overrides
-        ``start``).  Multi-worker runs keep one checkpoint file per worker
+        state every N chunks — atomically (tmp + ``os.replace``) with a
+        content digest, so a kill mid-write can never leave a checkpoint
+        that poisons a resume; ``resume_from`` restores it (and overrides
+        ``start``).  A corrupt or truncated checkpoint is QUARANTINED
+        (renamed ``*.quarantined`` + warning) and the span restarts fresh
+        instead of crashing — only genuine config mismatches
+        (space/workload fingerprint, reference point) still refuse to
+        resume.  Multi-worker runs keep one checkpoint file per worker
         (``{path}.w{i}of{N}``, unchanged single-worker format with the
         worker's span stamped into the fingerprint), so a resume must use
         the same range and worker count.
+
+        ``fault_plan`` injects a seeded :class:`~repro.distributed.faults.
+        FaultPlan` into the span loop (worker = span index, dispatch =
+        chunk ordinal): ``crash`` events abort the span, which is then
+        REPLAYED under ``span_retry`` (default: 2 retries) from its own
+        last checkpoint if one exists, from scratch otherwise — either
+        way the streamed reduction is deterministic, so the merged result
+        stays bit-identical to a fault-free run.
         """
         stop = self.size if stop is None else min(int(stop), self.size)
         workers = max(1, int(workers))
         t0 = time.perf_counter()
         if workers == 1:
-            states = [self._run_range(
-                start, stop, checkpoint_path=checkpoint_path,
+            states = [self._run_span(
+                0, start, stop, checkpoint_path=checkpoint_path,
                 checkpoint_every=checkpoint_every, resume_from=resume_from,
-                progress=progress)]
+                progress=progress, label="", fp_extra="",
+                fault_plan=fault_plan, span_retry=span_retry)]
         else:
             spans = self._worker_spans(start, stop, workers)
             n = len(spans)
@@ -805,16 +842,51 @@ class SweepEngine:
                 for w, (s0, s1) in enumerate(spans):
                     suffix = f".w{w}of{n}"
                     futs.append(ex.submit(
-                        self._run_range, s0, s1,
+                        self._run_span, w, s0, s1,
                         checkpoint_path=(f"{checkpoint_path}{suffix}"
                                          if checkpoint_path else None),
                         checkpoint_every=checkpoint_every,
                         resume_from=(f"{resume_from}{suffix}"
                                      if resume_from else None),
                         progress=progress, label=f"w{w}: ",
-                        fp_extra=f"|span={s0}:{s1}"))
+                        fp_extra=f"|span={s0}:{s1}",
+                        fault_plan=fault_plan, span_retry=span_retry))
                 states = [f.result() for f in futs]
         return self._reduce_states(states, time.perf_counter() - t0)
+
+    def _run_span(self, worker: int, start: int, stop: int, *,
+                  checkpoint_path: Optional[str],
+                  checkpoint_every: Optional[int],
+                  resume_from: Optional[str], progress: bool,
+                  label: str, fp_extra: str,
+                  fault_plan=None,
+                  span_retry: Optional[RetryPolicy] = None) -> Dict:
+        """One worker span, replayed on crash: a failed attempt resumes
+        from the span's own atomic checkpoint when one exists, from
+        scratch otherwise — deterministic either way."""
+        def attempt(resume: Optional[str]) -> Dict:
+            return self._run_range(
+                start, stop, checkpoint_path=checkpoint_path,
+                checkpoint_every=checkpoint_every, resume_from=resume,
+                progress=progress, label=label, fp_extra=fp_extra,
+                fault_plan=fault_plan, worker_slot=worker)
+
+        if fault_plan is None and span_retry is None:
+            return attempt(resume_from)
+        policy = (span_retry if span_retry is not None
+                  else RetryPolicy(max_retries=2, retryable=(RuntimeError,)))
+        resume = {"from": resume_from}
+
+        def restore(_attempt: int) -> None:
+            resume["from"] = None
+            if checkpoint_path:
+                f = (checkpoint_path if checkpoint_path.endswith(".npz")
+                     else f"{checkpoint_path}.npz")
+                if os.path.exists(f):
+                    resume["from"] = checkpoint_path
+
+        return run_with_retries(lambda: attempt(resume["from"]), restore,
+                                policy)
 
     def _worker_spans(self, start: int, stop: int,
                       workers: int) -> List[Tuple[int, int]]:
@@ -836,11 +908,13 @@ class SweepEngine:
                    checkpoint_every: Optional[int] = None,
                    resume_from: Optional[str] = None,
                    progress: bool = False, label: str = "",
-                   fp_extra: str = "") -> Dict:
+                   fp_extra: str = "", fault_plan=None,
+                   worker_slot: int = 0) -> Dict:
         """Stream one contiguous id span; returns its final state dict
         (plus the resumed-eval count under ``"resumed"``)."""
-        state = (self._load(resume_from, fp_extra) if resume_from
-                 else self._fresh_state(start))
+        state = self._load(resume_from, fp_extra) if resume_from else None
+        if state is None:          # no checkpoint, or quarantined as corrupt
+            state = self._fresh_state(start)
         archives: List[ParetoArchive] = (state["archives"] if self._portfolio
                                          else [state["archive"]])
         carry = state["carry"]
@@ -848,6 +922,14 @@ class SweepEngine:
         t0 = time.perf_counter()
         chunk_i = 0
         while state["next"] < stop:
+            if fault_plan is not None:
+                ev = fault_plan.fire(worker_slot, chunk_i)
+                if ev is not None and ev.kind == "crash":
+                    from repro.distributed.faults import WorkerFault
+                    raise WorkerFault(f"injected sweep crash: worker "
+                                      f"{worker_slot} chunk {chunk_i}")
+                if ev is not None and ev.kind == "slow":
+                    time.sleep(ev.delay_s)
             s = state["next"]
             rows = self._pf_rows if self._portfolio else None
             filt = np.stack([self._filter_from_archive(a, rows)
@@ -1057,6 +1139,10 @@ class SweepEngine:
         return state["archives"] if self._portfolio else [state["archive"]]
 
     def _save(self, path: str, state: Dict, fp_extra: str = "") -> None:
+        """Atomic checkpoint write: the payload (plus a sha256 content
+        digest) lands in a ``.tmp`` sibling and is published with
+        ``os.replace`` — a kill mid-write leaves the previous checkpoint
+        intact, never a truncated one."""
         archives = self._archives_of(state)
         extra = {}
         if self.stall_topk:
@@ -1072,8 +1158,7 @@ class SweepEngine:
             # the robust ref [1, 1, area] alone cannot detect changed
             # latency refs (its latency entries are 1 by construction)
             extra["ref_points"] = self.ref_points
-        np.savez(
-            path,
+        payload = dict(
             version=_FMT_VERSION,
             fingerprint=self.fingerprint() + fp_extra,
             next=state["next"],
@@ -1088,10 +1173,45 @@ class SweepEngine:
             ref_point=self.ref_point,
             **extra,
         )
+        payload["digest"] = _state_digest(payload)
+        fname = path if str(path).endswith(".npz") else f"{path}.npz"
+        tmp = fname + ".tmp"
+        # write through an open handle: np.savez would append another
+        # ``.npz`` to a bare tmp path, breaking the replace pairing
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, fname)
 
-    def _load(self, path: str, fp_extra: str = "") -> Dict:
-        z = np.load(path if str(path).endswith(".npz") else f"{path}.npz",
-                    allow_pickle=False)
+    @staticmethod
+    def _quarantine(fname: str, reason: str) -> None:
+        q = f"{fname}.quarantined"
+        try:
+            os.replace(fname, q)
+        except OSError:
+            q = "<could not rename>"
+        warnings.warn(f"sweep checkpoint {fname} is corrupt ({reason}); "
+                      f"quarantined to {q} — restarting the span fresh",
+                      RuntimeWarning, stacklevel=3)
+
+    def _load(self, path: str, fp_extra: str = "") -> Optional[Dict]:
+        """Restore a checkpoint, or None after quarantining a corrupt /
+        truncated file (config mismatches still raise: the file is VALID,
+        resuming it would just be wrong)."""
+        fname = path if str(path).endswith(".npz") else f"{path}.npz"
+        try:
+            with np.load(fname, allow_pickle=False) as zf:
+                z = {k: np.asarray(zf[k]) for k in zf.files}
+        except FileNotFoundError:
+            raise
+        except Exception as exc:
+            self._quarantine(fname, f"unreadable: {exc}")
+            return None
+        if "digest" in z:          # pre-digest checkpoints stay loadable
+            stored = str(z["digest"])
+            body = {k: v for k, v in z.items() if k != "digest"}
+            if _state_digest(body) != stored:
+                self._quarantine(fname, "content digest mismatch")
+                return None
         if int(z["version"]) > _FMT_VERSION:
             raise ValueError(
                 f"checkpoint format v{int(z['version'])} is newer than this "
@@ -1108,7 +1228,7 @@ class SweepEngine:
                 "its superiority counts cannot be continued — refusing to "
                 "resume")
         if self._portfolio:
-            if "ref_points" not in z.files or not np.allclose(
+            if "ref_points" not in z or not np.allclose(
                     np.asarray(z["ref_points"]), self.ref_points, rtol=1e-6):
                 raise ValueError(
                     "checkpoint was produced with different per-scenario "
@@ -1137,7 +1257,7 @@ class SweepEngine:
             raise ValueError("checkpoint is single-scenario but this engine "
                              "sweeps a portfolio; refusing to resume")
         if self.stall_topk:
-            if "stall_topk_val" not in z.files:
+            if "stall_topk_val" not in z:
                 raise ValueError(
                     "checkpoint carries no per-stall-class top-k state but "
                     "this engine was built with stall_topk > 0; refusing to "

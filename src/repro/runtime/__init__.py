@@ -1,5 +1,8 @@
-from repro.runtime.fault import RetryPolicy, run_with_retries, StragglerMonitor
-from repro.runtime.elastic import plan_elastic_mesh
+from repro.runtime.fault import (Heartbeat, RetryPolicy, StragglerMonitor,
+                                 run_with_retries)
+from repro.runtime.elastic import (ElasticPlan, PoolPlan, plan_elastic_mesh,
+                                   plan_elastic_pool)
 
 __all__ = ["RetryPolicy", "run_with_retries", "StragglerMonitor",
-           "plan_elastic_mesh"]
+           "Heartbeat", "ElasticPlan", "PoolPlan", "plan_elastic_mesh",
+           "plan_elastic_pool"]

@@ -1,15 +1,27 @@
-"""Elastic re-meshing: recompute the best mesh when devices are lost.
+"""Elastic re-planning: meshes when devices are lost, pools under load.
 
-Policy: keep the `model` axis intact (TP degree is tied to weight sharding
-and head counts), shrink the data axes to the largest multiple that fits the
-surviving device count, then restore from the last checkpoint with the new
-shardings (repro.checkpoint supports restore-time resharding).  The
-deterministic-by-step data pipeline replays the remainder of the epoch with
-the new DP degree by re-chunking the global batch.
+This module is LIVE, not a seed stub — two consumers drive it:
+
+* :func:`plan_elastic_mesh` — recompute the best device mesh when hosts
+  are lost.  Policy: keep the `model` axis intact (TP degree is tied to
+  weight sharding and head counts), shrink the data axes to the largest
+  multiple that fits the surviving device count, then restore from the
+  last checkpoint with the new shardings (repro.checkpoint supports
+  restore-time resharding).  The deterministic-by-step data pipeline
+  replays the remainder of the epoch with the new DP degree.
+* :func:`plan_elastic_pool` — the same policy shape adapted to evaluation
+  worker pools: given the surviving worker count and the pending-shard
+  backlog, pick the pool size that keeps the backlog under
+  ``target_queue`` shards per worker, bounded by ``[min_workers,
+  max_workers]``.  :class:`~repro.distributed.sharded.ShardedEvaluator`
+  calls this after dead-worker eviction (shrink to the survivors instead
+  of oversubscribing dead slots) and under sustained queue pressure
+  (grow toward the cap).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Tuple
 
 
@@ -48,3 +60,40 @@ def plan_elastic_mesh(available_devices: int, model_axis: int = 16,
         tp_degree=model_axis,
         note=f"single pod {groups} DP x {model_axis} TP",
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolPlan:
+    """Target size for an elastic evaluation worker pool."""
+    workers: int
+    grow: bool                    # True when the plan adds workers
+    note: str
+
+
+def plan_elastic_pool(live_workers: int, queued: int, *,
+                      min_workers: int = 1, max_workers: int = 16,
+                      target_queue: float = 2.0) -> PoolPlan:
+    """Pool analogue of :func:`plan_elastic_mesh`.
+
+    Keep enough workers that the pending backlog stays under
+    ``target_queue`` items per worker; after worker loss with no backlog
+    pressure, shrink to the surviving count instead of oversubscribing
+    dead slots.  The result is always clamped to
+    ``[min_workers, max_workers]``.
+    """
+    if min_workers < 1:
+        raise ValueError(f"min_workers must be >= 1, got {min_workers}")
+    if max_workers < min_workers:
+        raise ValueError(f"max_workers ({max_workers}) < min_workers "
+                         f"({min_workers})")
+    live = max(0, int(live_workers))
+    queued = max(0, int(queued))
+    want = math.ceil(queued / max(target_queue, 1e-9)) if queued else live
+    want = min(max(want, min_workers), max_workers)
+    if want > live:
+        note = f"grow {live} -> {want} ({queued} queued)"
+    elif want < live:
+        note = f"shrink {live} -> {want} ({queued} queued)"
+    else:
+        note = f"hold {want} ({queued} queued)"
+    return PoolPlan(workers=want, grow=want > live, note=note)

@@ -1,36 +1,66 @@
-"""Fault-tolerance runtime: step retries, straggler detection, heartbeats.
+"""Fault-tolerance runtime: retry policies, straggler detection, heartbeats.
 
-On a real multi-host deployment the coordinator drives these through the
-cluster scheduler; here the policies are host-local but the interfaces (and
-tests) are the production ones:
+These are LIVE production policies, not seed stubs: the distributed
+evaluation stack drives them directly —
 
-* ``run_with_retries`` — execute a step function; on failure restore the
-  last checkpoint and replay (the data pipeline is deterministic-by-step, so
-  replay is bit-exact).
-* ``StragglerMonitor`` — rolling per-step latency stats; flags steps slower
-  than median * threshold.  At scale the flagged host is drained and the
-  elastic re-mesh path (repro.runtime.elastic) kicks in.
-* ``Heartbeat`` — liveness file a watchdog can poll.
+* :class:`RetryPolicy` — retry budget + jittered exponential backoff.
+  :func:`run_with_retries` executes a step function under one (the
+  training-loop replay path), and :class:`~repro.distributed.sharded.
+  ShardedEvaluator` uses the same policy object for its per-shard retry /
+  timeout backoff, while :class:`~repro.perfmodel.sweep.SweepEngine`
+  replays crashed worker spans through :func:`run_with_retries` itself.
+* :class:`StragglerMonitor` — rolling per-step latency stats; flags steps
+  slower than median * threshold.  At scale the flagged host is drained
+  and the elastic re-plan path (:mod:`repro.runtime.elastic`) kicks in.
+* :class:`Heartbeat` — liveness file a watchdog can poll across process
+  boundaries.  :class:`~repro.distributed.faults.WorkerRegistry` is the
+  in-process registry built on the same expiry semantics (beat / timeout /
+  evict / re-register).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import random
 import time
 from collections import deque
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple, Type
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class RetryPolicy:
+    """Retry budget with jittered exponential backoff.
+
+    ``delay(attempt)`` is ``backoff_s * 2^attempt`` capped at
+    ``max_backoff_s``, optionally spread by ``jitter`` (a symmetric
+    +/- fraction, de-synchronizing retry storms across workers).  Frozen:
+    a policy is shared freely across call sites without aliasing state.
+    """
     max_retries: int = 3
     backoff_s: float = 0.0          # 0 in tests; seconds in production
-    retryable: tuple = (RuntimeError, ValueError)
+    max_backoff_s: float = 30.0
+    jitter: float = 0.0             # +/- fraction of the delay randomized
+    retryable: Tuple[Type[BaseException], ...] = (RuntimeError, ValueError)
+
+    def delay(self, attempt: int,
+              rng: Optional[random.Random] = None) -> float:
+        """Backoff before retry number `attempt` (0-based), jittered."""
+        base = min(self.backoff_s * (2 ** attempt), self.max_backoff_s)
+        if base and self.jitter:
+            u = (rng.random() if rng is not None else random.random())
+            base *= 1.0 + self.jitter * (2.0 * u - 1.0)
+        return max(0.0, base)
 
 
 def run_with_retries(step_fn: Callable, restore_fn: Callable,
-                     policy: RetryPolicy = RetryPolicy()):
-    """step_fn() -> result; restore_fn(attempt) resets state before retry."""
+                     policy: Optional[RetryPolicy] = None):
+    """step_fn() -> result; restore_fn(attempt) resets state before retry.
+
+    ``policy=None`` builds a fresh default :class:`RetryPolicy` per call
+    (the old module-level default instance was evaluated once at import
+    and shared by every caller — a mutable-default footgun).
+    """
+    policy = RetryPolicy() if policy is None else policy
     last = None
     for attempt in range(policy.max_retries + 1):
         try:
@@ -39,8 +69,9 @@ def run_with_retries(step_fn: Callable, restore_fn: Callable,
             last = e
             if attempt == policy.max_retries:
                 break
-            if policy.backoff_s:
-                time.sleep(policy.backoff_s * (2 ** attempt))
+            d = policy.delay(attempt)
+            if d:
+                time.sleep(d)
             restore_fn(attempt)
     raise RuntimeError(
         f"step failed after {policy.max_retries} retries") from last

@@ -398,3 +398,54 @@ def test_service_composes_with_sharded_evaluator():
     _assert_reports_identical(futs[1].result(),
                               local.evaluate(EvalRequest(idx[3:], "stalls")))
     sharded.close()
+
+# -------------------------------------------------------- worker liveness
+def test_worker_registry_heartbeat_roundtrip():
+    """Heartbeat expiry -> eviction -> re-registration, on a fake clock."""
+    from repro.distributed import WorkerRegistry
+    clock = {"t": 0.0}
+    reg = WorkerRegistry(timeout_s=10.0, now=lambda: clock["t"])
+    for w in (0, 1, 2):
+        reg.register(w)
+    assert reg.live() == [0, 1, 2] and len(reg) == 3
+    clock["t"] = 8.0
+    reg.beat(1)                                  # only worker 1 stays fresh
+    clock["t"] = 12.0                            # 0 and 2 expire (12 >= 10)
+    assert reg.live() == [1]
+    assert reg.alive(1) and not reg.alive(0)
+    assert reg.evict_dead() == [0, 2]
+    assert reg.evictions == 2 and len(reg) == 1
+    # explicit death attribution beats the passive clock
+    reg.mark_dead(1)
+    assert not reg.alive(1)
+    assert reg.evict_dead() == [1]
+    # the worker comes back: same id, counted as a RE-registration
+    reg.register(1)
+    assert reg.reregistrations == 1
+    assert reg.alive(1) and reg.live() == [1]
+    # beating an unknown id is a no-op, not a resurrection
+    reg.beat(7)
+    assert not reg.alive(7)
+
+
+def test_sharded_resize_rewires_pool_and_registry():
+    """resize() changes the live pool fan-out and the liveness registry
+    in lock-step, clamped to [1, max_workers]."""
+    ev = ShardedEvaluator(_fresh(), workers=4, mode="thread", max_workers=4)
+    try:
+        idx = SPACE.sample(RNG, 12)
+        before = ev.evaluate(EvalRequest(idx, "ppa"))
+        assert sorted(ev.registry.live()) == [0, 1, 2, 3]
+        ev.resize(2)
+        assert ev.workers == 2 and ev._pool.workers == 2
+        assert sorted(ev.registry.live()) == [0, 1]
+        assert ev.resizes == 1
+        after = ev.evaluate(EvalRequest(idx, "ppa"))
+        _assert_reports_identical(before, after)  # size never changes results
+        ev.resize(99)                             # clamped to max_workers
+        assert ev.workers == 4
+        ev.resize(0)                              # clamped to 1
+        assert ev.workers == 1
+        assert sorted(ev.registry.live()) == [0]
+    finally:
+        ev.close()

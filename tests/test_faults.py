@@ -1,0 +1,437 @@
+"""Fault-tolerant always-on evaluation (PR 6 invariants).
+
+Covers: the seeded deterministic FaultPlan / ChaosPool chaos harness
+(crash | hang | slow | corrupt, consumed exactly once); ShardedEvaluator
+recovery — retry with backoff, shard timeouts declaring lost dispatches,
+heartbeat eviction + re-registration, straggler-twin speculation, elastic
+pool resize — all BIT-IDENTICAL to the fault-free run; the EvalService
+graceful-degradation ladder (narrow -> proxy -> cached, plus deadline
+demotion) with nothing unhandled reaching a client future; crash-safe
+SweepEngine checkpoints (atomic tmp+replace with a content digest,
+corrupt files quarantined not fatal, kill-mid-sweep resume exact, incl.
+portfolio mode); and a CampaignRunner driven through the degrading
+service under a seeded plan reproducing the clean campaign exactly.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.campaign import CampaignRunner
+from repro.distributed import (ChaosPool, EvalService, FaultEvent, FaultPlan,
+                               ShardedEvaluator, WorkerFault)
+from repro.distributed.faults import corrupt_report
+from repro.distributed.sharded import ShardPayload, _InlinePool
+from repro.perfmodel import (EvalRequest, ModelEvaluator, get_evaluator,
+                             make_evaluator)
+from repro.perfmodel.designspace import SPACE
+from repro.perfmodel.sweep import SweepEngine
+from repro.perfmodel.workload import zoo_suite
+from repro.runtime import RetryPolicy
+
+RNG = np.random.default_rng(6)
+CH = 8_192                               # sweep chunk size used throughout
+
+
+def _fresh(tier: str = "proxy") -> ModelEvaluator:
+    return ModelEvaluator(get_evaluator(tier).models, tier=tier)
+
+
+def _assert_reports_identical(a, b):
+    assert a.workloads == b.workloads and a.detail == b.detail
+    assert np.array_equal(a.area, b.area)
+    for w in a.workloads:
+        assert np.array_equal(a.latency[w], b.latency[w])
+        if a.detail in ("ppa", "stalls"):
+            assert np.array_equal(a.op_time[w], b.op_time[w])
+            assert a.op_names[w] == b.op_names[w]
+        if a.detail == "stalls":
+            assert np.array_equal(a.stall[w], b.stall[w])
+            assert np.array_equal(a.op_class[w], b.op_class[w])
+
+
+@pytest.fixture(scope="module")
+def sweep_eng():
+    return SweepEngine(get_evaluator("proxy"), chunk_size=CH, stall_topk=4)
+
+
+# ------------------------------------------------------------ fault plan
+def test_fault_plan_seeded_deterministic_and_consumed_once():
+    a = FaultPlan.seeded(7, workers=3, dispatches=64, rate=0.3)
+    b = FaultPlan.seeded(7, workers=3, dispatches=64, rate=0.3)
+    assert a.scheduled == b.scheduled == len(a) > 0
+    assert sorted(a._events) == sorted(b._events)
+    for k, e in a._events.items():
+        assert b._events[k].kind == e.kind       # same seed -> same schedule
+    c = FaultPlan.seeded(8, workers=3, dispatches=64, rate=0.3)
+    assert sorted(c._events) != sorted(a._events)
+    # events are consumed exactly once: a retry can't be re-killed
+    (w, d) = sorted(a._events)[0]
+    kind = a.peek(w, d).kind
+    assert a.fire(w, d).kind == kind
+    assert a.fire(w, d) is None and a.peek(w, d) is None
+    assert a.fired[kind] >= 1
+    assert len(a) == a.scheduled - 1
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent(0, 0, "meteor")
+    with pytest.raises(ValueError, match="rate"):
+        FaultPlan.seeded(0, workers=2, dispatches=4, rate=1.5)
+    with pytest.raises(ValueError, match="kind"):
+        FaultPlan.seeded(0, workers=2, dispatches=4, kinds=("crash", "nap"))
+
+
+def test_chaos_pool_injects_each_kind():
+    idx = SPACE.sample(RNG, 4)
+    payload = ShardPayload(idx, "objectives", None)
+    plan = FaultPlan([FaultEvent(0, 0, "crash"), FaultEvent(0, 1, "hang"),
+                      FaultEvent(0, 2, "corrupt")])
+    pool = ChaosPool(_InlinePool(_fresh()), plan)
+    f = pool.submit(payload)                     # dispatch 0: crash
+    with pytest.raises(WorkerFault, match="injected crash"):
+        f.result(timeout=1)
+    assert not pool.submit(payload).done()       # dispatch 1: hangs forever
+    bad = pool.submit(payload).result(timeout=1)  # dispatch 2: corrupt
+    assert (np.asarray(bad.area) <= 0).any()
+    assert any(not np.isfinite(bad.latency[w]).all() for w in bad.workloads)
+    good = pool.submit(payload).result(timeout=1)  # dispatch 3: clean
+    _assert_reports_identical(good, _fresh().evaluate(
+        EvalRequest(idx, "objectives")))
+    assert pool.injected == {"crash": 1, "hang": 1, "slow": 0, "corrupt": 1}
+    assert pool.dispatch_count == 4
+
+
+def test_corrupt_report_fails_integrity_check():
+    rep = _fresh().evaluate(EvalRequest(SPACE.sample(RNG, 3), "objectives"))
+    bad = corrupt_report(rep)
+    ev = ShardedEvaluator(_fresh(), workers=2)
+    payload = ShardPayload(np.atleast_2d(SPACE.sample(RNG, 3)),
+                           "objectives", None)
+    ev._check_shard(payload, rep)                # the clean one passes
+    with pytest.raises(WorkerFault, match="corrupt"):
+        ev._check_shard(payload, bad)
+    assert ev.corrupt_rejected == 1
+    ev.close()
+
+
+# ------------------------------------------- sharded evaluator recovery
+def test_sharded_recovers_crash_corrupt_slow_bit_identical():
+    """Acceptance: a plan killing worker dispatches mid-run leaves the
+    reassembled report bit-identical to the fault-free evaluation."""
+    idx = SPACE.sample(RNG, 16)
+    local = _fresh().evaluate(EvalRequest(idx, "stalls"))
+    plan = FaultPlan([FaultEvent(0, 0, "crash"),
+                      FaultEvent(1, 1, "corrupt"),
+                      FaultEvent(0, 2, "slow", delay_s=0.01)])
+    ev = ShardedEvaluator(_fresh(), workers=2, fault_plan=plan)
+    rep = ev.evaluate(EvalRequest(idx, "stalls"))
+    _assert_reports_identical(rep, local)
+    assert ev.retried == 2                       # crash + corrupt re-dispatch
+    assert ev.corrupt_rejected == 1
+    assert plan.fired["crash"] == 1 and plan.fired["corrupt"] == 1
+    assert len(plan) == 0                        # every event consumed
+    ev.close()
+
+
+def test_sharded_hang_times_out_evicts_and_reregisters():
+    """A hung dispatch is declared LOST at the shard timeout: the slot is
+    evicted from the registry, a replacement re-registers, and the shard
+    retries to a bit-identical report."""
+    idx = SPACE.sample(RNG, 12)
+    local = _fresh().evaluate(EvalRequest(idx, "ppa"))
+    ev = ShardedEvaluator(_fresh(), workers=2,
+                          fault_plan=FaultPlan([FaultEvent(0, 0, "hang")]),
+                          shard_timeout_s=0.3, speculate=False)
+    rep = ev.evaluate(EvalRequest(idx, "ppa"))
+    _assert_reports_identical(rep, local)
+    assert ev.timeouts == 1 and ev.retried == 1
+    assert ev.registry.evictions == 1
+    assert ev.registry.reregistrations == 1
+    assert sorted(ev.registry.live()) == [0, 1]  # back to full strength
+    ev.close()
+
+
+def test_sharded_hang_speculative_twin_wins():
+    """With speculation on, a hung shard's twin lands first and the hang
+    never consumes retry budget."""
+    idx = SPACE.sample(RNG, 12)
+    local = _fresh().evaluate(EvalRequest(idx, "objectives"))
+    ev = ShardedEvaluator(_fresh(), workers=2,
+                          fault_plan=FaultPlan([FaultEvent(0, 0, "hang")]),
+                          cold_straggler_s=0.2)
+    rep = ev.evaluate(EvalRequest(idx, "objectives"))
+    _assert_reports_identical(rep, local)
+    assert ev.straggler_redispatches == 1
+    assert ev.retried == 0 and ev.timeouts == 0
+    ev.close()
+
+
+def test_sharded_elastic_resizes_after_worker_loss():
+    """elastic=True: after a crash evicts a slot, plan_elastic_pool picks
+    the shrunken pool size instead of oversubscribing dead slots."""
+    idx = SPACE.sample(RNG, 16)
+    local = _fresh().evaluate(EvalRequest(idx, "objectives"))
+    ev = ShardedEvaluator(_fresh(), workers=4, elastic=True,
+                          fault_plan=FaultPlan([FaultEvent(0, 0, "crash")]))
+    rep = ev.evaluate(EvalRequest(idx, "objectives"))
+    _assert_reports_identical(rep, local)
+    assert ev.resizes >= 1 and ev.workers < 4
+    assert sorted(ev.registry.live()) == list(range(ev.workers))
+    ev.close()
+
+
+def test_sharded_single_shard_still_chaos_covered():
+    """Under a fault plan even a one-shard request routes through the pool
+    so injection + recovery cover the inline path too."""
+    idx = SPACE.sample(RNG, 2)
+    local = _fresh().evaluate(EvalRequest(idx, "objectives"))
+    ev = ShardedEvaluator(_fresh(), workers=2, min_shard_rows=8,
+                          fault_plan=FaultPlan([FaultEvent(0, 0, "crash")]))
+    rep = ev.evaluate(EvalRequest(idx, "objectives"))
+    _assert_reports_identical(rep, local)
+    assert ev.retried == 1
+    ev.close()
+
+
+# ------------------------------------------------- service degradation
+class _NarrowOnly:
+    """Backend that only works single-worker — the worker-loss shape."""
+
+    def __init__(self, base, workers=4):
+        self._b, self.workers = base, workers
+        self.space, self.tier = base.space, base.tier
+        self.models = base.models
+        self.workloads = base.workloads
+
+    def resize(self, workers):
+        self.workers = workers
+
+    def evaluate(self, request):
+        if self.workers > 1:
+            raise WorkerFault("pool degraded")
+        return self._b.evaluate(request)
+
+
+class _ObjectivesOnly:
+    """Backend whose detailed path is down — the proxy-demotion shape."""
+
+    def __init__(self, base):
+        self._b = base
+        self.workloads = base.workloads
+
+    def evaluate(self, request):
+        if request.detail != "objectives":
+            raise RuntimeError("detail backend down")
+        return self._b.evaluate(request)
+
+
+class _Dead:
+    def __init__(self, base):
+        self.workloads = base.workloads
+
+    def evaluate(self, request):
+        raise WorkerFault("backend down")
+
+
+def test_service_degrades_by_narrowing_workers():
+    svc = EvalService(_fresh())
+    svc.evaluator = _NarrowOnly(_fresh(), workers=4)
+    idx = SPACE.sample(RNG, 6)
+    fut = svc.submit(EvalRequest(idx, "ppa"))
+    svc.tick()
+    rep = fut.result(timeout=1)
+    assert rep.detail == "ppa"                   # detail preserved
+    _assert_reports_identical(rep, _fresh().evaluate(EvalRequest(idx, "ppa")))
+    assert svc.degraded["narrow"] == 2           # 4 -> 2 -> 1
+    assert svc.evaluator.workers == 1
+
+
+def test_service_degrades_to_objectives_proxy():
+    svc = EvalService(_fresh())
+    svc.evaluator = _ObjectivesOnly(_fresh())
+    idx = SPACE.sample(RNG, 6)
+    fut = svc.submit(EvalRequest(idx, "stalls"))
+    svc.tick()
+    rep = fut.result(timeout=1)
+    assert rep.detail == "objectives"            # demoted but correct
+    _assert_reports_identical(
+        rep, _fresh().evaluate(EvalRequest(idx, "objectives")))
+    assert svc.degraded["proxy"] == 1
+
+
+def test_service_degrades_to_cached_rows_when_backend_dead():
+    svc = EvalService(_fresh())
+    idx = SPACE.sample(RNG, 6)
+    svc.evaluate(EvalRequest(idx, "ppa"))        # warm the shared row cache
+    svc.evaluator = _Dead(svc.evaluator)                      # then the backend dies
+    fut = svc.submit(EvalRequest(idx, "stalls"))  # asks MORE than is cached
+    assert svc.tick() == 0                       # no dispatch succeeded...
+    rep = fut.result(timeout=1)                  # ...but the client is served
+    assert rep.detail == "ppa"                   # floored to the cached level
+    _assert_reports_identical(
+        rep, _fresh().evaluate(EvalRequest(idx, "ppa")))
+    assert svc.degraded["cached"] == 1
+
+
+def test_service_deadline_demotes_instead_of_failing():
+    svc = EvalService(_fresh())
+    idx = SPACE.sample(RNG, 4)
+    fut = svc.submit(EvalRequest(idx, "stalls"), deadline_s=0.0)
+    svc.tick()                                   # deadline already expired
+    rep = fut.result(timeout=1)
+    assert rep.detail == "objectives"            # demoted to the cheap proxy
+    assert svc.degraded["deadline"] == 1
+    _assert_reports_identical(
+        rep, _fresh().evaluate(EvalRequest(idx, "objectives")))
+
+
+def test_service_never_raises_out_of_tick():
+    """Acceptance: every rung down, the tick still returns (no unhandled
+    exception escapes the service); the failure lands on the future."""
+    svc = EvalService(_fresh())
+    svc.evaluator = _Dead(svc.evaluator)
+    fut = svc.submit(EvalRequest(SPACE.sample(RNG, 3), "ppa"))
+    assert svc.tick() == 0                       # never raises
+    with pytest.raises(WorkerFault, match="backend down"):
+        fut.result(timeout=1)
+    tel = svc.telemetry()
+    assert tel["degraded"]["narrow"] == 0        # no resize surface -> skipped
+    assert tel["fused_dispatches"] == 0
+
+
+def test_service_validates_degrade_ladder():
+    with pytest.raises(ValueError, match="degrade"):
+        EvalService(_fresh(), degrade=("narrow", "panic"))
+
+
+# --------------------------------------------------- crash-safe sweeps
+def test_sweep_chaos_workers_bit_identical(sweep_eng, tmp_path):
+    """Acceptance: a seeded plan crashing worker 0 mid-sweep (and slowing
+    worker 1) leaves the merged N-worker result bit-identical to the
+    fault-free single-process sweep — spans replay from their own atomic
+    checkpoints."""
+    n = 5 * CH
+    clean = sweep_eng.run(0, n)
+    ck = str(tmp_path / "ck")
+    plan = FaultPlan([FaultEvent(0, 2, "crash"),
+                      FaultEvent(1, 1, "slow", delay_s=0.01)])
+    res = sweep_eng.run(0, n, workers=2, checkpoint_path=ck,
+                        checkpoint_every=1, fault_plan=plan)
+    assert plan.fired["crash"] == 1
+    assert np.array_equal(clean.pareto_ids, res.pareto_ids)
+    assert np.array_equal(clean.pareto_y, res.pareto_y)
+    assert np.array_equal(clean.topk_ids, res.topk_ids)
+    assert np.array_equal(clean.stall_topk_ids, res.stall_topk_ids)
+    assert clean.n_superior == res.n_superior
+    assert os.path.exists(f"{ck}.w0of2.npz")     # per-worker atomic file
+    # no checkpoint at all: the crashed span replays from scratch instead
+    plan2 = FaultPlan([FaultEvent(0, 1, "crash")])
+    res2 = sweep_eng.run(0, n, workers=2, fault_plan=plan2)
+    assert np.array_equal(clean.pareto_ids, res2.pareto_ids)
+
+
+def test_sweep_span_retry_budget_exhausts(sweep_eng):
+    plan = FaultPlan([FaultEvent(0, 0, "crash"), FaultEvent(0, 1, "crash")])
+    with pytest.raises(RuntimeError, match="failed after 0 retries"):
+        sweep_eng.run(0, 2 * CH, fault_plan=plan,
+                      span_retry=RetryPolicy(max_retries=0))
+
+
+def test_sweep_corrupt_checkpoint_quarantined_not_fatal(sweep_eng, tmp_path):
+    """A truncated checkpoint (kill mid-write on a non-atomic filesystem,
+    bit rot, ...) is quarantined with a warning and the span restarts
+    fresh — resume NEVER crashes on a bad file, and the digest guard
+    catches what np.load alone would not."""
+    n = 2 * CH
+    clean = sweep_eng.run(0, n)
+    ck = str(tmp_path / "ck")
+    sweep_eng.run(0, n, checkpoint_path=ck)
+    fname = f"{ck}.npz"
+    blob = open(fname, "rb").read()
+    with open(fname, "wb") as f:
+        f.write(blob[: len(blob) // 2])          # truncate mid-file
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        res = sweep_eng.run(0, n, resume_from=ck)
+    assert os.path.exists(f"{fname}.quarantined")
+    assert not os.path.exists(f"{fname}.tmp")    # atomic writes leave no tmp
+    assert np.array_equal(clean.pareto_ids, res.pareto_ids)
+    assert np.array_equal(clean.topk_val, res.topk_val)
+
+
+def test_sweep_mid_kill_checkpoint_resume_bit_identical(sweep_eng, tmp_path):
+    """Kill the sweep mid-run (retry budget 0 -> the crash surfaces), then
+    resume from the atomic checkpoint: the finished result is bit-identical
+    to the uninterrupted run."""
+    n = 4 * CH
+    clean = sweep_eng.run(0, n)
+    ck = str(tmp_path / "kill")
+    with pytest.raises(RuntimeError, match="failed after"):
+        sweep_eng.run(0, n, checkpoint_path=ck, checkpoint_every=1,
+                      fault_plan=FaultPlan([FaultEvent(0, 2, "crash")]),
+                      span_retry=RetryPolicy(max_retries=0))
+    assert os.path.exists(f"{ck}.npz")           # chunks 0-1 were persisted
+    res = sweep_eng.run(0, n, resume_from=ck)
+    assert res.n_evaluated == n
+    assert np.array_equal(clean.pareto_ids, res.pareto_ids)
+    assert np.array_equal(clean.pareto_y, res.pareto_y)
+    assert np.array_equal(clean.stall_topk_ids, res.stall_topk_ids)
+    assert clean.n_superior == res.n_superior
+
+
+def test_portfolio_sweep_mid_kill_resume_bit_identical(tmp_path):
+    """The same kill-and-resume guarantee in portfolio mode: per-scenario
+    fronts, robust front and stall tables all match the clean run."""
+    wls, scen = zoo_suite(archs=("qwen2-moe-a2.7b", "llama3.2-1b"),
+                          smoke=True)
+    ev = make_evaluator(wls, tier="proxy", scenarios=scen)
+    eng = SweepEngine(ev, chunk_size=CH, stall_topk=4)
+    n = 3 * CH
+    clean = eng.run(0, n)
+    ck = str(tmp_path / "pck")
+    with pytest.raises(RuntimeError, match="failed after"):
+        eng.run(0, n, checkpoint_path=ck, checkpoint_every=1,
+                fault_plan=FaultPlan([FaultEvent(0, 2, "crash")]),
+                span_retry=RetryPolicy(max_retries=0))
+    res = eng.run(0, n, resume_from=ck)
+    assert np.array_equal(clean.pareto_ids, res.pareto_ids)
+    assert np.array_equal(clean.topk_ids, res.topk_ids)
+    for nm in clean.scenario_names:
+        assert np.array_equal(clean.scenario(nm).pareto_ids,
+                              res.scenario(nm).pareto_ids)
+        assert np.allclose(clean.scenario(nm).stall_topk_val,
+                           res.scenario(nm).stall_topk_val, rtol=1e-7)
+    assert clean.n_superior == res.n_superior
+
+
+# ------------------------------------------- end-to-end: chaos campaign
+def test_campaign_through_degrading_service_under_chaos():
+    """Acceptance: a CampaignRunner driven through EvalService over a
+    chaos-wrapped ShardedEvaluator reproduces the clean campaign exactly
+    (samples AND hypervolume), with the fault traffic visible in the
+    result's service counters and nothing unhandled."""
+    budget = 12
+    seeds = {"memory_bw": SPACE.sample(np.random.default_rng(1), 2),
+             "tensor_compute": SPACE.sample(np.random.default_rng(2), 2)}
+    clean = CampaignRunner(EvalService(_fresh()),
+                           proxy=get_evaluator("proxy"), seed=0).run(
+        budget=budget, seeds={k: v.copy() for k, v in seeds.items()})
+    plan = FaultPlan.seeded(11, workers=2, dispatches=64, rate=0.3,
+                            kinds=("crash", "slow", "corrupt"), delay_s=0.01)
+    sharded = ShardedEvaluator(_fresh(), workers=2, retries=5,
+                               shard_timeout_s=2.0, fault_plan=plan)
+    svc = EvalService(sharded)
+    res = CampaignRunner(svc, proxy=get_evaluator("proxy"), seed=0).run(
+        budget=budget, seeds=seeds)
+    assert plan.scheduled > len(plan)            # faults actually fired
+    assert sharded.retried + sharded.corrupt_rejected > 0
+    assert [s.idx.tolist() for s in res.samples] == \
+           [s.idx.tolist() for s in clean.samples]
+    assert res.phv == pytest.approx(clean.phv, rel=0, abs=0)
+    assert res.service_counters is not None
+    assert res.service_counters["campaign_resubmits"] == 0
+    assert res.service_counters["evaluator_retried"] == sharded.retried
+    assert res.service_counters["degraded"] == svc.degraded
+    assert "service" in res.telemetry_dict()
+    sharded.close()

@@ -16,8 +16,9 @@ from repro.optim import (AdamWConfig, adamw_init, adamw_update, cosine_lr,
 from repro.data import SyntheticLMDataset, make_batch_iter
 from repro.checkpoint import (save_checkpoint, restore_checkpoint,
                               AsyncCheckpointer, latest_step)
-from repro.runtime import (RetryPolicy, run_with_retries, StragglerMonitor,
-                           plan_elastic_mesh)
+from repro.runtime import (Heartbeat, PoolPlan, RetryPolicy, run_with_retries,
+                           StragglerMonitor, plan_elastic_mesh,
+                           plan_elastic_pool)
 
 
 # ----------------------------------------------------------------- optimizer
@@ -152,6 +153,68 @@ def test_retries_exhausted():
         run_with_retries(step, lambda a: None, RetryPolicy(max_retries=2))
 
 
+def test_retry_policy_fresh_default_per_call():
+    """run_with_retries(policy=None) builds a NEW default policy per call —
+    the old module-level default instance was shared by every caller."""
+    import repro.runtime.fault as fault_mod
+    import inspect
+    sig = inspect.signature(run_with_retries)
+    assert sig.parameters["policy"].default is None
+    assert isinstance(fault_mod.RetryPolicy(), RetryPolicy)
+    # and None still retries with the default budget
+    calls = {"n": 0}
+
+    def step():
+        calls["n"] += 1
+        if calls["n"] < 2:
+            raise RuntimeError("flake")
+        return calls["n"]
+
+    assert run_with_retries(step, lambda a: None) == 2
+
+
+def test_retry_policy_backoff_capped_exponential():
+    p = RetryPolicy(backoff_s=0.5, max_backoff_s=3.0, jitter=0.0)
+    assert p.delay(0) == pytest.approx(0.5)
+    assert p.delay(1) == pytest.approx(1.0)
+    assert p.delay(2) == pytest.approx(2.0)
+    assert p.delay(3) == pytest.approx(3.0)      # capped
+    assert p.delay(10) == pytest.approx(3.0)
+    assert RetryPolicy(backoff_s=0.0).delay(5) == 0.0
+
+
+def test_retry_policy_jitter_spreads_and_bounds():
+    import random as _random
+    p = RetryPolicy(backoff_s=1.0, max_backoff_s=8.0, jitter=0.25)
+    rng = _random.Random(0)
+    ds = [p.delay(1, rng=rng) for _ in range(200)]
+    assert all(2.0 * 0.75 <= d <= 2.0 * 1.25 for d in ds)
+    assert len({round(d, 6) for d in ds}) > 50    # actually randomized
+
+
+def test_retry_policy_retryable_is_typed_tuple():
+    p = RetryPolicy()
+    assert isinstance(p.retryable, tuple)
+    assert all(isinstance(t, type) for t in p.retryable)
+    # non-retryable exceptions propagate unchanged
+    with pytest.raises(KeyError):
+        run_with_retries(lambda: (_ for _ in ()).throw(KeyError("x")),
+                         lambda a: None,
+                         RetryPolicy(retryable=(RuntimeError,)))
+    # frozen: policies are shareable without aliasing state
+    with pytest.raises(Exception):
+        p.max_retries = 99
+
+
+def test_heartbeat_file_liveness(tmp_path):
+    path = str(tmp_path / "hb")
+    hb = Heartbeat(path, interval_s=0.0)
+    assert not Heartbeat.is_alive(path, timeout_s=10.0)   # no file yet
+    hb.beat(step=3)
+    assert Heartbeat.is_alive(path, timeout_s=10.0)
+    assert not Heartbeat.is_alive(path, timeout_s=0.0)    # already expired
+
+
 def test_straggler_monitor():
     mon = StragglerMonitor(window=16, threshold=2.0)
     for i in range(12):
@@ -169,3 +232,45 @@ def test_elastic_plan_shrinks_data_axis():
     assert p.devices_used == 496
     p = plan_elastic_mesh(8, model_axis=16)
     assert p is None
+
+
+def test_elastic_mesh_edge_cases():
+    # fewer devices than one model group -> no plan at all
+    assert plan_elastic_mesh(15, model_axis=16) is None
+    # exactly one group: single pod, DP degree 1
+    p = plan_elastic_mesh(16, model_axis=16)
+    assert p.shape == (1, 16) and p.dp_degree == 1 and p.devices_used == 16
+    # odd group count (5 groups of 16): cannot split into 2 balanced pods
+    p = plan_elastic_mesh(80, model_axis=16)
+    assert p.shape == (5, 16) and p.axes == ("data", "model")
+    assert "single pod" in p.note
+    # even group count >= 4 prefers two pods
+    p = plan_elastic_mesh(96, model_axis=16)    # 6 groups -> 2 pods x 3
+    assert p.shape == (2, 3, 16) and p.dp_degree == 6
+    # pod preference off: stays a single flat mesh
+    p = plan_elastic_mesh(96, model_axis=16, prefer_pods=False)
+    assert p.shape == (6, 16)
+    # leftover devices are dropped, not oversubscribed
+    p = plan_elastic_mesh(50, model_axis=16)
+    assert p.devices_used == 48 and p.dp_degree == 3
+
+
+def test_elastic_pool_plan():
+    # no backlog: shrink to the survivors, never below min_workers
+    p = plan_elastic_pool(3, 0, min_workers=1, max_workers=8)
+    assert isinstance(p, PoolPlan)
+    assert p.workers == 3 and not p.grow and "hold" in p.note
+    p = plan_elastic_pool(0, 0, min_workers=2, max_workers=8)
+    assert p.workers == 2                        # clamped up to min
+    # backlog pressure grows toward the cap
+    p = plan_elastic_pool(2, 12, max_workers=8, target_queue=2.0)
+    assert p.workers == 6 and p.grow and "grow" in p.note
+    p = plan_elastic_pool(2, 100, max_workers=8)
+    assert p.workers == 8                        # clamped to max
+    # light backlog after worker loss: shrink instead of oversubscribing
+    p = plan_elastic_pool(6, 2, min_workers=1, max_workers=8)
+    assert p.workers == 1 and "shrink" in p.note
+    with pytest.raises(ValueError, match="min_workers"):
+        plan_elastic_pool(2, 0, min_workers=0)
+    with pytest.raises(ValueError, match="max_workers"):
+        plan_elastic_pool(2, 0, min_workers=4, max_workers=2)
