@@ -89,8 +89,11 @@ def run(budget: int = 20, smoke: bool = False,
     lines.append(f"campaigns,adaptive_phv_frac_final,"
                  f"{adaptive.phv_frac_curve()[-1]:.4f}")
     lines.append(f"campaigns,adaptive_rounds,{adaptive.rounds}")
-    lines.append(f"campaigns,adaptive_early_stopped,"
-                 f"{len(adaptive.early_stopped)}")
+    bw = adaptive.budget_weights or {}
+    lines.append(f"campaigns,adaptive_weight_min,"
+                 f"{min(bw.values(), default=0):.3f}")
+    lines.append(f"campaigns,adaptive_weight_max,"
+                 f"{max(bw.values(), default=0):.3f}")
     lines.append(f"campaigns,adaptive_fused_dispatches,{adaptive.dispatches}")
     lines.append(f"campaigns,adaptive_vs_uniform_phv,"
                  f"{adaptive.phv / max(results['seeded'].phv, 1e-300):.3f}x")

@@ -1,0 +1,166 @@
+"""DSE-as-a-service benchmark: tick latency, QoS tiers, transport overhead.
+
+Measures the serving layer end to end:
+
+* **tick latency vs K clients** — one coalescing ``EvalService.tick``
+  over K concurrent single-request clients (the fused-dispatch scaling
+  the campaign runner rides);
+* **tier p50/p99 under mixed load** — an interactive flood plus batch and
+  scavenger traffic through the weighted-deficit drain, with the
+  telemetry percentiles reported and scavenger throughput ASSERTED > 0
+  (the anti-starvation floor);
+* **transport overhead** — the same batch through the in-process
+  evaluator, a 2-process pool and a 2-worker loopback socket fleet, with
+  per-transport overhead vs in-process reported;
+* **kill-mid-sweep smoke** — a chunked evaluation stream over the socket
+  fleet with one worker SIGKILLed between chunks; the merged report must
+  be bit-identical to the in-process result (the CI acceptance gate:
+  ``service,smoke_bit_identical,1``).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.distributed import EvalService, ShardedEvaluator, concat_reports
+from repro.perfmodel import EvalRequest, ModelEvaluator, get_evaluator
+from repro.perfmodel.designspace import SPACE
+from repro.serve import Gateway, start_worker_process
+
+
+def _fresh(tier: str = "proxy") -> ModelEvaluator:
+    return ModelEvaluator(get_evaluator(tier).models, tier=tier)
+
+
+def _identical(a, b) -> bool:
+    if not (np.array_equal(a.area, b.area) and a.workloads == b.workloads):
+        return False
+    return all(np.array_equal(a.latency[w], b.latency[w])
+               for w in a.workloads)
+
+
+def _timed(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False, full: bool = False) -> List[str]:
+    lines: List[str] = []
+    rng = np.random.default_rng(0)
+    repeats = 3 if smoke else 5
+
+    # ---- tick latency vs K concurrent clients ------------------------
+    rows = 4
+    for k in (1, 4, 16):
+        svc = EvalService(_fresh())
+        # warm the jit paths on rows the timed pass never reuses
+        svc.submit(EvalRequest(SPACE.sample(rng, rows)))
+        svc.tick()
+        idx = SPACE.sample(rng, k * rows)       # fresh rows: no cache help
+
+        def one_round(k=k, svc=svc, idx=idx):
+            futs = [svc.submit(EvalRequest(idx[i * rows:(i + 1) * rows]),
+                               client=f"c{i}") for i in range(k)]
+            svc.tick()
+            assert all(f.done() for f in futs)
+
+        t = _timed(one_round, 1)                # single shot: cold rows
+        lines.append(f"service,tick_ms_k{k},{t * 1e3:.2f}")
+        lines.append(f"service,fused_dispatches_k{k},{svc.fused_dispatches}")
+        svc.close()
+
+    # ---- tier p50/p99 under mixed load -------------------------------
+    svc = EvalService(_fresh(), max_rows_per_tick=16)
+    n_inter, n_batch, n_scav = (60, 20, 10) if smoke else (200, 60, 30)
+    pool_idx = SPACE.sample(rng, n_inter + n_batch + n_scav)
+    k = 0
+    futs = []
+    for tier, n in (("interactive", n_inter), ("batch", n_batch),
+                    ("scavenger", n_scav)):
+        for _ in range(n):
+            futs.append(svc.submit(EvalRequest(pool_idx[k:k + 1]),
+                                   client=tier, tier=tier))
+            k += 1
+    ticks = 0
+    while not all(f.done() for f in futs):
+        svc.tick()
+        ticks += 1
+        if ticks <= max(2, n_scav):
+            # the anti-starvation floor: scavenger progress EVERY tick
+            assert svc.tier_served["scavenger"] >= min(ticks, n_scav), \
+                "scavenger tier starved under interactive flood"
+    tiers = svc.telemetry()["tiers"]
+    for t in ("interactive", "batch", "scavenger"):
+        lines.append(f"service,{t}_served,{tiers[t]['served']}")
+        lines.append(f"service,{t}_p50_ms,{tiers[t]['p50_ms']}")
+        lines.append(f"service,{t}_p99_ms,{tiers[t]['p99_ms']}")
+    lines.append(f"service,mixed_load_ticks,{ticks}")
+    svc.close()
+
+    # ---- transport overhead + kill-mid-sweep smoke -------------------
+    batch = SPACE.sample(rng, 256 if smoke else 2_048)
+    req = EvalRequest(batch, detail="stalls")
+    local = _fresh()
+    want = local.evaluate(req)
+    t_local = _timed(lambda: local.evaluate(req), repeats)
+    lines.append(f"service,inproc_ms,{t_local * 1e3:.1f}")
+
+    proc = ShardedEvaluator(_fresh(), workers=2, mode="process")
+    assert _identical(proc.evaluate(req), want)
+    t_proc = _timed(lambda: proc.evaluate(req), repeats)
+    proc.close()
+    lines.append(f"service,process_ms,{t_proc * 1e3:.1f}")
+    lines.append(f"service,process_overhead_pct,"
+                 f"{100.0 * (t_proc - t_local) / max(t_local, 1e-9):.1f}")
+
+    w1 = start_worker_process()
+    w2 = start_worker_process()
+    try:
+        sock = ShardedEvaluator(_fresh(), mode="socket",
+                                addresses=[w1.address, w2.address],
+                                elastic=True)
+        assert _identical(sock.evaluate(req), want)
+        t_sock = _timed(lambda: sock.evaluate(req), repeats)
+        lines.append(f"service,socket_ms,{t_sock * 1e3:.1f}")
+        lines.append(f"service,socket_overhead_pct,"
+                     f"{100.0 * (t_sock - t_local) / max(t_local, 1e-9):.1f}")
+
+        # the CI acceptance gate: chunked sweep, one worker SIGKILLed
+        # between chunks, merged result bit-identical to in-process
+        chunks = np.array_split(batch, 8)
+        parts = []
+        for i, chunk in enumerate(chunks):
+            if i == 2:
+                w2.kill()                       # no goodbye, mid-sweep
+            parts.append(sock.evaluate(EvalRequest(chunk, detail="stalls")))
+        merged = concat_reports(parts)
+        ok = _identical(merged, want)
+        lines.append(f"service,smoke_bit_identical,{int(ok)}")
+        assert ok, "post-kill merged report diverged from in-process"
+        lines.append(f"service,post_kill_evictions,"
+                     f"{sock.registry.snapshot()['evictions']}")
+        sock.close()
+    finally:
+        for w in (w1, w2):
+            if w.alive():
+                w.kill()
+
+    # ---- gateway admission sanity ------------------------------------
+    gw = Gateway(_fresh(), rows_per_window=10_000, max_queued_rows=None)
+    gw.objectives(SPACE.sample(rng, 8))
+    tel = gw.telemetry()
+    lines.append(f"service,gateway_admitted,{tel['admission']['admitted']}")
+    lines.append(f"service,gateway_rejected,{tel['admission']['rejected']}")
+    gw.close()
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(smoke=True):
+        print(line)

@@ -25,7 +25,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table3,fig45,fig6,budget20,table4,"
                          "sweep,campaigns,portfolio,distributed,faults,"
-                         "kernels,archs,ablation")
+                         "service,kernels,archs,ablation")
     args = ap.parse_args()
     if args.full and args.smoke:
         raise SystemExit("--full and --smoke are mutually exclusive")
@@ -73,6 +73,11 @@ def main() -> None:
         from benchmarks import bench_faults
         benches.append(("faults",
                         lambda: bench_faults.run(smoke=args.smoke)))
+    if only is None or "service" in only:
+        from benchmarks import bench_service
+        benches.append(("service",
+                        lambda: bench_service.run(smoke=args.smoke,
+                                                  full=args.full)))
     if only is None or "kernels" in only:
         from benchmarks import bench_kernels
         benches.append(("kernels", bench_kernels.run))

@@ -57,11 +57,13 @@ def main() -> None:
     for policy in ("uniform", "adaptive"):
         runner = CampaignRunner(service, proxy=proxy, seed=0, policy=policy)
         res = runner.run(budget=args.budget, sweep=sweep)
-        stopped = (f", early-stopped={sorted(res.early_stopped)}"
-                   if res.early_stopped else "")
+        weights = ("" if res.budget_weights is None else
+                   ", weights=" + "/".join(
+                       f"{lb}:{w:.2f}"
+                       for lb, w in sorted(res.budget_weights.items())))
         print(f"campaigns[{policy}]: {len(res.per_campaign)} campaigns, "
               f"{len(res.samples)} evals in {res.rounds} rounds / "
-              f"{res.dispatches} fused dispatches{stopped}")
+              f"{res.dispatches} fused dispatches{weights}")
     print(f"service: {service.submits} requests -> "
           f"{service.fused_dispatches} fused dispatches, "
           f"{service.cache_hits} cross-client cache hits")

@@ -30,10 +30,13 @@ per scenario class.
 
 Scheduling is pluggable (``policy=``): ``"uniform"`` gives every live
 campaign one evaluation per round (round-robin clipping); ``"adaptive"``
-reallocates the shared budget toward campaigns whose regret is still
-falling — campaigns that have not improved the merged archive (new Pareto
-point or per-objective best) for ``patience`` rounds are early-stopped and
-their remaining budget flows to the campaigns still making progress.
+scores each campaign by its regret slope — an EWMA of per-round archive
+gains (new Pareto point or per-objective best) — and drains the shared
+budget through :func:`allocate_slots`, a weighted-deficit allocator over
+``weight_floor + gain_ewma``.  Budget flows CONTINUOUSLY toward campaigns
+whose regret is still falling; a stalled campaign's weight decays toward
+the floor instead of being binarily early-stopped, so it keeps probing at
+a trickle and can win budget back the moment it improves again.
 
 Every observation is instrumented: the merged archive's per-objective
 regret against the oracle front (:meth:`~repro.perfmodel.evaluator.
@@ -64,7 +67,41 @@ REFERENCE_CAMPAIGN = "a100"
 
 POLICIES = ("uniform", "adaptive")
 
-TELEMETRY_VERSION = 2
+TELEMETRY_VERSION = 3
+
+#: Adaptive policy: minimum scheduling weight of a fully-stalled campaign.
+#: Nonzero so no campaign is ever starved outright — a long-stalled
+#: trajectory still gets ~floor/total of the budget to probe with.
+ADAPTIVE_WEIGHT_FLOOR = 0.05
+
+
+def allocate_slots(order: List[str], credit: Dict[str, float],
+                   weights: Mapping[str, float], slots: int) -> List[str]:
+    """Weighted-deficit slot allocation for one scheduling round.
+
+    Each label in ``order`` accrues ``slots * w / sum(w)`` credit (its
+    fair share of this round), then the ``slots`` highest-credit labels
+    are chosen and debited 1.0 each.  ``credit`` is mutated in place and
+    carries between rounds, so fractional shares accumulate: a label
+    with 10% of the total weight is chosen ~1 round in 10, never zero —
+    the same deficit-round-robin that the EvalService QoS drain uses for
+    tiers, applied to campaigns.
+
+    Ties break toward the front of ``order`` (stable sort), and the
+    chosen labels are returned in ``order`` sequence.
+    """
+    if slots <= 0 or not order:
+        return []
+    slots = min(int(slots), len(order))
+    total = sum(weights[lb] for lb in order)
+    if total <= 0:
+        raise ValueError("allocate_slots needs positive total weight")
+    for lb in order:
+        credit[lb] = credit.get(lb, 0.0) + slots * weights[lb] / total
+    chosen = set(sorted(order, key=lambda lb: -credit[lb])[:slots])
+    for lb in chosen:
+        credit[lb] -= 1.0
+    return [lb for lb in order if lb in chosen]
 
 
 @dataclasses.dataclass
@@ -92,7 +129,11 @@ class CampaignSetResult:
     rounds: int
     policy: str = "uniform"
     early_stopped: Dict[str, int] = dataclasses.field(default_factory=dict)
-    # ^ campaign label -> round at which the adaptive policy stopped it
+    # ^ legacy binary early-stop ledger; the continuous adaptive policy
+    #   never stops a campaign outright, so this stays empty since v3
+    budget_weights: Optional[Dict[str, float]] = None
+    # ^ final per-campaign scheduling weights (floor + gain EWMA) under
+    #   the adaptive policy; None under uniform
     service_counters: Optional[dict] = None
     # ^ EvalService.telemetry() snapshot (degradation ladder counters,
     #   resubmits) when the runner drove a service; None otherwise
@@ -105,6 +146,8 @@ class CampaignSetResult:
             "dispatches": self.dispatches,
             "policy": self.policy,
             "early_stopped": dict(self.early_stopped),
+            "budget_weights": (None if self.budget_weights is None
+                               else dict(self.budget_weights)),
             "service": self.service_counters,
             "records": [dataclasses.asdict(r) for r in self.telemetry],
         }
@@ -150,14 +193,18 @@ class CampaignRunner:
         step-0 seed list; all are evaluated — they spend budget).
     policy:
         ``"uniform"`` — one evaluation per live campaign per round with
-        round-robin clipping.  ``"adaptive"`` — budget flows toward
-        campaigns whose regret is still falling: when the remaining budget
-        cannot cover every campaign, the most-recently-improving ones
-        propose first, and a campaign that has not improved the merged
-        archive for ``patience`` rounds is early-stopped (its share of the
-        budget is reallocated to the survivors).
+        round-robin clipping.  ``"adaptive"`` — continuous budget
+        reallocation by regret slope: each campaign carries an EWMA of
+        its per-round archive gains, its scheduling weight is
+        ``ADAPTIVE_WEIGHT_FLOOR + gain_ewma``, and each round's slots are
+        drained through the weighted-deficit :func:`allocate_slots`.
+        Improving campaigns propose (nearly) every round; stalled ones
+        decay toward a trickle but are never stopped outright, so a
+        late bloomer wins its budget share back the moment it improves.
     patience:
-        Adaptive-policy stall window, in rounds.
+        Adaptive-policy memory horizon: the gain EWMA's smoothing is
+        ``alpha = 1 / (1 + patience)``, so a campaign's weight decays to
+        ~the floor after a few ``patience`` windows without improvement.
     """
 
     def __init__(self, evaluator: Evaluator, *,
@@ -288,19 +335,29 @@ class CampaignRunner:
         budget_stop = self.ee.evals + int(budget)
         rounds = 0
         prev_phv = 0.0
-        last_gain: Dict[str, int] = {label: 0 for label in campaigns}
         early_stopped: Dict[str, int] = {}
+        # adaptive policy state: regret-slope EWMA per campaign
+        # (optimistic init 1.0 — every campaign starts fully funded) and
+        # the carrying deficit credit for allocate_slots
+        gain_alpha = 1.0 / (1.0 + self.patience)
+        gain_ewma: Dict[str, float] = {label: 1.0 for label in campaigns}
+        credit: Dict[str, float] = {label: 0.0 for label in campaigns}
 
         order = list(campaigns)
         while self.ee.evals < budget_stop:
             rounds += 1
             room = budget_stop - self.ee.evals
             if self.policy == "adaptive":
-                # budget flows to falling-regret campaigns: the most
-                # recently improving propose first when `room` clips
-                order.sort(key=lambda lb: -last_gain[lb])
+                # budget flows to falling-regret campaigns continuously:
+                # weighted-deficit allocation over floor + gain EWMA
+                weights = {lb: ADAPTIVE_WEIGHT_FLOOR + gain_ewma[lb]
+                           for lb in order}
+                chosen = allocate_slots(order, credit, weights,
+                                        min(room, len(order)))
+            else:
+                chosen = order[:room]
             proposals = []
-            for label in order[:room]:
+            for label in chosen:
                 camp = campaigns[label]
                 idx, directive = camp.propose()
                 proposals.append((label, camp, idx, directive))
@@ -309,9 +366,13 @@ class CampaignRunner:
             # EvalRequest); with an EvalService each campaign submits its
             # own request and the SERVICE's coalescing tick fuses them.
             if self._service is not None:
+                # campaign traffic is latency-critical for the human in
+                # the loop: ride the interactive QoS tier so background
+                # batch/scavenger sweeps cannot starve the DSE rounds
                 futures = [self._service.submit(
                     EvalRequest(p[2][None, :], detail="stalls"),
-                    client=p[0])                 # campaign label = client
+                    client=p[0],                 # campaign label = client
+                    tier="interactive")
                     for p in proposals]
                 self._service.tick()
                 while not all(f.done() for f in futures):
@@ -324,7 +385,7 @@ class CampaignRunner:
                         self.service_resubmits += 1
                         retried.append(self._service.submit(
                             EvalRequest(p[2][None, :], detail="stalls"),
-                            client=p[0]))
+                            client=p[0], tier="interactive"))
                 while retried and not all(f.done() for f in retried):
                     self._service.tick()
                 for fut in retried:
@@ -344,8 +405,8 @@ class CampaignRunner:
                     objectives=[float(v) for v in sample.objectives],
                     phv=merged.phv(),
                 )
-                if record.phv > prev_phv or improved:
-                    last_gain[label] = rounds   # its regret is still falling
+                gained = 1.0 if (record.phv > prev_phv or improved) else 0.0
+                gain_ewma[label] += gain_alpha * (gained - gain_ewma[label])
                 prev_phv = record.phv
                 if self.oracle is not None:
                     record.regret = [float(v)
@@ -355,17 +416,9 @@ class CampaignRunner:
                 telemetry.append(record)
                 if step_callback is not None:
                     step_callback(record, sample)
-            if self.policy == "adaptive":
-                # early-stop campaigns whose archive contribution stalled
-                # for `patience` rounds; their budget share flows onward
-                for label in [lb for lb in order
-                              if rounds - last_gain[lb] >= self.patience]:
-                    if len(order) == 1:
-                        break                   # always keep one campaign
-                    order.remove(label)
-                    early_stopped[label] = rounds
-            # round-robin fairness: rotate which campaign is clipped when
-            # the remaining budget no longer covers every live campaign
+            # round-robin fairness: rotate which campaign is clipped
+            # (uniform) or wins credit ties (adaptive) when the remaining
+            # budget no longer covers every live campaign
             order = order[1:] + order[:1]
 
         return CampaignSetResult(
@@ -379,6 +432,9 @@ class CampaignRunner:
             rounds=rounds,
             policy=self.policy,
             early_stopped=early_stopped,
+            budget_weights=({lb: round(ADAPTIVE_WEIGHT_FLOOR + g, 4)
+                             for lb, g in gain_ewma.items()}
+                            if self.policy == "adaptive" else None),
             service_counters=(dict(self._service.telemetry(),
                                    campaign_resubmits=self.service_resubmits)
                               if self._service is not None else None),

@@ -32,15 +32,21 @@ fault_plan=plan))`` coalesces across clients, shards across workers and
 injects failures deterministically.  The multi-worker full-space sweep
 lives with its engine: ``SweepEngine(...).run(workers=N,
 fault_plan=plan)``.
+
+Cross-machine, the same pieces ride TCP: :mod:`repro.serve` adds the
+socket worker fabric (``mode='socket'`` + ``addresses=``), QoS tiers in
+the service tick (``submit(..., tier=...)``) and the admission-controlled
+:class:`~repro.serve.gateway.Gateway` front door.
 """
 
 from repro.distributed.faults import (FAULT_KINDS, ChaosPool, FaultEvent,
                                       FaultPlan, WorkerFault, WorkerRegistry)
-from repro.distributed.service import DEGRADE_RUNGS, EvalService
+from repro.distributed.service import (DEGRADE_RUNGS, QOS_TIERS, EvalService)
 from repro.distributed.sharded import (MODES, ShardedEvaluator, ShardPayload,
-                                       concat_reports)
+                                       concat_reports, evaluator_from_spec)
 
 __all__ = ["EvalService", "ShardedEvaluator", "ShardPayload",
-           "concat_reports", "MODES", "DEGRADE_RUNGS",
+           "concat_reports", "evaluator_from_spec", "MODES",
+           "DEGRADE_RUNGS", "QOS_TIERS",
            "FaultPlan", "FaultEvent", "ChaosPool", "WorkerFault",
            "WorkerRegistry", "FAULT_KINDS"]

@@ -281,6 +281,25 @@ class WorkerRegistry:
             self.evictions += len(gone)
             return gone
 
+    def snapshot(self) -> Dict[str, object]:
+        """Fleet state for telemetry: live/known ids, beat ages, and the
+        eviction / re-registration counters (gateway `telemetry()` rides
+        this)."""
+        now = self._now()
+        with self._lock:
+            live = sorted(w for w, ts in self._beats.items()
+                          if w not in self._dead
+                          and now - ts < self.timeout_s)
+            return {
+                "live": live,
+                "known": sorted(self._known),
+                "beat_age_s": {w: round(now - ts, 3)
+                               for w, ts in sorted(self._beats.items())},
+                "timeout_s": self.timeout_s,
+                "evictions": self.evictions,
+                "reregistrations": self.reregistrations,
+            }
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._beats)

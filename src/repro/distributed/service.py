@@ -20,13 +20,20 @@ resolving every request's future from the shared result.
   process, not two.  A request whose rows are all cached at sufficient
   detail resolves at :meth:`~EvalService.submit` time with NO dispatch,
   whoever evaluated it first.
-* **Per-client fairness**: requests queue per client (``submit(...,
-  client=...)``) and the tick drains them ROUND-ROBIN across clients, one
-  request per client per pass, rotating the starting client between
-  ticks.  With ``max_rows_per_tick`` set, a chatty client that floods the
-  queue can no longer starve the others: every tick serves each live
-  client before granting anyone a second request, and leftovers stay
-  queued for the next tick.
+* **QoS tiers + per-client fairness**: requests queue per
+  ``(tier, client)`` (``submit(..., tier="interactive" | "batch" |
+  "scavenger", client=...)``) and the tick drains tiers by WEIGHTED
+  DEFICIT round-robin (default weights 8 : 3 : 1): each drain pass
+  credits every backlogged tier its weight and serves the tier with the
+  largest accumulated credit, debiting the rows served — so interactive
+  campaign steps preempt bulk sweep traffic *proportionally*, not
+  absolutely.  An anti-starvation floor grants every backlogged tier one
+  request per tick before weights apply, so scavenger throughput stays
+  > 0 under saturating interactive load.  Within a tier, clients are
+  served round-robin, one request per client per pass, rotating the
+  starting client — a chatty client cannot starve its tier peers.
+  ``telemetry()["tiers"]`` reports per-tier served/queued counts and
+  p50/p99 queue-to-resolve latency.
 * **Evaluator protocol**: the service itself implements ``evaluate`` /
   ``objectives`` / ``workloads`` — hand it to ``CampaignRunner``,
   ``LuminaDSE``, a baseline driver or a bench wherever an ``Evaluator``
@@ -48,7 +55,7 @@ import time
 from collections import OrderedDict, deque
 from concurrent.futures import Future
 from dataclasses import dataclass
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -60,6 +67,17 @@ _DETAIL_LEVEL = {name: i for i, name in enumerate(DETAILS)}
 
 DEGRADE_RUNGS = ("narrow", "proxy", "cached")
 
+# QoS tiers, highest priority first; the drain order of the
+# anti-starvation floor and the tie-break order of the deficit scheduler
+QOS_TIERS = ("interactive", "batch", "scavenger")
+
+# default weighted-deficit drain shares (rows per credit pass)
+DEFAULT_TIER_WEIGHTS = {"interactive": 8.0, "batch": 3.0, "scavenger": 1.0}
+
+# cap banked credit at this many times the tier weight: an idle tier can
+# bank a short burst of priority, not an unbounded IOU
+_DEFICIT_BURST = 64.0
+
 
 @dataclass
 class _Pending:
@@ -68,7 +86,9 @@ class _Pending:
     names: Tuple[str, ...]
     future: Future
     client: str
+    tier: str = "batch"
     deadline: Optional[float] = None     # absolute monotonic deadline
+    t_submit: float = 0.0                # monotonic submit time (latency)
 
 
 def _assemble(rows: List[PPAReport], names: Tuple[str, ...],
@@ -138,7 +158,8 @@ class EvalService:
                  cache: Optional[RowCache] = None,
                  max_rows_per_tick: Optional[int] = None,
                  autostart: bool = False, window_s: float = 0.002,
-                 degrade: Tuple[str, ...] = DEGRADE_RUNGS):
+                 degrade: Tuple[str, ...] = DEGRADE_RUNGS,
+                 tier_weights: Optional[Dict[str, float]] = None):
         self.evaluator = as_evaluator(evaluator)
         self.space = self.evaluator.space
         self.tier = self.evaluator.tier
@@ -147,9 +168,27 @@ class EvalService:
                                   else int(max_rows_per_tick))
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
-        # per-client FIFO queues, drained round-robin by the tick
-        self._queues: "OrderedDict[str, Deque[_Pending]]" = OrderedDict()
-        self._rr_start = 0               # rotating round-robin entry point
+        # per-(tier, client) FIFO queues: tiers drain by weighted deficit,
+        # clients within a tier round-robin
+        self._queues: Dict[str, "OrderedDict[str, Deque[_Pending]]"] = {
+            t: OrderedDict() for t in QOS_TIERS}
+        self._rr = {t: 0 for t in QOS_TIERS}   # per-tier client rotation
+        self._deficit = {t: 0.0 for t in QOS_TIERS}
+        weights = dict(DEFAULT_TIER_WEIGHTS)
+        if tier_weights:
+            unknown = set(tier_weights) - set(QOS_TIERS)
+            if unknown:
+                raise ValueError(f"unknown QoS tiers {sorted(unknown)}; "
+                                 f"choose from {QOS_TIERS}")
+            for t, w in tier_weights.items():
+                if float(w) <= 0:
+                    raise ValueError(f"tier weight for {t!r} must be > 0")
+                weights[t] = float(w)
+        self.tier_weights = weights
+        # per-tier service stats: resolve counts + queue-to-resolve latency
+        self.tier_served = {t: 0 for t in QOS_TIERS}
+        self._tier_lat: Dict[str, Deque[float]] = {
+            t: deque(maxlen=4096) for t in QOS_TIERS}
         # THE shared cross-client design-row cache (ExplorationEngine reads
         # this same object when its evaluator is a service)
         self.row_cache: RowCache = (cache if cache is not None
@@ -197,21 +236,35 @@ class EvalService:
         return self.row_cache.capacity
 
     def _queued(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        return sum(len(q) for tier in self._queues.values()
+                   for q in tier.values())
+
+    def queued_rows(self) -> int:
+        """Total design rows currently queued (admission-control signal:
+        the gateway's backpressure check reads this)."""
+        with self._lock:
+            return sum(p.idx.shape[0] for tier in self._queues.values()
+                       for q in tier.values() for p in q)
 
     # -- async API ------------------------------------------------------
     def submit(self, request: EvalRequest, *, client: str = "",
+               tier: str = "batch",
                deadline_s: Optional[float] = None) -> Future:
         """Enqueue one request; the returned future resolves to a PPAReport.
 
         ``client`` names the submitting party for round-robin fairness
         (campaign label, bench name, ...); anonymous submitters share one
-        lane.  Requests whose rows are ALL cached at sufficient detail
-        resolve immediately (no queue, no dispatch) — the shared
-        cross-client cache path.  ``deadline_s`` bounds queue latency:
-        a request still queued past it is DEGRADED (cached rows, then
-        ``objectives`` proxy detail) rather than failed.
+        lane.  ``tier`` picks the QoS lane (``interactive`` | ``batch`` |
+        ``scavenger``) drained by weighted deficit.  Requests whose rows
+        are ALL cached at sufficient detail resolve immediately (no
+        queue, no dispatch) — the shared cross-client cache path.
+        ``deadline_s`` bounds queue latency: a request still queued past
+        it is DEGRADED (cached rows, then ``objectives`` proxy detail)
+        rather than failed.
         """
+        if tier not in QOS_TIERS:
+            raise ValueError(f"tier must be one of {QOS_TIERS}, "
+                             f"got {tier!r}")
         idx = np.atleast_2d(np.asarray(request.idx, dtype=np.int32))
         names = (self.workloads if request.workloads is None
                  else tuple(request.workloads))
@@ -219,10 +272,10 @@ class EvalService:
         if unknown:
             raise KeyError(f"unknown workloads {sorted(unknown)}; "
                            f"have {self.workloads}")
-        deadline = (None if deadline_s is None
-                    else time.monotonic() + float(deadline_s))
+        now = time.monotonic()
+        deadline = None if deadline_s is None else now + float(deadline_s)
         pend = _Pending(idx, request.detail, names, Future(), client,
-                        deadline)
+                        tier, deadline, now)
         with self._lock:
             if self._closed:
                 raise RuntimeError("EvalService is closed")
@@ -230,43 +283,75 @@ class EvalService:
             if self._try_resolve(pend):
                 self.cache_hits += 1
             else:
-                self._queues.setdefault(client, deque()).append(pend)
+                self._queues[tier].setdefault(client, deque()).append(pend)
                 self._cond.notify()
         return pend.future
 
-    def _drain_fair(self) -> List[_Pending]:
-        """Pop requests ROUND-ROBIN across client queues (caller holds the
-        lock): one request per live client per pass, starting after the
-        client served first last tick, until the queues are empty or the
-        planned row count reaches ``max_rows_per_tick``."""
-        clients = list(self._queues)
+    def _pop_tier(self, tier: str) -> Optional[_Pending]:
+        """Pop ONE request from `tier`, round-robin across its clients
+        (caller holds the lock)."""
+        queues = self._queues[tier]
+        clients = list(queues)
         if not clients:
-            return []
-        start = self._rr_start % len(clients)
-        order = clients[start:] + clients[:start]
+            return None
+        start = self._rr[tier] % len(clients)
+        for off in range(len(clients)):
+            client = clients[(start + off) % len(clients)]
+            q = queues[client]
+            if q:
+                pend = q.popleft()
+                if not q:
+                    del queues[client]
+                # next pop starts after the client just served (taken
+                # modulo the then-current client count at read time)
+                self._rr[tier] = start + off + 1
+                return pend
+        return None
+
+    def _drain_fair(self) -> List[_Pending]:
+        """Drain requests by QoS tier (caller holds the lock).
+
+        Two phases per tick: (1) the ANTI-STARVATION FLOOR — every tier
+        with queued work gets one request, highest priority first, even
+        past ``max_rows_per_tick`` — a saturating interactive flood can
+        slow the scavenger tier but never zero it; (2) WEIGHTED-DEFICIT
+        round-robin — each pass credits every backlogged tier its weight,
+        the largest-credit tier serves one request and is debited the
+        rows it consumed, until the queues are empty or the planned row
+        count reaches ``max_rows_per_tick``.  Credit is capped (a tier
+        idle for an hour gets a burst, not an unbounded IOU) and resets
+        when a tier's backlog clears.
+        """
         picked: List[_Pending] = []
         rows = 0
-        while True:
-            progressed = False
-            for client in order:
-                q = self._queues.get(client)
-                if not q:
-                    continue
-                if (self.max_rows_per_tick is not None and picked
-                        and rows >= self.max_rows_per_tick):
-                    break
-                pend = q.popleft()
+        live = [t for t in QOS_TIERS if self._queues[t]]
+        if not live:
+            return picked
+        for t in live:                         # the floor
+            pend = self._pop_tier(t)
+            if pend is not None:
                 picked.append(pend)
                 rows += pend.idx.shape[0]
-                progressed = True
-            else:
-                if progressed:
-                    continue
-            break
-        for client in list(self._queues):
-            if not self._queues[client]:
-                del self._queues[client]
-        self._rr_start = start + 1        # rotate who goes first next tick
+        cap = self.max_rows_per_tick
+        while cap is None or rows < cap:       # the weighted drain
+            live = [t for t in QOS_TIERS if self._queues[t]]
+            if not live:
+                break
+            for t in live:
+                w = self.tier_weights[t]
+                self._deficit[t] = min(self._deficit[t] + w,
+                                       _DEFICIT_BURST * w)
+            # max() scans QOS_TIERS order, so priority breaks credit ties
+            t = max(live, key=lambda tt: self._deficit[tt])
+            pend = self._pop_tier(t)
+            if pend is None:
+                break
+            self._deficit[t] -= pend.idx.shape[0]
+            picked.append(pend)
+            rows += pend.idx.shape[0]
+        for t in QOS_TIERS:
+            if not self._queues[t]:
+                self._deficit[t] = 0.0
         return picked
 
     def tick(self) -> int:
@@ -373,6 +458,12 @@ class EvalService:
                 last = exc
         return None, detail, last
 
+    def _record_served(self, pend: _Pending) -> None:
+        """Per-tier QoS accounting at resolve time (caller holds the
+        lock): served count + queue-to-resolve latency sample."""
+        self.tier_served[pend.tier] += 1
+        self._tier_lat[pend.tier].append(time.monotonic() - pend.t_submit)
+
     def _try_resolve(self, pend: _Pending) -> bool:
         """Resolve a request from cache alone (caller holds the lock)."""
         rows: List[PPAReport] = []
@@ -383,6 +474,7 @@ class EvalService:
                 return False
             rows.append(ent)
         pend.future.set_result(_assemble(rows, pend.names, pend.detail))
+        self._record_served(pend)
         return True
 
     def _try_resolve_degraded(self, pend: _Pending) -> bool:
@@ -400,16 +492,32 @@ class EvalService:
                 floor = d
             rows.append(rep)
         pend.future.set_result(_assemble(rows, pend.names, floor))
+        self._record_served(pend)
         return True
 
     def telemetry(self) -> dict:
-        """Service + degradation counters (plus the evaluator's, if any)."""
+        """Service + QoS + degradation counters (plus the evaluator's)."""
+        with self._lock:
+            tiers = {}
+            for t in QOS_TIERS:
+                lat = np.asarray(self._tier_lat[t], dtype=np.float64)
+                tiers[t] = {
+                    "weight": self.tier_weights[t],
+                    "served": self.tier_served[t],
+                    "queued": sum(len(q)
+                                  for q in self._queues[t].values()),
+                    "p50_ms": (round(float(np.percentile(lat, 50)) * 1e3, 3)
+                               if lat.size else None),
+                    "p99_ms": (round(float(np.percentile(lat, 99)) * 1e3, 3)
+                               if lat.size else None),
+                }
         out = {
             "submits": self.submits,
             "cache_hits": self.cache_hits,
             "fused_dispatches": self.fused_dispatches,
             "coalesced_requests": self.coalesced_requests,
             "degraded": dict(self.degraded),
+            "tiers": tiers,
         }
         for name in ("dispatches", "worker_dispatches", "retried",
                      "straggler_redispatches", "timeouts",

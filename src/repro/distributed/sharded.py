@@ -20,6 +20,11 @@ Worker pools
                request/report wire format.
 ``device``   — thread pool that pins shard k to ``jax.devices()[k % D]``
                (round-robin), for hosts with more than one accelerator.
+``socket``   — remote ``repro.serve`` workers over TCP (``addresses=``);
+               the cross-machine realization of the ``process`` template:
+               the same pickled spec rides a :class:`~repro.serve.wire.
+               Hello` handshake and the same ``ShardPayload`` ->
+               ``PPAReport`` exchange rides length-prefixed frames.
 
 Fault handling
 --------------
@@ -61,7 +66,7 @@ from repro.perfmodel.evaluator import (EvalRequest, ModelEvaluator, PPAReport,
 from repro.runtime.elastic import plan_elastic_pool
 from repro.runtime.fault import RetryPolicy
 
-MODES = ("auto", "inline", "thread", "process", "device")
+MODES = ("auto", "inline", "thread", "process", "device", "socket")
 
 
 @dataclass(frozen=True)
@@ -191,7 +196,13 @@ _WORKER_EVALUATOR: Optional[ModelEvaluator] = None
 
 def _worker_spec(base: ModelEvaluator) -> bytes:
     """(model class, workload, space, tier, backend) — everything a spawned
-    worker needs to reconstruct an equivalent evaluator from scratch."""
+    worker needs to reconstruct an equivalent evaluator from scratch.
+
+    These bytes are a cross-machine wire format (`repro.serve` workers
+    rebuild from the very same spec), so they are pinned to
+    ``pickle.HIGHEST_PROTOCOL`` and covered by a round-trip regression
+    test — change the layout and :func:`evaluator_from_spec` together.
+    """
     return pickle.dumps({
         "models": {nm: (type(m), m.wl) for nm, m in base.models.items()},
         "space": base.space,
@@ -199,18 +210,25 @@ def _worker_spec(base: ModelEvaluator) -> bytes:
         "backend": base.backend,
         "scenarios": getattr(base, "scenarios", None),
         "stacked": getattr(base, "stacked", None),
-    })
+    }, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def evaluator_from_spec(spec_bytes: bytes) -> ModelEvaluator:
+    """Rebuild the evaluator a :func:`_worker_spec` blob describes — the
+    worker half of the wire contract, shared by the process pool
+    initializer and the ``repro.serve`` socket daemon."""
+    spec = pickle.loads(spec_bytes)
+    models = {nm: cls(wl, spec["space"])
+              for nm, (cls, wl) in spec["models"].items()}
+    return ModelEvaluator(models, tier=spec["tier"],
+                          backend=spec["backend"],
+                          scenarios=spec.get("scenarios"),
+                          stacked=spec.get("stacked"))
 
 
 def _process_init(spec_bytes: bytes) -> None:
     global _WORKER_EVALUATOR
-    spec = pickle.loads(spec_bytes)
-    models = {nm: cls(wl, spec["space"])
-              for nm, (cls, wl) in spec["models"].items()}
-    _WORKER_EVALUATOR = ModelEvaluator(models, tier=spec["tier"],
-                                       backend=spec["backend"],
-                                       scenarios=spec.get("scenarios"),
-                                       stacked=spec.get("stacked"))
+    _WORKER_EVALUATOR = evaluator_from_spec(spec_bytes)
 
 
 def _process_eval(payload: ShardPayload) -> PPAReport:
@@ -276,8 +294,16 @@ class ShardedEvaluator:
     workers:
         Shard fan-out.  ``workers=1`` always evaluates in-process.
     mode:
-        One of ``auto | inline | thread | process | device`` (``auto`` =
-        ``inline`` for one worker, ``thread`` otherwise).
+        One of ``auto | inline | thread | process | device | socket``
+        (``auto`` = ``inline`` for one worker, ``thread`` otherwise).
+        ``socket`` dispatches to remote ``repro.serve`` worker daemons
+        and requires ``addresses=``.
+    addresses:
+        ``mode='socket'`` only: ``[(host, port), ...]`` of running
+        ``python -m repro.serve.worker`` daemons.  ``workers`` defaults
+        to ``len(addresses)`` and is clamped to it; the pool owns the
+        liveness registry (heartbeats ride the wire), and this evaluator
+        shares it instead of creating its own.
     min_shard_rows:
         Never split below this many designs per shard — tiny batches stay
         on one worker instead of paying fan-out overhead.
@@ -321,7 +347,9 @@ class ShardedEvaluator:
         path.  On by default.
     """
 
-    def __init__(self, base, *, workers: int = 2, mode: str = "auto",
+    def __init__(self, base, *, workers: Optional[int] = None,
+                 mode: str = "auto",
+                 addresses: Optional[List[Tuple[str, int]]] = None,
                  min_shard_rows: int = 1, retries: int = 2,
                  retry_policy: Optional[RetryPolicy] = None,
                  shard_timeout_s: Optional[float] = None,
@@ -336,18 +364,34 @@ class ShardedEvaluator:
             raise TypeError("ShardedEvaluator needs a model-backed evaluator")
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        if addresses is not None and mode != "socket":
+            raise ValueError("addresses= is only meaningful with "
+                             "mode='socket'")
         self.base = base
         self.space = base.space
         self.tier = base.tier
+        if workers is None:
+            workers = len(addresses) if addresses else 2
         self.workers = max(1, int(workers))
-        if self.workers == 1:
+        if mode == "socket":
+            if not addresses:
+                raise ValueError("mode='socket' needs addresses="
+                                 "[(host, port), ...] of running "
+                                 "`python -m repro.serve.worker` daemons")
+            self.workers = min(self.workers, len(addresses))
+        elif self.workers == 1:
             mode = "inline"                    # the in-process fallback
         elif mode == "auto":
             mode = "thread"
         self.mode = mode
-        self._pool = _POOLS[mode](base, self.workers)
-        if fault_plan is not None:
-            self._pool = ChaosPool(self._pool, fault_plan)
+        if mode == "socket":
+            from repro.serve.pool import SocketPool
+            raw_pool = SocketPool(base, self.workers, addresses=addresses,
+                                  heartbeat_timeout_s=heartbeat_timeout_s)
+        else:
+            raw_pool = _POOLS[mode](base, self.workers)
+        self._pool = (ChaosPool(raw_pool, fault_plan)
+                      if fault_plan is not None else raw_pool)
         self.fault_plan = fault_plan
         self.min_shard_rows = max(1, int(min_shard_rows))
         self.retries = int(retries)
@@ -364,8 +408,14 @@ class ShardedEvaluator:
         self.elastic = bool(elastic)
         self.max_workers = max(self.workers, int(max_workers)
                                if max_workers is not None else self.workers)
-        # worker liveness: slots 0..workers-1, beaten on shard completion
-        self.registry = WorkerRegistry(timeout_s=heartbeat_timeout_s)
+        # worker liveness: slots 0..workers-1, beaten on shard completion.
+        # A socket pool owns its registry (wire heartbeats + reconnects
+        # drive it) and this evaluator shares it; local pools get a fresh
+        # one driven by shard completions.
+        pool_registry = getattr(raw_pool, "registry", None)
+        self._pool_owns_registry = pool_registry is not None
+        self.registry = (pool_registry if pool_registry is not None
+                         else WorkerRegistry(timeout_s=heartbeat_timeout_s))
         for s in range(self.workers):
             self.registry.register(s)
         self._dispatch_no = 0               # round-robin slot attribution
@@ -401,12 +451,14 @@ class ShardedEvaluator:
         n = idx.shape[0]
         n_shards = min(self.workers, max(1, n // self.min_shard_rows))
         self.dispatches += 1
-        if (self.mode == "inline" or n_shards <= 1) and self.fault_plan is None:
+        if ((self.mode == "inline" or n_shards <= 1)
+                and self.fault_plan is None and self.mode != "socket"):
             self.worker_dispatches += 1
             return self.base.evaluate(
                 EvalRequest(idx, request.detail, request.workloads))
         # under a fault plan even single-shard requests route through the
-        # pool so injection + recovery cover the inline path too
+        # pool so injection + recovery cover the inline path too; socket
+        # mode ALWAYS rides the pool — offloading is the point
         payloads = [ShardPayload(s, request.detail, request.workloads)
                     for s in np.array_split(idx, max(1, n_shards))]
         return concat_reports(self._gather(payloads))
@@ -436,7 +488,9 @@ class ShardedEvaluator:
         self._pool.resize(workers)
         self.workers = workers
         self.resizes += 1
-        for s in range(workers):
+        if self._pool_owns_registry:
+            return                     # the pool's reconnect/close path
+        for s in range(workers):       # maintains its registry itself
             self.registry.register(s)          # fresh/replacement slots
         for s in range(workers, old):
             self.registry.mark_dead(s)         # shrunk-away slots
@@ -475,6 +529,11 @@ class ShardedEvaluator:
             if plan.workers != self.workers:
                 self.resize(plan.workers)
                 return
+        if self._pool_owns_registry:
+            # the socket pool re-registers the slot itself when the
+            # connection actually comes back — a blind re-register here
+            # would claim liveness the wire has not proven
+            return
         # executor pools replace dead workers transparently — the slot's
         # replacement re-registers under the same id
         self.registry.register(slot)

@@ -529,16 +529,26 @@ class OracleEvaluator:
     ``normalized_phv`` reports PHV as a fraction of the exhaustive-front PHV
     (the ROADMAP's oracle-normalized Table 2/3 metric) and ``regret``
     measures distance from the true per-objective optima.
+
+    ``oracle_store=`` opts into the persistent oracle store: ``True``
+    uses ``~/.cache/repro-oracle/``, a string names a directory.  The
+    sweep artifact is keyed by the engine's configuration fingerprint
+    (space cards, backend, workload fingerprints, model classes, stop +
+    sweep knobs), so a repeat OracleEvaluator anywhere on the machine is
+    an O(1) ``load_sweep_result`` instead of a re-sweep; a corrupt
+    artifact is quarantined and re-swept, never trusted.
     """
 
     tier = "oracle"
 
     def __init__(self, base: ModelEvaluator, *, stop: Optional[int] = None,
-                 sweep_kwargs: Optional[dict] = None):
+                 sweep_kwargs: Optional[dict] = None,
+                 oracle_store=None):
         self.base = base
         self.space = base.space
         self.stop = stop                      # None = the full space
         self._sweep_kwargs = dict(sweep_kwargs or {})
+        self.oracle_store = oracle_store
         self._result = None
         self._phv_cache: Dict[bytes, float] = {}
 
@@ -560,12 +570,55 @@ class OracleEvaluator:
         return self.base.objectives(idx)
 
     # -- ground truth ---------------------------------------------------
+    def _store_path(self, eng) -> Optional[Tuple[str, str]]:
+        """(artifact path, content key) under the oracle store, or None
+        when the store is off."""
+        if not self.oracle_store:
+            return None
+        import hashlib
+        import os
+        from repro.perfmodel.sweep import DEFAULT_ORACLE_STORE
+        root = (DEFAULT_ORACLE_STORE if self.oracle_store is True
+                else str(self.oracle_store))
+        root = os.path.expanduser(root)
+        knobs = "|".join(f"{k}={self._sweep_kwargs[k]}"
+                         for k in sorted(self._sweep_kwargs))
+        key = f"{eng.fingerprint()}|stop={self.stop}|{knobs}"
+        digest = hashlib.sha256(key.encode()).hexdigest()[:32]
+        return os.path.join(root, f"oracle-{digest}.npz"), key
+
     def sweep_result(self):
-        """The (memoized) exhaustive sweep over [0, stop or size)."""
+        """The (memoized) exhaustive sweep over [0, stop or size) — loaded
+        from the oracle store when enabled and populated, swept (and
+        stored) otherwise."""
         if self._result is None:
-            from repro.perfmodel.sweep import SweepEngine
+            from repro.perfmodel.sweep import (SweepEngine,
+                                               load_sweep_result,
+                                               save_sweep_result)
             eng = SweepEngine(self.base, **self._sweep_kwargs)
-            self._result = eng.run(0, self.stop)
+            loc = self._store_path(eng)
+            if loc is not None:
+                import os
+                import warnings
+                path, key = loc
+                if os.path.exists(path):
+                    try:
+                        self._result = load_sweep_result(path, key=key)
+                        return self._result
+                    except ValueError as exc:
+                        q = path + ".quarantined"
+                        try:
+                            os.replace(path, q)
+                        except OSError:
+                            q = "<could not rename>"
+                        warnings.warn(
+                            f"oracle store artifact {path} is invalid "
+                            f"({exc}); quarantined to {q} — re-sweeping",
+                            RuntimeWarning, stacklevel=2)
+                self._result = eng.run(0, self.stop)
+                save_sweep_result(path, self._result, key=key)
+            else:
+                self._result = eng.run(0, self.stop)
         return self._result
 
     def front(self) -> np.ndarray:
@@ -631,6 +684,7 @@ _PAPER_EVALUATORS: Dict[tuple, "Evaluator"] = {}
 
 def get_evaluator(tier: str = "proxy", backend: Optional[str] = None,
                   *, oracle_stop: Optional[int] = None,
+                  oracle_store=None,
                   workers: int = 1, mode: str = "auto",
                   suite: str = "paper") -> Evaluator:
     """The paper-workload (or zoo-portfolio) evaluator per tier (memoized).
@@ -640,6 +694,10 @@ def get_evaluator(tier: str = "proxy", backend: Optional[str] = None,
     tier="oracle" -> OracleEvaluator over the chosen backend's models
                      (default roofline), exposing the exhaustive front.
     backend: "roofline" | "compass" | "pallas" | "auto" | None.
+    oracle_store: opt-in persistent sweep-artifact store for the oracle
+             tier (``True`` = ``~/.cache/repro-oracle/``, or a directory
+             path) — repeat oracle construction loads the stored front
+             in O(1) instead of re-sweeping.
     workers: > 1 wraps the evaluator in a :class:`~repro.distributed.
              sharded.ShardedEvaluator` that fans each EvalRequest's batch
              across N workers (`mode`: "thread" | "process" | "device" |
@@ -661,7 +719,8 @@ def get_evaluator(tier: str = "proxy", backend: Optional[str] = None,
     workers = max(1, int(workers))
     if workers == 1:
         mode = "auto"      # inert knobs: collapse onto the memoized base key
-    key = (tier, backend, oracle_stop, workers, mode, suite)
+    key = (tier, backend, oracle_stop, workers, mode, suite,
+           None if not oracle_store else str(oracle_store))
     cached = _PAPER_EVALUATORS.get(key)
     if cached is not None:
         return cached
@@ -671,7 +730,8 @@ def get_evaluator(tier: str = "proxy", backend: Optional[str] = None,
         base_tier = "target" if base_backend == "compass" else "proxy"
         base = get_evaluator(base_tier, base_backend,
                              workers=workers, mode=mode, suite=suite)
-        ev: Evaluator = OracleEvaluator(base, stop=oracle_stop)
+        ev: Evaluator = OracleEvaluator(base, stop=oracle_stop,
+                                        oracle_store=oracle_store)
     else:
         model_backend = backend if backend not in (None, "auto", "pallas") \
             else TIER_BACKEND[tier]

@@ -1276,3 +1276,118 @@ class SweepEngine:
                     "archives": archives}
         return {"next": int(z["next"]), "carry": carry,
                 "archive": load_archive("archive")}
+
+
+# --------------------------------------------------------------------------
+# persistent oracle store: SweepResult artifacts on disk
+# --------------------------------------------------------------------------
+# A full-space sweep costs seconds-to-minutes; its SweepResult (front,
+# top-k tables, stall seeds, per-scenario nests) is a few MB.  The oracle
+# store memoizes exactly that: save/load one SweepResult npz, digested
+# and atomically written like the checkpoints above, so a repeat
+# OracleEvaluator over the same (fingerprint, stop, knobs) key is an
+# O(1) load instead of a re-sweep (see OracleEvaluator's oracle_store=).
+
+ORACLE_STORE_VERSION = 1
+DEFAULT_ORACLE_STORE = os.path.join("~", ".cache", "repro-oracle")
+
+_RESULT_REQ = ("n_evaluated", "n_superior", "pareto_y", "pareto_ids",
+               "topk_val", "topk_ids", "ref_point", "seconds",
+               "points_per_sec", "archive_truncated")
+_RESULT_OPT = ("stall_topk_val", "stall_topk_ids", "archive_capacity",
+               "robust")
+
+
+def _result_payload(res: SweepResult, prefix: str = "") -> Dict:
+    out = {}
+    for f in _RESULT_REQ:
+        out[prefix + f] = np.asarray(getattr(res, f))
+    for f in _RESULT_OPT:
+        v = getattr(res, f)
+        if v is not None:
+            out[prefix + f] = np.asarray(v)
+    if res.scenario_names is not None:
+        out[prefix + "scenario_names"] = np.asarray(res.scenario_names)
+    if res.per_scenario:
+        # flatten scenario nests with positional prefixes (s0., s1., ...)
+        for i, nm in enumerate(res.scenario_names):
+            out.update(_result_payload(res.per_scenario[nm],
+                                       prefix=f"{prefix}s{i}."))
+    return out
+
+
+def _result_from_payload(z: Dict, prefix: str = "") -> SweepResult:
+    def opt(name, cast):
+        key = prefix + name
+        return cast(z[key]) if key in z else None
+
+    names = None
+    per = None
+    if prefix + "scenario_names" in z:
+        names = tuple(str(s) for s in np.asarray(z[prefix
+                                                   + "scenario_names"]))
+        if any(k.startswith(f"{prefix}s0.") for k in z):
+            per = {nm: _result_from_payload(z, prefix=f"{prefix}s{i}.")
+                   for i, nm in enumerate(names)}
+    return SweepResult(
+        n_evaluated=int(z[prefix + "n_evaluated"]),
+        n_superior=int(z[prefix + "n_superior"]),
+        pareto_y=np.asarray(z[prefix + "pareto_y"], dtype=np.float64),
+        pareto_ids=np.asarray(z[prefix + "pareto_ids"], dtype=np.int64),
+        topk_val=np.asarray(z[prefix + "topk_val"]),
+        topk_ids=np.asarray(z[prefix + "topk_ids"]),
+        ref_point=np.asarray(z[prefix + "ref_point"]),
+        seconds=float(z[prefix + "seconds"]),
+        points_per_sec=float(z[prefix + "points_per_sec"]),
+        archive_truncated=bool(z[prefix + "archive_truncated"]),
+        stall_topk_val=opt("stall_topk_val", np.asarray),
+        stall_topk_ids=opt("stall_topk_ids", np.asarray),
+        archive_capacity=opt("archive_capacity", int),
+        robust=opt("robust", str),
+        scenario_names=names,
+        per_scenario=per,
+    )
+
+
+def save_sweep_result(path: str, result: SweepResult, *,
+                      key: str = "") -> str:
+    """Persist one SweepResult (atomic tmp + ``os.replace``, sha256
+    content digest).  ``key`` ties the artifact to its producing
+    configuration — loads with a different key refuse.  Returns the
+    final filename."""
+    payload = _result_payload(result)
+    payload["store_version"] = np.asarray(ORACLE_STORE_VERSION)
+    payload["oracle_key"] = np.asarray(key)
+    payload["digest"] = _state_digest(payload)
+    fname = path if str(path).endswith(".npz") else f"{path}.npz"
+    os.makedirs(os.path.dirname(os.path.abspath(fname)), exist_ok=True)
+    tmp = fname + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+    os.replace(tmp, fname)
+    return fname
+
+
+def load_sweep_result(path: str, *, key: str = "") -> SweepResult:
+    """Load a stored SweepResult; raises ``ValueError`` on a corrupt,
+    truncated, newer-format or key-mismatched file (callers quarantine
+    and re-sweep)."""
+    fname = path if str(path).endswith(".npz") else f"{path}.npz"
+    try:
+        with np.load(fname, allow_pickle=False) as zf:
+            z = {k: np.asarray(zf[k]) for k in zf.files}
+    except FileNotFoundError:
+        raise
+    except Exception as exc:
+        raise ValueError(f"unreadable oracle artifact: {exc}") from exc
+    stored = str(z.pop("digest", ""))
+    if _state_digest(z) != stored:
+        raise ValueError("oracle artifact content digest mismatch")
+    if int(z["store_version"]) > ORACLE_STORE_VERSION:
+        raise ValueError(
+            f"oracle artifact format v{int(z['store_version'])} is newer "
+            f"than this build's v{ORACLE_STORE_VERSION}")
+    if key and str(z["oracle_key"]) != key:
+        raise ValueError("oracle artifact belongs to a different "
+                         "configuration key")
+    return _result_from_payload(z)

@@ -97,3 +97,23 @@ def plan_elastic_pool(live_workers: int, queued: int, *,
     else:
         note = f"hold {want} ({queued} queued)"
     return PoolPlan(workers=want, grow=want > live, note=note)
+
+
+def admission_retry_after(queued_rows: int, rows_per_s: float, *,
+                          floor_s: float = 0.05,
+                          cap_s: float = 60.0) -> float:
+    """Backpressure hint for admission control: seconds until the current
+    backlog drains at the observed service rate.
+
+    The :class:`~repro.serve.gateway.Gateway` attaches this to its
+    reject-with-retry-after responses so a well-behaved client backs off
+    exactly as long as the queue needs, instead of hammering a saturated
+    service.  With no rate estimate yet (``rows_per_s <= 0``) the hint is
+    one second — optimistic but bounded.  Always clamped to
+    ``[floor_s, cap_s]``.
+    """
+    if cap_s < floor_s:
+        raise ValueError(f"cap_s ({cap_s}) < floor_s ({floor_s})")
+    queued_rows = max(0, int(queued_rows))
+    eta = (queued_rows / rows_per_s) if rows_per_s > 0 else 1.0
+    return float(min(max(eta, floor_s), cap_s))

@@ -1,0 +1,39 @@
+"""DSE-as-a-service: the cross-machine, multi-tenant serving layer.
+
+Turns the in-process evaluation stack into an always-on service in
+three layers, each riding an existing contract unchanged:
+
+* **Transport** (:mod:`~repro.serve.wire`, :mod:`~repro.serve.worker`,
+  :mod:`~repro.serve.pool`) — the PR 4 pickled-spec + ``ShardPayload ->
+  PPAReport`` wire format over length-prefixed TCP frames.  Run
+  ``python -m repro.serve.worker --host H --port P`` on any machine;
+  point a :class:`~repro.distributed.sharded.ShardedEvaluator` at the
+  fleet with ``mode='socket', addresses=[(H, P), ...]`` (or
+  :func:`~repro.serve.pool.connect_evaluator`) and the retry / timeout /
+  straggler / elastic / chaos machinery drives remote workers exactly as
+  it drives local pools.
+* **QoS** — :meth:`EvalService.submit(..., tier=...)
+  <repro.distributed.service.EvalService.submit>` with weighted-deficit
+  tier drain and an anti-starvation floor (lives in
+  :mod:`repro.distributed.service`; re-exported here).
+* **Admission control** (:mod:`~repro.serve.gateway`) — per-tenant row
+  budgets, queue-depth backpressure with drain-ETA retry hints, fleet
+  telemetry.
+
+See ``examples/serve_cluster.py`` for the two-worker loopback cluster
+walkthrough and the README "DSE-as-a-service" section for deployment.
+"""
+
+from repro.distributed.service import (DEFAULT_TIER_WEIGHTS, QOS_TIERS,
+                                       EvalService)
+from repro.serve.gateway import Gateway, RetryAfter, TenantAccount
+from repro.serve.pool import SocketPool, connect_evaluator
+from repro.serve.wire import WIRE_VERSION, ConnectionClosed, WireError
+from repro.serve.worker import (WorkerHandle, WorkerServer,
+                                start_worker_process)
+
+__all__ = ["EvalService", "QOS_TIERS", "DEFAULT_TIER_WEIGHTS",
+           "Gateway", "RetryAfter", "TenantAccount",
+           "SocketPool", "connect_evaluator",
+           "WorkerServer", "WorkerHandle", "start_worker_process",
+           "WIRE_VERSION", "WireError", "ConnectionClosed"]

@@ -1,0 +1,328 @@
+"""`SocketPool`: remote ``repro.serve`` workers behind the pool protocol.
+
+Implements exactly the ``submit(ShardPayload) -> Future`` / ``resize`` /
+``close`` surface of the local pools in :mod:`repro.distributed.sharded`,
+so :class:`~repro.distributed.sharded.ShardedEvaluator` — retry budgets,
+shard timeouts, straggler speculation, elastic resize, ``ChaosPool``
+wrapping — drives a cross-machine fleet *unchanged*.
+
+One :class:`_Connection` per worker address: a Hello/Ready handshake
+ships the pickled evaluator spec, then dispatches multiplex over the
+connection keyed by ``seq`` (a reader thread resolves the matching
+futures as results land, out of order is fine).  Liveness is the pool's
+own :class:`~repro.distributed.faults.WorkerRegistry`: a heartbeat
+thread pings every worker each ``heartbeat_s``; pongs and results beat
+the registry; a connection that dies (EOF, send failure, silent past
+``heartbeat_timeout_s``) fails all its in-flight futures with
+:class:`~repro.distributed.faults.WorkerFault` — which lands in the
+ShardedEvaluator retry path — and is marked dead + evicted.  Submits
+round-robin over live connections and lazily reconnect dead addresses
+(under a cooldown), re-registering the slot on success.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.distributed.faults import WorkerFault, WorkerRegistry
+from repro.serve import wire
+
+
+class _Connection:
+    """One live worker link: handshake, seq-keyed in-flight futures, a
+    reader thread, and a fail-everything death path."""
+
+    def __init__(self, pool: "SocketPool", slot: int,
+                 address: Tuple[str, int]):
+        self.pool = pool
+        self.slot = slot
+        self.address = address
+        self.sock = wire.connect(address, timeout_s=pool.connect_timeout_s)
+        # handshake under a deadline: a worker that accepts but never
+        # answers Ready must not wedge pool construction
+        self.sock.settimeout(pool.handshake_timeout_s)
+        wire.send_msg(self.sock, wire.Hello(pool.spec))
+        ready = wire.recv_msg(self.sock)
+        if isinstance(ready, wire.ErrorMsg):
+            self.sock.close()
+            raise WorkerFault(f"worker {address} refused: {ready.message}")
+        if not isinstance(ready, wire.Ready):
+            self.sock.close()
+            raise wire.WireError(f"expected Ready from {address}, got "
+                                 f"{type(ready).__name__}")
+        self.sock.settimeout(None)
+        self.digest = ready.digest
+        self.alive = True
+        self.last_activity = time.monotonic()
+        self._send_lock = threading.Lock()
+        self._lock = threading.Lock()
+        self._pending: Dict[int, Future] = {}
+        self._seq = itertools.count()
+        self._reader = threading.Thread(
+            target=self._read_loop, daemon=True,
+            name=f"socket-pool-reader-{slot}")
+        self._reader.start()
+
+    # -- client side -----------------------------------------------------
+    def submit(self, payload) -> Future:
+        fut: Future = Future()
+        with self._lock:
+            if not self.alive:
+                raise WorkerFault(f"worker {self.address} is down")
+            seq = next(self._seq)
+            self._pending[seq] = fut
+        try:
+            self._send(wire.Dispatch(seq, payload))
+        except (OSError, wire.WireError) as exc:
+            self.die(f"send failed: {exc}")
+            raise WorkerFault(
+                f"dispatch to {self.address} failed: {exc}") from exc
+        return fut
+
+    def ping(self) -> None:
+        try:
+            self._send(wire.Ping(next(self._seq)))
+        except (OSError, wire.WireError) as exc:
+            self.die(f"ping failed: {exc}")
+
+    def _send(self, msg: object) -> None:
+        with self._send_lock:
+            wire.send_msg(self.sock, msg)
+
+    # -- reader ----------------------------------------------------------
+    def _read_loop(self) -> None:
+        try:
+            while True:
+                msg = wire.recv_msg(self.sock, self.pool.max_message_bytes)
+                if isinstance(msg, wire.ResultMsg):
+                    fut = self._pop(msg.seq)
+                    self.pool._on_activity(self)
+                    if fut is not None and not fut.cancelled():
+                        try:
+                            fut.set_result(msg.report)
+                        except InvalidStateError:
+                            pass               # receiver abandoned the twin
+                elif isinstance(msg, wire.ErrorMsg):
+                    if msg.seq < 0:
+                        raise wire.WireError(f"protocol error from "
+                                             f"{self.address}: {msg.message}")
+                    # the WORKER is alive — the evaluation failed; surface
+                    # it without tearing the connection down
+                    fut = self._pop(msg.seq)
+                    self.pool._on_activity(self)
+                    if fut is not None and not fut.cancelled():
+                        try:
+                            fut.set_exception(WorkerFault(
+                                f"remote evaluation on {self.address} "
+                                f"failed: {msg.message}"))
+                        except InvalidStateError:
+                            pass
+                elif isinstance(msg, wire.Pong):
+                    self.pool._on_activity(self)
+                else:
+                    raise wire.WireError(f"unexpected "
+                                         f"{type(msg).__name__} "
+                                         f"from {self.address}")
+        except (wire.WireError, OSError) as exc:
+            self.die(str(exc))
+
+    def _pop(self, seq: int) -> Optional[Future]:
+        with self._lock:
+            return self._pending.pop(seq, None)
+
+    # -- death -----------------------------------------------------------
+    def die(self, reason: str) -> None:
+        """Fail every in-flight future and report the slot dead; safe to
+        call from any thread, idempotent."""
+        with self._lock:
+            if not self.alive:
+                return
+            self.alive = False
+            doomed = list(self._pending.values())
+            self._pending.clear()
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        exc = WorkerFault(f"worker {self.address} died: {reason}")
+        for fut in doomed:
+            if not fut.done():
+                try:
+                    fut.set_exception(exc)
+                except InvalidStateError:
+                    pass
+        self.pool._on_conn_dead(self)
+
+    def close(self) -> None:
+        """Graceful goodbye (best effort), then the death path."""
+        if self.alive:
+            try:
+                self._send(wire.Bye())
+            except (OSError, wire.WireError):
+                pass
+        self.die("closed")
+
+
+class SocketPool:
+    """Round-robin dispatch over remote worker daemons (pool protocol)."""
+
+    mode = "socket"
+
+    def __init__(self, base, workers: Optional[int] = None, *,
+                 addresses: Sequence[Tuple[str, int]],
+                 spec: Optional[bytes] = None,
+                 connect_timeout_s: float = 10.0,
+                 handshake_timeout_s: float = 300.0,
+                 heartbeat_s: float = 1.0,
+                 heartbeat_timeout_s: float = 30.0,
+                 reconnect_cooldown_s: float = 0.25,
+                 max_message_bytes: int = wire.MAX_MESSAGE_BYTES):
+        self.addresses: List[Tuple[str, int]] = [
+            (str(h), int(p)) for h, p in addresses]
+        if not self.addresses:
+            raise ValueError("SocketPool needs at least one address")
+        if spec is None:
+            from repro.distributed.sharded import _worker_spec
+            spec = _worker_spec(base)
+        self.spec = spec
+        self.workers = max(1, min(int(workers) if workers is not None
+                                  else len(self.addresses),
+                                  len(self.addresses)))
+        self.connect_timeout_s = float(connect_timeout_s)
+        self.handshake_timeout_s = float(handshake_timeout_s)
+        self.heartbeat_s = float(heartbeat_s)
+        self.heartbeat_timeout_s = float(heartbeat_timeout_s)
+        self.reconnect_cooldown_s = float(reconnect_cooldown_s)
+        self.max_message_bytes = int(max_message_bytes)
+        self.registry = WorkerRegistry(timeout_s=self.heartbeat_timeout_s)
+        self.reconnects = 0
+        self._conns: Dict[int, _Connection] = {}
+        self._slot_locks = [threading.Lock() for _ in self.addresses]
+        self._last_attempt = [-math.inf] * len(self.addresses)
+        self._rr = itertools.count()
+        self._closed = False
+        errors: List[str] = []
+        for slot in range(self.workers):
+            self._ensure(slot, errors)
+        if not any(c.alive for c in self._conns.values()):
+            raise RuntimeError("no repro.serve worker reachable: "
+                               + "; ".join(errors))
+        self._hb = threading.Thread(target=self._heartbeat_loop,
+                                    name="socket-pool-heartbeat",
+                                    daemon=True)
+        self._hb.start()
+
+    # -- pool protocol ----------------------------------------------------
+    def submit(self, payload) -> Future:
+        if self._closed:
+            fut: Future = Future()
+            fut.set_exception(WorkerFault("pool is closed"))
+            return fut
+        n = max(1, self.workers)
+        start = next(self._rr)
+        for off in range(n):
+            slot = (start + off) % n
+            conn = self._ensure(slot)
+            if conn is None:
+                continue
+            try:
+                return conn.submit(payload)
+            except WorkerFault:
+                continue                       # slot died mid-submit
+        fut = Future()
+        fut.set_exception(WorkerFault(
+            f"no live worker among {n} socket slots "
+            f"({self.addresses[:n]})"))
+        return fut
+
+    def resize(self, workers: int) -> None:
+        """Clamp to the address list; shrinking closes the trailing
+        connections, growing clears their reconnect cooldown so the next
+        submit redials immediately."""
+        workers = max(1, min(int(workers), len(self.addresses)))
+        if workers == self.workers:
+            return
+        old, self.workers = self.workers, workers
+        for slot in range(workers, old):
+            conn = self._conns.pop(slot, None)
+            if conn is not None:
+                conn.close()
+        for slot in range(old, workers):
+            self._last_attempt[slot] = -math.inf
+
+    def close(self) -> None:
+        self._closed = True
+        for conn in list(self._conns.values()):
+            conn.close()
+        self._conns.clear()
+
+    def live_workers(self) -> int:
+        return sum(1 for c in self._conns.values() if c.alive)
+
+    # -- liveness plumbing ------------------------------------------------
+    def _ensure(self, slot: int,
+                errors: Optional[List[str]] = None) -> Optional[_Connection]:
+        """The slot's live connection, redialing if dead and out of
+        cooldown; None while the slot stays down."""
+        with self._slot_locks[slot]:
+            conn = self._conns.get(slot)
+            if conn is not None and conn.alive:
+                return conn
+            now = time.monotonic()
+            if now - self._last_attempt[slot] < self.reconnect_cooldown_s:
+                return None
+            self._last_attempt[slot] = now
+            try:
+                fresh = _Connection(self, slot, self.addresses[slot])
+            except (OSError, wire.WireError, WorkerFault) as exc:
+                if errors is not None:
+                    errors.append(f"{self.addresses[slot]}: {exc}")
+                return None
+            if conn is not None:
+                self.reconnects += 1
+            self._conns[slot] = fresh
+            self.registry.register(slot)
+            return fresh
+
+    def _on_activity(self, conn: _Connection) -> None:
+        conn.last_activity = time.monotonic()
+        self.registry.beat(conn.slot)
+        if not self.registry.alive(conn.slot):
+            # the slot was (possibly mis-)evicted while the wire kept
+            # working — the pong is proof of life, so re-register
+            self.registry.register(conn.slot)
+
+    def _on_conn_dead(self, conn: _Connection) -> None:
+        self.registry.mark_dead(conn.slot)
+        self.registry.evict_dead()
+
+    def _heartbeat_loop(self) -> None:
+        period = max(0.05, min(self.heartbeat_s,
+                               self.heartbeat_timeout_s / 3.0))
+        while not self._closed:
+            time.sleep(period)
+            now = time.monotonic()
+            for conn in list(self._conns.values()):
+                if not conn.alive:
+                    continue
+                if now - conn.last_activity > self.heartbeat_timeout_s:
+                    # silent too long: pings went unanswered — the worker
+                    # is hung or the wire is black-holed; declare it dead
+                    conn.die(f"heartbeat timeout "
+                             f"({self.heartbeat_timeout_s}s silent)")
+                    continue
+                conn.ping()
+
+
+def connect_evaluator(base, addresses: Sequence[Tuple[str, int]], **kwargs):
+    """Convenience: a ShardedEvaluator fanned over remote workers, one
+    shard lane per address (``workers=len(addresses)``) unless told
+    otherwise."""
+    from repro.distributed.sharded import ShardedEvaluator
+    kwargs.setdefault("workers", len(tuple(addresses)))
+    return ShardedEvaluator(base, mode="socket",
+                            addresses=list(addresses), **kwargs)

@@ -1,0 +1,155 @@
+"""Length-prefixed pickle wire protocol for the cross-machine eval fabric.
+
+The PR 4 process pool established the wire format: a worker is anything
+that can rebuild an evaluator from a pickled spec and answer
+:class:`~repro.distributed.sharded.ShardPayload` dispatches with
+:class:`~repro.perfmodel.evaluator.PPAReport` payloads.  This module
+carries exactly that contract over a TCP socket:
+
+* **Framing** — every message is an 8-byte big-endian length prefix
+  followed by a pickle (``pickle.HIGHEST_PROTOCOL``) of one of the
+  dataclasses below.  :func:`send_msg` / :func:`recv_msg` are the entire
+  codec; ``recv_msg`` rejects frames above ``max_bytes`` before reading
+  them (a corrupt or hostile length prefix cannot OOM the receiver).
+* **Messages** — ``Hello`` (the evaluator spec bytes: the handshake that
+  turns a bare worker daemon into THIS evaluator's worker), ``Ready``
+  (spec digest ack), ``Dispatch``/``ResultMsg``/``ErrorMsg`` (one shard
+  request/response, correlated by ``seq`` so many dispatches ride one
+  connection), ``Ping``/``Pong`` (heartbeats carried over the same wire,
+  answered while evaluations are in flight), ``Bye`` (graceful close).
+
+Trust model: pickle-over-socket assumes the same trust domain as the PR 4
+process pool (your own fleet behind your own firewall) — it is a cluster
+transport, not an internet-facing API.  :class:`~repro.serve.gateway.
+Gateway` is where multi-tenant admission control lives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import socket
+import struct
+from typing import Optional, Tuple
+
+WIRE_VERSION = 1
+
+# 8-byte big-endian unsigned length prefix
+_HEADER = struct.Struct(">Q")
+
+# refuse frames above this before allocating (a flipped length bit cannot
+# ask the receiver to materialize petabytes)
+MAX_MESSAGE_BYTES = 1 << 31
+
+
+class WireError(RuntimeError):
+    """Malformed traffic: bad frame, oversized message, version mismatch."""
+
+
+class ConnectionClosed(WireError):
+    """The peer closed (or was killed) mid-conversation."""
+
+
+# ---------------------------------------------------------------------------
+# messages
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Hello:
+    """Client handshake: the pickled evaluator spec this connection serves
+    (the same bytes :func:`~repro.distributed.sharded._worker_spec`
+    feeds the process pool's initializer)."""
+    spec: bytes
+    wire_version: int = WIRE_VERSION
+
+
+@dataclasses.dataclass(frozen=True)
+class Ready:
+    """Worker ack: the sha256 digest of the spec it (re)built, plus the
+    workload names of the evaluator it is now serving."""
+    digest: str
+    workloads: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Dispatch:
+    """One shard request; ``seq`` correlates the eventual response."""
+    seq: int
+    payload: object                # ShardPayload (kept loose: wire is generic)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResultMsg:
+    seq: int
+    report: object                 # PPAReport
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorMsg:
+    seq: int
+    message: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Ping:
+    seq: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Pong:
+    seq: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Bye:
+    reason: str = ""
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+def send_msg(sock: socket.socket, msg: object) -> None:
+    """Frame + send one message (callers serialize access per socket)."""
+    payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
+    sock.sendall(_HEADER.pack(len(payload)) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(min(1 << 20, n - len(buf)))
+        if not chunk:
+            raise ConnectionClosed(f"peer closed after {len(buf)}/{n} bytes")
+        buf += chunk
+    return bytes(buf)
+
+
+def recv_msg(sock: socket.socket,
+             max_bytes: int = MAX_MESSAGE_BYTES) -> object:
+    """Receive one framed message (blocking; raises ConnectionClosed on
+    EOF, WireError on an oversized frame)."""
+    (n,) = _HEADER.unpack(_recv_exact(sock, _HEADER.size))
+    if n > max_bytes:
+        raise WireError(f"frame of {n} bytes exceeds the {max_bytes}-byte "
+                        "message bound")
+    return pickle.loads(_recv_exact(sock, n))
+
+
+def check_hello(msg: object) -> Hello:
+    """Validate the opening message of a connection."""
+    if not isinstance(msg, Hello):
+        raise WireError(f"expected Hello, got {type(msg).__name__}")
+    if msg.wire_version != WIRE_VERSION:
+        raise WireError(f"wire version mismatch: peer speaks "
+                        f"v{msg.wire_version}, this build v{WIRE_VERSION}")
+    return msg
+
+
+def connect(address: Tuple[str, int], *,
+            timeout_s: Optional[float] = 10.0) -> socket.socket:
+    """TCP connect with TCP_NODELAY (small request/response frames should
+    not wait on Nagle) and the timeout cleared after establishment."""
+    sock = socket.create_connection(address, timeout=timeout_s)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    sock.settimeout(None)
+    return sock

@@ -1,0 +1,234 @@
+"""The ``repro.serve`` worker daemon: a remote evaluator over TCP.
+
+Run one per host/core budget::
+
+    PYTHONPATH=src python -m repro.serve.worker --host 0.0.0.0 --port 9707
+
+A worker starts *evaluator-agnostic*.  Each client connection opens with
+a :class:`~repro.serve.wire.Hello` carrying the pickled evaluator spec
+(the PR 4 process-pool template, see :func:`~repro.distributed.sharded.
+_worker_spec`); the worker rebuilds the evaluator — cached process-wide
+by spec digest, so reconnects and sibling connections serving the same
+study skip the rebuild — answers :class:`~repro.serve.wire.Ready`, then
+serves ``Dispatch(ShardPayload) -> ResultMsg(PPAReport)`` until the
+client hangs up.
+
+Evaluations run on a per-connection executor thread while the reader
+thread keeps answering :class:`~repro.serve.wire.Ping` heartbeats — a
+worker grinding through a big shard still proves liveness, which is what
+lets the client side distinguish *slow* from *dead*.
+
+:func:`start_worker_process` spawns a daemon in a child process (spawn
+context, so no jax state is forked) and returns a handle with the bound
+port — the test/bench/example harness for 2-worker loopback clusters,
+and the thing to SIGKILL when proving fault tolerance.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import socket
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.serve import wire
+
+# evaluators by spec sha256 — shared across connections so a fleet
+# serving one study builds once per process, not once per reconnect
+_EVALUATORS: Dict[str, object] = {}
+_EVALUATORS_LOCK = threading.Lock()
+
+
+def _evaluator_for(spec: bytes) -> Tuple[str, object]:
+    digest = hashlib.sha256(spec).hexdigest()
+    with _EVALUATORS_LOCK:
+        ev = _EVALUATORS.get(digest)
+        if ev is None:
+            from repro.distributed.sharded import evaluator_from_spec
+            ev = evaluator_from_spec(spec)
+            _EVALUATORS[digest] = ev
+    return digest, ev
+
+
+class WorkerServer:
+    """Accepts connections on ``host:port`` (``port=0`` = ephemeral) and
+    serves the wire protocol; one reader thread + one eval thread per
+    connection."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 max_message_bytes: int = wire.MAX_MESSAGE_BYTES):
+        self.max_message_bytes = int(max_message_bytes)
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(16)
+        self.host, self.port = self._sock.getsockname()[:2]
+        self._closed = threading.Event()
+        self.connections_served = 0
+        self.dispatches_served = 0
+
+    # -- accept loop ----------------------------------------------------
+    def serve_forever(self) -> None:
+        try:
+            while not self._closed.is_set():
+                try:
+                    conn, _addr = self._sock.accept()
+                except OSError:
+                    break                        # listener closed
+                self.connections_served += 1
+                t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                     name="serve-conn", daemon=True)
+                t.start()
+        finally:
+            self.close()
+
+    def start(self) -> threading.Thread:
+        """Run the accept loop on a background thread (in-process use)."""
+        t = threading.Thread(target=self.serve_forever,
+                             name="serve-accept", daemon=True)
+        t.start()
+        return t
+
+    def close(self) -> None:
+        if not self._closed.is_set():
+            self._closed.set()
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+
+    # -- per-connection protocol ----------------------------------------
+    def _serve_conn(self, conn: socket.socket) -> None:
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        send_lock = threading.Lock()
+        # one eval lane per connection: dispatches execute in order while
+        # the reader loop stays free to answer heartbeats
+        ex = ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix="serve-eval")
+
+        def reply(msg: object) -> None:
+            with send_lock:
+                wire.send_msg(conn, msg)
+
+        def run_dispatch(evaluator, msg: wire.Dispatch) -> None:
+            try:
+                from repro.distributed.sharded import _eval_payload
+                rep = _eval_payload(evaluator, msg.payload)
+                reply(wire.ResultMsg(msg.seq, rep))
+            except Exception as exc:        # noqa: BLE001 — wire boundary
+                try:
+                    reply(wire.ErrorMsg(msg.seq, f"{type(exc).__name__}: "
+                                                 f"{exc}"))
+                except OSError:
+                    pass                    # client already gone
+            else:
+                self.dispatches_served += 1
+
+        try:
+            hello = wire.check_hello(
+                wire.recv_msg(conn, self.max_message_bytes))
+            digest, evaluator = _evaluator_for(hello.spec)
+            reply(wire.Ready(digest, tuple(evaluator.workloads)))
+            while True:
+                msg = wire.recv_msg(conn, self.max_message_bytes)
+                if isinstance(msg, wire.Dispatch):
+                    ex.submit(run_dispatch, evaluator, msg)
+                elif isinstance(msg, wire.Ping):
+                    reply(wire.Pong(msg.seq))
+                elif isinstance(msg, wire.Bye):
+                    break
+                else:
+                    raise wire.WireError(
+                        f"unexpected message {type(msg).__name__}")
+        except wire.ConnectionClosed:
+            pass                                # normal client departure
+        except (wire.WireError, OSError) as exc:
+            try:
+                reply(wire.ErrorMsg(-1, str(exc)))
+            except OSError:
+                pass
+        finally:
+            ex.shutdown(wait=False)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# process harness
+# ---------------------------------------------------------------------------
+
+def _spawned_main(host: str, port: int, port_conn) -> None:
+    srv = WorkerServer(host, port)
+    port_conn.send(srv.port)
+    port_conn.close()
+    srv.serve_forever()
+
+
+@dataclass
+class WorkerHandle:
+    """A spawned worker daemon: its process and bound address."""
+    process: object                 # multiprocessing.Process
+    host: str
+    port: int
+    address: Tuple[str, int] = field(init=False)
+
+    def __post_init__(self):
+        self.address = (self.host, self.port)
+
+    def kill(self) -> None:
+        """SIGKILL — the fault-tolerance test hammer: no cleanup, no
+        goodbye, in-flight dispatches die with the process."""
+        self.process.kill()
+        self.process.join()
+
+    def terminate(self) -> None:
+        self.process.terminate()
+        self.process.join()
+
+    def alive(self) -> bool:
+        return self.process.is_alive()
+
+
+def start_worker_process(host: str = "127.0.0.1", port: int = 0, *,
+                         timeout_s: float = 120.0) -> WorkerHandle:
+    """Spawn a worker daemon in a child process; returns once it is
+    listening (the bound port travels back over a pipe, so ``port=0``
+    works)."""
+    import multiprocessing as mp
+    ctx = mp.get_context("spawn")
+    parent, child = ctx.Pipe()
+    proc = ctx.Process(target=_spawned_main, args=(host, port, child),
+                       daemon=True)
+    proc.start()
+    child.close()
+    if not parent.poll(timeout_s):
+        proc.kill()
+        raise TimeoutError(f"worker did not bind within {timeout_s}s")
+    bound_port = parent.recv()
+    parent.close()
+    return WorkerHandle(process=proc, host=host, port=bound_port)
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve.worker",
+        description="repro.serve evaluation worker daemon")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 picks an ephemeral port (printed on startup)")
+    args = ap.parse_args(argv)
+    srv = WorkerServer(args.host, args.port)
+    print(f"repro-serve-worker listening on {srv.host}:{srv.port}",
+          flush=True)
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        srv.close()
+
+
+if __name__ == "__main__":
+    main()

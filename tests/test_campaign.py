@@ -228,12 +228,40 @@ def test_uniform_policy_never_early_stops():
     res = runner.run(budget=8, seeds={"memory_bw": SPACE.sample(RNG, 2)})
     assert res.policy == "uniform"
     assert res.early_stopped == {}
+    assert res.budget_weights is None
 
 
-def test_adaptive_policy_early_stops_and_reallocates():
-    """A campaign whose samples stop improving the merged archive for
-    `patience` rounds is dropped and its budget flows to the survivors —
-    but the shared budget is still spent exactly."""
+def test_allocate_slots_weighted_deficit():
+    """Deterministic shares: over N rounds each label is chosen ~N * its
+    normalized weight times, ties break toward the front of `order`, and
+    the carried credit guarantees even a floor-weight label is served."""
+    from repro.core.campaign import allocate_slots
+    credit = {"a": 0.0, "b": 0.0}
+    weights = {"a": 1.05, "b": 0.05}
+    counts = {"a": 0, "b": 0}
+    for _ in range(22):                     # one full period of b's share
+        for lb in allocate_slots(["a", "b"], credit, weights, 1):
+            counts[lb] += 1
+    assert counts == {"a": 21, "b": 1}      # 22 * (0.05 / 1.10) == 1
+    # equal weights, 2 slots of 3: stable tie-break then deficit rotation
+    credit = {}
+    eq = {"x": 1.0, "y": 1.0, "z": 1.0}
+    assert allocate_slots(["x", "y", "z"], credit, eq, 2) == ["x", "y"]
+    assert allocate_slots(["x", "y", "z"], credit, eq, 2) == ["x", "z"]
+    assert allocate_slots(["x", "y", "z"], credit, eq, 2) == ["y", "z"]
+    # degenerate inputs
+    assert allocate_slots([], {}, {}, 3) == []
+    assert allocate_slots(["x"], {}, {"x": 1.0}, 0) == []
+    with pytest.raises(ValueError, match="positive"):
+        allocate_slots(["x"], {}, {"x": 0.0}, 1)
+
+
+def test_adaptive_policy_continuous_budget_weights():
+    """The continuous adaptive policy reallocates by regret slope without
+    ever killing a campaign: the shared budget is spent exactly, every
+    campaign keeps proposing (weight floor), no binary early-stop fires,
+    and the final scheduling weights are reported + serialized."""
+    from repro.core.campaign import ADAPTIVE_WEIGHT_FLOOR
     rng = np.random.default_rng(11)
     ev = ModelEvaluator(get_evaluator("proxy").models)
     runner = CampaignRunner(ev, proxy=get_evaluator("proxy"), seed=0,
@@ -244,17 +272,21 @@ def test_adaptive_policy_early_stops_and_reallocates():
     assert res.policy == "adaptive"
     assert len(res.samples) == 18                # budget spent exactly
     assert len({tuple(s.idx) for s in res.samples}) == 18
-    assert res.early_stopped                     # someone stalled at patience=1
-    # a stopped campaign never observes a sample after its stop round
-    for label, stop_round in res.early_stopped.items():
-        assert all(t.round_i <= stop_round for t in res.telemetry
-                   if t.campaign == label)
-    # the survivors keep spending: rounds exceed the uniform bound B/K
-    assert res.rounds > -(-18 // len(res.per_campaign))
-    # serialization carries the policy + stop records
+    assert res.early_stopped == {}               # continuous, not binary
+    # nobody is starved: every campaign observes at least one sample
+    observed = {t.campaign for t in res.telemetry}
+    assert observed == set(res.per_campaign)
+    # final weights cover every campaign and respect the floor
+    assert set(res.budget_weights) == set(res.per_campaign)
+    assert all(w >= ADAPTIVE_WEIGHT_FLOOR - 1e-9
+               for w in res.budget_weights.values())
+    assert all(w <= 1.0 + ADAPTIVE_WEIGHT_FLOOR + 1e-9
+               for w in res.budget_weights.values())
+    # serialization carries the policy + continuous weights
     data = res.telemetry_dict()
     assert data["policy"] == "adaptive"
-    assert set(data["early_stopped"]) == set(res.early_stopped)
+    assert data["early_stopped"] == {}
+    assert data["budget_weights"] == res.budget_weights
 
 
 def test_seeds_per_campaign_multi_seed_step0():

@@ -1,0 +1,465 @@
+"""repro.serve: the cross-machine DSE-as-a-service layer.
+
+Covers the PR invariants: the length-prefixed pickle wire round-trips
+every message type and rejects oversized frames before allocation; the
+pickled worker spec rides pickle.HIGHEST_PROTOCOL and rebuilds a
+bit-identical evaluator; a ShardedEvaluator over a 2-worker loopback
+socket pool is bit-identical to the local ModelEvaluator on both
+fidelity tiers, under chaos injection, and across a worker SIGKILL
+mid-stream (eviction -> elastic resize -> retry); dead connections
+reconnect and re-register; the QoS weighted-deficit drain keeps
+scavenger throughput > 0 under saturating interactive load while tier
+weights shape relative throughput; the Gateway enforces per-tenant row
+budgets and queue-depth backpressure with reject-with-retry-after; and
+the persistent oracle store turns a repeat OracleEvaluator into an O(1)
+artifact load with corrupt artifacts quarantined, never trusted.
+"""
+import os
+import socket as socket_mod
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.distributed import (EvalService, ShardedEvaluator, ShardPayload,
+                               WorkerFault)
+from repro.distributed.faults import FaultEvent, FaultPlan
+from repro.distributed.sharded import _worker_spec, evaluator_from_spec
+from repro.perfmodel import (EvalRequest, ModelEvaluator, OracleEvaluator,
+                             get_evaluator)
+from repro.perfmodel.designspace import SPACE
+from repro.serve import (Gateway, RetryAfter, SocketPool, WIRE_VERSION,
+                         WorkerServer, start_worker_process, wire)
+
+RNG = np.random.default_rng(7)
+
+
+def _fresh(tier: str = "proxy") -> ModelEvaluator:
+    """A fresh evaluator (own dispatch counter) over the memoized models."""
+    return ModelEvaluator(get_evaluator(tier).models, tier=tier)
+
+
+def _assert_reports_identical(a, b):
+    assert a.workloads == b.workloads and a.detail == b.detail
+    assert np.array_equal(a.area, b.area)
+    for w in a.workloads:
+        assert np.array_equal(a.latency[w], b.latency[w])
+        if a.detail in ("ppa", "stalls"):
+            assert np.array_equal(a.op_time[w], b.op_time[w])
+            assert a.op_names[w] == b.op_names[w]
+        if a.detail == "stalls":
+            assert np.array_equal(a.stall[w], b.stall[w])
+            assert np.array_equal(a.op_class[w], b.op_class[w])
+
+
+@pytest.fixture(scope="module")
+def servers():
+    """Two in-process worker daemons on loopback ephemeral ports."""
+    s1, s2 = WorkerServer(), WorkerServer()
+    s1.start()
+    s2.start()
+    yield s1, s2
+    s1.close()
+    s2.close()
+
+
+# ---------------------------------------------------------------- wire
+def test_wire_roundtrip_every_message_type():
+    a, b = socket_mod.socketpair()
+    try:
+        for msg in (wire.Hello(b"spec"), wire.Ready("digest", ("lat",)),
+                    wire.Dispatch(3, "payload"), wire.ResultMsg(3, "rep"),
+                    wire.ErrorMsg(3, "boom"), wire.Ping(1), wire.Pong(1),
+                    wire.Bye("done")):
+            wire.send_msg(a, msg)
+            assert wire.recv_msg(b) == msg
+    finally:
+        a.close()
+        b.close()
+
+
+def test_wire_rejects_oversized_frames_before_allocation():
+    a, b = socket_mod.socketpair()
+    try:
+        wire.send_msg(a, wire.Dispatch(0, b"x" * 4096))
+        with pytest.raises(wire.WireError, match="exceeds"):
+            wire.recv_msg(b, max_bytes=64)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_wire_eof_raises_connection_closed():
+    a, b = socket_mod.socketpair()
+    a.close()
+    try:
+        with pytest.raises(wire.ConnectionClosed):
+            wire.recv_msg(b)
+    finally:
+        b.close()
+
+
+def test_check_hello_gates_type_and_version():
+    with pytest.raises(wire.WireError, match="expected Hello"):
+        wire.check_hello(wire.Ping(0))
+    with pytest.raises(wire.WireError, match="version"):
+        wire.check_hello(wire.Hello(b"", wire_version=WIRE_VERSION + 1))
+    hello = wire.Hello(b"spec")
+    assert wire.check_hello(hello) is hello
+
+
+# ---------------------------------------------------------------- spec
+def test_spec_highest_protocol_and_roundtrip():
+    """The worker spec rides pickle.HIGHEST_PROTOCOL and rebuilds an
+    evaluator bit-identical to its source."""
+    import pickle
+    spec = _worker_spec(_fresh())
+    assert spec[0] == 0x80                      # pickle protocol opcode
+    assert spec[1] == pickle.HIGHEST_PROTOCOL
+    rebuilt = evaluator_from_spec(spec)
+    local = _fresh()
+    idx = SPACE.sample(RNG, 9)
+    for detail in ("objectives", "stalls"):
+        req = EvalRequest(idx, detail=detail)
+        _assert_reports_identical(rebuilt.evaluate(req), local.evaluate(req))
+
+
+# -------------------------------------------------------- socket fabric
+def test_socket_mode_argument_validation():
+    with pytest.raises(ValueError, match="addresses"):
+        ShardedEvaluator(_fresh(), mode="socket")
+    with pytest.raises(ValueError, match="socket"):
+        ShardedEvaluator(_fresh(), workers=2, addresses=[("h", 1)])
+
+
+@pytest.mark.parametrize("tier", ["proxy", "target"])
+def test_socket_sharded_bit_identical_to_local(servers, tier):
+    """Acceptance: a 2-worker loopback socket pool reassembles reports
+    bit-identical to the in-process evaluator, on both fidelity tiers."""
+    s1, s2 = servers
+    idx = SPACE.sample(RNG, 23)                 # odd size: uneven shards
+    local = _fresh(tier)
+    ev = ShardedEvaluator(_fresh(tier), mode="socket",
+                          addresses=[(s1.host, s1.port), (s2.host, s2.port)])
+    assert ev.mode == "socket" and ev.workers == 2
+    for detail in ("objectives", "stalls"):
+        req = EvalRequest(idx, detail=detail)
+        _assert_reports_identical(ev.evaluate(req), local.evaluate(req))
+    assert ev.worker_dispatches >= 2            # really fanned out
+    snap = ev.registry.snapshot()
+    assert sorted(snap["live"]) == [0, 1]
+    ev.close()
+
+
+def test_socket_chaos_crash_hang_bit_identical(servers):
+    """FaultPlan chaos composes with the socket pool: a crashed dispatch
+    retries and a hung one times out + retries, bit-identical result."""
+    s1, s2 = servers
+    idx = SPACE.sample(RNG, 16)
+    local = _fresh().evaluate(EvalRequest(idx, "stalls"))
+    plan = FaultPlan([FaultEvent(0, 0, "crash"), FaultEvent(1, 1, "hang")])
+    ev = ShardedEvaluator(_fresh(), mode="socket",
+                          addresses=[(s1.host, s1.port), (s2.host, s2.port)],
+                          fault_plan=plan, shard_timeout_s=1.0,
+                          speculate=False)
+    rep = ev.evaluate(EvalRequest(idx, "stalls"))
+    _assert_reports_identical(rep, local)
+    assert ev.retried >= 2                      # crash + hang both retried
+    assert ev.timeouts >= 1
+    assert len(plan) == 0                       # every event consumed
+    ev.close()
+
+
+def test_socket_remote_evaluation_error_is_not_fatal(servers):
+    """A worker-side evaluation failure surfaces as WorkerFault WITHOUT
+    tearing the connection down — the next dispatch reuses it."""
+    s1, _ = servers
+    pool = SocketPool(_fresh(), addresses=[(s1.host, s1.port)])
+    bad = ShardPayload(SPACE.sample(RNG, 2), "nonsense_detail", None)
+    # the worker's EvalRequest validation rejects the detail remotely
+    with pytest.raises(WorkerFault, match="remote evaluation"):
+        pool.submit(bad).result(timeout=60)
+    idx = SPACE.sample(RNG, 4)
+    rep = pool.submit(ShardPayload(idx, "objectives", None)).result(timeout=60)
+    _assert_reports_identical(rep, _fresh().evaluate(
+        EvalRequest(idx, "objectives")))
+    assert pool.live_workers() == 1 and pool.reconnects == 0
+    pool.close()
+
+
+def test_socket_pool_reconnect_reregisters(servers):
+    """A dead connection fails in-flight work, is evicted from the
+    registry, and the next submit redials + re-registers the slot."""
+    s1, _ = servers
+    pool = SocketPool(_fresh(), addresses=[(s1.host, s1.port)],
+                      reconnect_cooldown_s=0.0)
+    payload = ShardPayload(SPACE.sample(RNG, 4), "objectives", None)
+    rep = pool.submit(payload).result(timeout=60)
+    assert pool.registry.alive(0)
+    pool._conns[0].die("simulated network partition")
+    assert not pool.registry.alive(0)
+    assert pool.registry.evictions >= 1
+    rep2 = pool.submit(payload).result(timeout=60)
+    _assert_reports_identical(rep, rep2)
+    assert pool.reconnects == 1
+    assert pool.registry.reregistrations >= 1
+    assert pool.registry.alive(0)
+    pool.close()
+
+
+def test_socket_worker_sigkill_mid_stream_bit_identical():
+    """Acceptance: SIGKILL a worker process while a stream of requests is
+    in flight — the dead slot is evicted (elastic resize included) and
+    every reassembled report stays bit-identical."""
+    w1 = start_worker_process()
+    w2 = start_worker_process()
+    ev = None
+    try:
+        idx = SPACE.sample(RNG, 64)
+        want = _fresh().evaluate(EvalRequest(idx, "stalls"))
+        ev = ShardedEvaluator(_fresh(), mode="socket",
+                              addresses=[w1.address, w2.address],
+                              elastic=True)
+        reports, errors = [], []
+
+        def stream():
+            try:
+                for _ in range(30):
+                    reports.append(ev.evaluate(EvalRequest(idx, "stalls")))
+            except Exception as exc:            # noqa: BLE001 — reraised
+                errors.append(exc)
+
+        t = threading.Thread(target=stream)
+        t.start()
+        while len(reports) < 3 and t.is_alive():
+            time.sleep(0.01)
+        w2.kill()                               # SIGKILL, no goodbye
+        t.join(timeout=300)
+        assert not t.is_alive()
+        assert not errors, errors
+        assert len(reports) == 30
+        for rep in reports:
+            _assert_reports_identical(rep, want)
+        snap = ev.registry.snapshot()
+        assert snap["evictions"] >= 1           # the dead slot was noticed
+        assert 0 in snap["live"]                # the survivor serves on
+    finally:
+        if ev is not None:
+            ev.close()
+        for w in (w1, w2):
+            if w.alive():
+                w.kill()
+
+
+# ------------------------------------------------------------ QoS tiers
+def test_service_tier_validation():
+    ev = _fresh()
+    with pytest.raises(ValueError, match="tier"):
+        EvalService(ev).submit(EvalRequest(SPACE.sample(RNG, 1)),
+                               tier="bulk")
+    with pytest.raises(ValueError, match="unknown QoS tiers"):
+        EvalService(ev, tier_weights={"bulk": 1.0})
+    with pytest.raises(ValueError, match="> 0"):
+        EvalService(ev, tier_weights={"batch": 0.0})
+
+
+def test_qos_scavenger_never_starved_under_interactive_flood():
+    """Acceptance: with a saturating interactive backlog and a row-capped
+    tick, the anti-starvation floor keeps scavenger throughput > 0."""
+    svc = EvalService(_fresh(), max_rows_per_tick=4)
+    idx = SPACE.sample(RNG, 66)
+    inter = [svc.submit(EvalRequest(idx[i:i + 1]), client=f"i{i}",
+                        tier="interactive") for i in range(60)]
+    scav = [svc.submit(EvalRequest(idx[60 + j:61 + j]), client="bg",
+                       tier="scavenger") for j in range(6)]
+    ticks = 0
+    while not all(f.done() for f in scav):
+        svc.tick()
+        ticks += 1
+        assert ticks <= 10                      # floor: >= 1 scavenger/tick
+    assert svc.tier_served["scavenger"] == 6
+    assert any(not f.done() for f in inter)     # the flood is still queued
+    svc.close()
+
+
+def test_qos_tier_weights_shape_throughput():
+    """Equal offered load per tier + a row-capped tick: throughput orders
+    by weight (8:3:1) and the cap is spent exactly every tick."""
+    svc = EvalService(_fresh(), max_rows_per_tick=13)
+    idx = SPACE.sample(RNG, 240)
+    k = 0
+    for t in ("interactive", "batch", "scavenger"):
+        for _ in range(80):
+            svc.submit(EvalRequest(idx[k:k + 1]), client=t, tier=t)
+            k += 1
+    for _ in range(8):
+        svc.tick()
+    served = dict(svc.tier_served)
+    assert sum(served.values()) == 8 * 13       # cap spent exactly
+    assert served["scavenger"] >= 8             # the floor, every tick
+    assert served["interactive"] > 1.5 * served["batch"]
+    assert served["batch"] > 1.5 * served["scavenger"]
+    svc.close()
+
+
+def test_service_tier_telemetry_percentiles():
+    svc = EvalService(_fresh())
+    idx = SPACE.sample(RNG, 2)
+    svc.submit(EvalRequest(idx[:1]), tier="interactive")
+    svc.submit(EvalRequest(idx[1:]), tier="batch")
+    svc.tick()
+    tiers = svc.telemetry()["tiers"]
+    assert set(tiers) == {"interactive", "batch", "scavenger"}
+    assert tiers["interactive"]["served"] == 1
+    assert tiers["interactive"]["p50_ms"] is not None
+    assert tiers["interactive"]["p99_ms"] >= tiers["interactive"]["p50_ms"]
+    assert tiers["batch"]["weight"] == 3.0
+    assert tiers["scavenger"]["served"] == 0
+    assert tiers["scavenger"]["p50_ms"] is None
+    svc.close()
+
+
+# ------------------------------------------------------------- gateway
+def test_gateway_budget_exhaustion_and_window_roll():
+    clock = [0.0]
+    gw = Gateway(_fresh(), rows_per_window=10, window_s=60.0,
+                 now=lambda: clock[0])
+    idx = SPACE.sample(RNG, 13)
+    fut = gw.submit(EvalRequest(idx[:10]), tenant="acme")
+    gw.tick()
+    assert fut.done()
+    with pytest.raises(RetryAfter) as ei:
+        gw.submit(EvalRequest(idx[10:11]), tenant="acme")
+    assert 0 < ei.value.retry_after_s <= 60.0
+    tel = gw.telemetry()
+    assert tel["tenants"]["acme"]["rejected_budget"] == 1
+    assert tel["tenants"]["acme"]["used_rows"] == 10   # rejects cost nothing
+    assert tel["admission"]["rejected"] == 1
+    clock[0] += 61.0                            # the window rolls
+    fut2 = gw.submit(EvalRequest(idx[10:12]), tenant="acme")
+    gw.tick()
+    assert fut2.done()
+    assert gw.telemetry()["tenants"]["acme"]["used_rows"] == 2
+    gw.close()
+
+
+def test_gateway_backpressure_rejects_with_drain_eta():
+    gw = Gateway(_fresh(), max_queued_rows=4)
+    idx = SPACE.sample(RNG, 6)
+    for i in range(4):                          # fill the backlog, no ticks
+        gw.submit(EvalRequest(idx[i:i + 1]), tenant=f"t{i}")
+    with pytest.raises(RetryAfter) as ei:
+        gw.submit(EvalRequest(idx[4:5]), tenant="late")
+    assert ei.value.retry_after_s > 0
+    assert gw.telemetry()["tenants"]["late"]["rejected_backpressure"] == 1
+    gw.tick()                                   # the backlog drains
+    fut = gw.submit(EvalRequest(idx[4:5]), tenant="late")
+    gw.tick()
+    assert fut.done()
+    gw.close()
+
+
+def test_gateway_per_tenant_quota_overrides():
+    gw = Gateway(_fresh(), rows_per_window=100, tenants={"small": 2})
+    idx = SPACE.sample(RNG, 5)
+    gw.submit(EvalRequest(idx[:2]), tenant="small")
+    with pytest.raises(RetryAfter):
+        gw.submit(EvalRequest(idx[2:3]), tenant="small")
+    # unknown tenants get the default quota — config, not an allow-list
+    gw.submit(EvalRequest(idx[:3]), tenant="unheard_of")
+    gw.tick()
+    gw.close()
+
+
+def test_gateway_validation_and_tier_pass_through():
+    with pytest.raises(ValueError, match="default_tier"):
+        Gateway(_fresh(), default_tier="bulk")
+    gw = Gateway(_fresh(), default_tier="scavenger")
+    gw.submit(EvalRequest(SPACE.sample(RNG, 1)), tenant="t")
+    gw.tick()
+    assert gw.service.tier_served["scavenger"] == 1
+    gw.close()
+
+
+def test_gateway_is_drop_in_evaluator_with_fleet_telemetry():
+    """The gateway implements the Evaluator protocol, and telemetry
+    merges service counters, tenant ledgers and the fleet registry."""
+    sharded = ShardedEvaluator(_fresh(), workers=2)
+    gw = Gateway(EvalService(sharded))
+    idx = SPACE.sample(RNG, 7)
+    assert np.array_equal(gw.objectives(idx), _fresh().objectives(idx))
+    tel = gw.telemetry()
+    assert tel["service"]["submits"] >= 1
+    assert tel["fleet"]["workers"] == 2
+    assert sorted(tel["fleet"]["live"]) == [0, 1]
+    assert tel["tenants"]["default"]["admitted"] == 1
+    gw.close()
+    sharded.close()
+
+
+# --------------------------------------------------------- oracle store
+SUB = 6_000
+
+
+def test_oracle_store_repeat_is_o1_load(tmp_path, monkeypatch):
+    from repro.perfmodel.sweep import SweepEngine
+    calls = {"n": 0}
+    orig = SweepEngine.run
+
+    def counting(self, *a, **kw):
+        calls["n"] += 1
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(SweepEngine, "run", counting)
+    store = str(tmp_path / "oracle")
+    kw = dict(sweep_kwargs=dict(chunk_size=4_096), stop=SUB,
+              oracle_store=store)
+    r1 = OracleEvaluator(get_evaluator("proxy"), **kw).sweep_result()
+    assert calls["n"] == 1
+    assert len(os.listdir(store)) == 1
+    r2 = OracleEvaluator(get_evaluator("proxy"), **kw).sweep_result()
+    assert calls["n"] == 1                      # loaded, not re-swept
+    assert r1.n_evaluated == r2.n_evaluated
+    assert np.array_equal(r1.pareto_y, r2.pareto_y)
+    assert np.array_equal(r1.pareto_ids, r2.pareto_ids)
+    assert np.array_equal(r1.topk_val, r2.topk_val)
+    assert np.array_equal(r1.topk_ids, r2.topk_ids)
+    # a different sweep config is a different key -> fresh artifact
+    OracleEvaluator(get_evaluator("proxy"),
+                    sweep_kwargs=dict(chunk_size=4_096), stop=SUB - 1_000,
+                    oracle_store=store).sweep_result()
+    assert calls["n"] == 2
+    assert len(os.listdir(store)) == 2
+
+
+def test_oracle_store_corrupt_artifact_quarantined(tmp_path):
+    store = str(tmp_path / "oracle")
+    kw = dict(sweep_kwargs=dict(chunk_size=4_096), stop=SUB,
+              oracle_store=store)
+    r1 = OracleEvaluator(get_evaluator("proxy"), **kw).sweep_result()
+    (fname,) = os.listdir(store)
+    path = os.path.join(store, fname)
+    with open(path, "wb") as f:
+        f.write(b"not an npz artifact")
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        r2 = OracleEvaluator(get_evaluator("proxy"), **kw).sweep_result()
+    assert np.array_equal(r1.pareto_y, r2.pareto_y)
+    assert os.path.exists(path + ".quarantined")
+    assert os.path.exists(path)                 # re-swept artifact rewritten
+
+
+def test_sweep_result_save_load_guards(tmp_path):
+    from repro.perfmodel.sweep import (SweepEngine, load_sweep_result,
+                                       save_sweep_result)
+    res = SweepEngine(get_evaluator("proxy"),
+                      chunk_size=4_096).run(0, 3_000)
+    path = str(tmp_path / "art.npz")
+    save_sweep_result(path, res, key="k1")
+    back = load_sweep_result(path, key="k1")
+    assert np.array_equal(back.pareto_y, res.pareto_y)
+    assert np.array_equal(back.topk_val, res.topk_val)
+    with pytest.raises(ValueError, match="different"):
+        load_sweep_result(path, key="some-other-study")
+    with pytest.raises(FileNotFoundError):
+        load_sweep_result(str(tmp_path / "missing.npz"))
