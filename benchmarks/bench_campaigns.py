@@ -14,6 +14,10 @@ A100-start campaign, at the SAME shared budget, with
   ones) vs the ``"uniform"`` round-robin, at the same budget;
 * the ``seeds_per_campaign`` axis: do multi-seed step-0 lists beat
   spending those evaluations on more search steps at equal budget?
+* the AHK-provenance ablation: campaigns driven by the SOURCE-EXTRACTED
+  primary edges (``repro.analysis.influence``, the default) vs the frozen
+  legacy hand-coded table they replaced — PHV and final regret at the
+  same budget must match, since extraction proved equivalent.
 """
 from __future__ import annotations
 
@@ -29,6 +33,16 @@ from repro.perfmodel import ModelEvaluator, OracleEvaluator, get_evaluator
 # smoke sweeps a 600k-id subrange (matches the sweep bench's smoke scale);
 # the full run sweeps all 4.7M ids — a few seconds on one CPU device
 _SMOKE_STOP = 600_000
+
+# the hand-coded AHK table this repo used before repro.analysis extracted
+# the same edges from the perfmodel source — frozen HERE only, as the
+# historical reference arm of the provenance ablation
+_LEGACY_PRIMARY = {
+    "tensor_compute": "sa_dim",
+    "vector_compute": "vector_width",
+    "memory_bw": "mem_channels",
+    "interconnect": "link_count",
+}
 
 
 def run(budget: int = 20, smoke: bool = False,
@@ -97,6 +111,32 @@ def run(budget: int = 20, smoke: bool = False,
     lines.append(f"campaigns,adaptive_fused_dispatches,{adaptive.dispatches}")
     lines.append(f"campaigns,adaptive_vs_uniform_phv,"
                  f"{adaptive.phv / max(results['seeded'].phv, 1e-300):.3f}x")
+
+    # ---- AHK-provenance ablation: extracted rules vs the legacy table ----
+    # the "seeded" run above uses the source-extracted primaries (default);
+    # this arm injects the frozen hand-coded table at the same budget/seed
+    from repro.analysis.influence import primary_resources
+    legacy = CampaignRunner(ev, proxy=proxy, oracle=oracle, seed=0,
+                            primary_map=_LEGACY_PRIMARY).run(budget=budget,
+                                                             sweep=sweep)
+    lines.append(f"campaigns,extracted_eq_legacy_tables,"
+                 f"{int(primary_resources() == _LEGACY_PRIMARY)}")
+    lines.append(f"campaigns,legacy_table_phv_frac_final,"
+                 f"{legacy.phv_frac_curve()[-1]:.4f}")
+    lines.append(f"campaigns,legacy_table_regret_final,"
+                 + "|".join(f"{r:.4f}" for r in legacy.regret_curve()[-1]))
+    lines.append(f"campaigns,extracted_vs_legacy_phv,"
+                 f"{results['seeded'].phv / max(legacy.phv, 1e-300):.3f}x")
+    lines.append(f"campaigns,extracted_eq_legacy_phv,"
+                 f"{int(abs(results['seeded'].phv - legacy.phv) < 1e-12)}")
+    hist = results["seeded"].stall_histogram or {}
+    lines.append("campaigns,seeded_stall_histogram,"
+                 + "|".join(f"{k}:{v}" for k, v in sorted(hist.items())))
+    audit = (results["seeded"].rule_audit or {}).get("counts", {})
+    lines.append(f"campaigns,rule_audit_metric_agree,"
+                 f"{audit.get('metric_agree', 0)}")
+    lines.append(f"campaigns,rule_audit_probe_only,"
+                 f"{audit.get('metric_probe_only', 0)}")
 
     # ---- seeds_per_campaign axis: multi-seed step-0 vs more SE steps ----
     if seeds_axis is None:

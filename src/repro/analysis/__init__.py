@@ -1,0 +1,48 @@
+"""`repro.analysis`: static analysis over the repo's own source code.
+
+Two complementary passes share one AST/dataflow core (:mod:`.dataflow`):
+
+* **Knowledge extraction** (:mod:`.influence`) — an interprocedural,
+  assignment-level dataflow analysis of the performance-model source
+  (``perfmodel/hardware.py``, ``roofline.py``, ``workload.py``,
+  ``designspace.py``, ``critical_path.py``) that emits a typed
+  :class:`~repro.analysis.influence.InfluenceGraph`: design parameter →
+  derived hardware quantity → roofline op-term → stall class → PPA
+  metric, every edge carrying ``file:line`` provenance.  The AHK primary
+  stall→parameter edges consumed by :class:`~repro.core.llm.RuleOracle`
+  and :class:`~repro.core.strategy.StrategyEngine` are *derived* from
+  this graph instead of hand-coded (the literal reading of the paper's
+  §3.2.1 "the LLM statically analyses the simulator codebase").
+  ``python -m repro.analysis.extract --check`` guards the checked-in
+  graph artifact in CI.
+
+* **Invariant linter** (:mod:`.lint`) — AST checks tuned to this
+  codebase's jit/concurrency stack (shared mutables written outside a
+  held lock in ``distributed/``/``serve/``, futures swallowed on
+  exception paths, thread/timer/executor leaks, mutable default args,
+  jit hazards).  ``python -m repro.analysis.lint --baseline
+  .lint-baseline.json`` fails CI only on *new* findings.
+"""
+from repro.analysis.influence import (InfluenceGraph, RuleAudit,
+                                      cross_validate,
+                                      derive_influence_map_from_source,
+                                      derived_to_metrics,
+                                      extract_influence_graph,
+                                      primary_resources)
+
+__all__ = [
+    "InfluenceGraph", "RuleAudit", "cross_validate",
+    "derive_influence_map_from_source", "derived_to_metrics",
+    "extract_influence_graph", "primary_resources",
+    "Finding", "lint_paths", "load_baseline",
+]
+
+_LINT_NAMES = ("Finding", "lint_paths", "load_baseline")
+
+
+def __getattr__(name):
+    # lazy so `python -m repro.analysis.lint` doesn't double-import lint
+    if name in _LINT_NAMES:
+        from repro.analysis import lint
+        return getattr(lint, name)
+    raise AttributeError(name)

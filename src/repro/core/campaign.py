@@ -67,7 +67,7 @@ REFERENCE_CAMPAIGN = "a100"
 
 POLICIES = ("uniform", "adaptive")
 
-TELEMETRY_VERSION = 3
+TELEMETRY_VERSION = 4    # v4: + stall_histogram, rule_audit
 
 #: Adaptive policy: minimum scheduling weight of a fully-stalled campaign.
 #: Nonzero so no campaign is ever starved outright — a long-stalled
@@ -137,6 +137,13 @@ class CampaignSetResult:
     service_counters: Optional[dict] = None
     # ^ EvalService.telemetry() snapshot (degradation ladder counters,
     #   resubmits) when the runner drove a service; None otherwise
+    stall_histogram: Optional[Dict[str, int]] = None
+    # ^ dominant-stall counts over all budgeted observations: which AHK
+    #   rules fired (and how often) across the campaign set
+    rule_audit: Optional[dict] = None
+    # ^ source-extracted influence graph vs this run's probe-derived map
+    #   (repro.analysis.influence.RuleAudit.as_dict()): the §5.2
+    #   auto-correction telemetry — disagreements = candidate corrections
 
     def telemetry_dict(self) -> dict:
         return {
@@ -149,6 +156,9 @@ class CampaignSetResult:
             "budget_weights": (None if self.budget_weights is None
                                else dict(self.budget_weights)),
             "service": self.service_counters,
+            "stall_histogram": (None if self.stall_histogram is None
+                                else dict(self.stall_histogram)),
+            "rule_audit": self.rule_audit,
             "records": [dataclasses.asdict(r) for r in self.telemetry],
         }
 
@@ -219,7 +229,8 @@ class CampaignRunner:
                  policy: str = "uniform",
                  patience: int = 3,
                  workloads: Optional[tuple] = None,
-                 scenario: Optional[str] = None):
+                 scenario: Optional[str] = None,
+                 primary_map: Optional[Dict[str, str]] = None):
         # deferred import: repro.distributed pulls perfmodel (and through
         # it this module) back in — binding it lazily breaks the cycle for
         # processes whose import chain starts at repro.distributed
@@ -255,7 +266,8 @@ class CampaignRunner:
         self.dse = LuminaDSE(self.evaluator, proxy=proxy, llm=llm,
                              space=space, ref_point=ref_point,
                              area_budget=area_budget, seed=seed,
-                             engine=self.ee, workloads=workloads)
+                             engine=self.ee, workloads=workloads,
+                             primary_map=primary_map)
         self.ref_point = self.dse.ref_point
 
     # ------------------------------------------------------------------
@@ -438,4 +450,6 @@ class CampaignRunner:
             service_counters=(dict(self._service.telemetry(),
                                    campaign_resubmits=self.service_resubmits)
                               if self._service is not None else None),
+            stall_histogram=dict(self.ee.stall_counts),
+            rule_audit=self.dse.rule_audit().as_dict(),
         )

@@ -71,6 +71,9 @@ class ExplorationEngine:
                                f"have {self.evaluator.workloads}")
         self._wt, self._wp = workloads
         self.evals = 0        # simulator invocations (the sampling budget)
+        # dominant-stall histogram over budgeted observations: which AHK
+        # rules the SE will have fired; campaign telemetry snapshots it
+        self.stall_counts: dict = {}
         # ONE cache: the service's shared cross-client row cache when the
         # evaluator is a service, a private same-semantics one otherwise
         self._cache: RowCache = (
@@ -159,6 +162,8 @@ class ExplorationEngine:
         # the design's dominant stall = the larger ABSOLUTE stall across the
         # two latency objectives (what the SE will attack next)
         dom = self._merge(rep_t, rep_p)
+        self.stall_counts[dom.dominant] = \
+            self.stall_counts.get(dom.dominant, 0) + 1
         return Sample(
             step=step, idx=idx.copy(),
             ttft=rep_t.latency, tpot=rep_p.latency, area=rep_t.area,

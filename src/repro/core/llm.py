@@ -27,6 +27,15 @@ TASK_PREDICTION = "perf_area_prediction"
 TASK_TUNING = "parameter_tuning"
 
 
+def _default_primary_map() -> Dict[str, str]:
+    """AHK primary edges (stall class -> most-correlated parameter),
+    EXTRACTED from the perfmodel source by :mod:`repro.analysis.influence`
+    — the paper's 'LLM statically analyses the simulator codebase' step.
+    Imported lazily: the analysis pass parses source once and is cached."""
+    from repro.analysis.influence import primary_resources
+    return primary_resources()
+
+
 @dataclasses.dataclass
 class MCQuery:
     task: str                       # one of the three benchmark task families
@@ -64,11 +73,23 @@ class RuleOracle:
          least-critical resource only.
     ``enhanced=False`` disables the guards, reproducing the failure patterns
     the paper reports for un-prompt-hardened models.
+
+    ``primary_map`` (stall class -> parameter) defaults to the AHK edges
+    extracted from the perfmodel source by :mod:`repro.analysis.influence`;
+    inject an alternative for ablations (e.g. the frozen legacy table).
     """
 
-    def __init__(self, enhanced: bool = True, name: str = "rule-oracle"):
+    def __init__(self, enhanced: bool = True, name: str = "rule-oracle",
+                 primary_map: Optional[Dict[str, str]] = None):
         self.enhanced = enhanced
         self.name = name + ("-enhanced" if enhanced else "")
+        self._primary_map = primary_map
+
+    @property
+    def primary_map(self) -> Dict[str, str]:
+        if self._primary_map is None:
+            self._primary_map = _default_primary_map()
+        return self._primary_map
 
     # -- task dispatch ------------------------------------------------
     def choose(self, q: MCQuery) -> int:
@@ -85,12 +106,7 @@ class RuleOracle:
         p = q.payload
         dominant = p["dominant_stall"]
         # AHK: stall class -> the single most-correlated resource parameter
-        primary = {
-            "tensor_compute": "sa_dim",
-            "vector_compute": "vector_width",
-            "memory_bw": "mem_channels",
-            "interconnect": "link_count",
-        }[dominant]
+        primary = self.primary_map[dominant]
         candidates = p["option_params"]       # list[list[(param, direction)]]
         scores = []
         for opt in candidates:
@@ -135,12 +151,7 @@ class RuleOracle:
     def _tuning(self, q: MCQuery) -> int:
         p = q.payload
         dominant = p["dominant_stall"]
-        primary = {
-            "tensor_compute": "sa_dim",
-            "vector_compute": "vector_width",
-            "memory_bw": "mem_channels",
-            "interconnect": "link_count",
-        }[dominant]
+        primary = self.primary_map[dominant]
         crit = p["criticality"]               # param -> criticality score
         sens = p.get("sensitivity")           # param -> metric -> delta/step
         ok = p.get("constraints_ok", [True] * len(p["option_params"]))
@@ -178,8 +189,9 @@ class DegradedOracle:
     """RuleOracle with calibrated error injection (emulates weaker LLMs)."""
 
     def __init__(self, p_err: float, seed: int = 0, enhanced: bool = True,
-                 name: str = "degraded"):
-        self._inner = RuleOracle(enhanced=enhanced)
+                 name: str = "degraded",
+                 primary_map: Optional[Dict[str, str]] = None):
+        self._inner = RuleOracle(enhanced=enhanced, primary_map=primary_map)
         self._p = float(p_err)
         self._rng = np.random.default_rng(seed)
         self.name = f"{name}(p={p_err:.2f})"

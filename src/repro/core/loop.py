@@ -78,7 +78,8 @@ class Campaign:
         self.label = label
         self.tm = TrajectoryMemory(dse.ref_point)
         self.notes: List[str] = []
-        self.se = StrategyEngine(dse.llm, dse.imap, dse.space)
+        self.se = StrategyEngine(dse.llm, dse.imap, dse.space,
+                                 primary_map=dse.primary_map)
         inits = np.atleast_2d(np.asarray(init, dtype=np.int32))
         self._pending_inits = []             # de-duplicated, order-preserving
         seen: Set[tuple] = set()
@@ -146,12 +147,15 @@ class LuminaDSE:
                  seed: int = 0,
                  engine: Optional[ExplorationEngine] = None,
                  imap: Optional[InfluenceMap] = None,
-                 workloads: Optional[Tuple[str, str]] = None):
+                 workloads: Optional[Tuple[str, str]] = None,
+                 primary_map: Optional[dict] = None):
         """``engine`` lets parallel campaigns share ONE ExplorationEngine
         (one budget counter, one report cache); ``imap`` injects an already
         derived influence map so K campaigns pay acquisition once;
         ``workloads`` picks the (prefill, decode) pair of a multi-workload
-        evaluator this loop optimizes (e.g. one zoo-suite scenario)."""
+        evaluator this loop optimizes (e.g. one zoo-suite scenario);
+        ``primary_map`` overrides the source-extracted AHK primary edges
+        (stall -> parameter) for every campaign's SE — the ablation hook."""
         self.space = space
         evaluator = as_evaluator(evaluator)
         self.ee = (engine if engine is not None
@@ -166,6 +170,7 @@ class LuminaDSE:
         self.refiner = RefinementLoop()
         self.seed = seed
         self._imap = imap
+        self.primary_map = primary_map   # None -> source-extracted default
         if ref_point is None:
             # the reference evaluation is free (given); reports() caches it so
             # a campaign starting at the reference re-reads it for free
@@ -185,6 +190,15 @@ class LuminaDSE:
             self._imap = derive_influence_map(self.proxy, space=self.space,
                                               seed=self.seed)
         return self._imap
+
+    def rule_audit(self):
+        """Cross-validate the source-extracted influence graph against this
+        loop's probe-derived map: the auto-correction telemetry of §5.2
+        (source-vs-probe disagreements are candidate rule corrections).
+        Returns a :class:`repro.analysis.influence.RuleAudit`."""
+        from repro.analysis.influence import (cross_validate,
+                                              extract_influence_graph)
+        return cross_validate(extract_influence_graph(), self.imap)
 
     # ------------------------------------------------------------------
     def start(self, init: Optional[np.ndarray] = None,

@@ -85,3 +85,20 @@ def _responds(vals: np.ndarray, rel_eps: float) -> bool:
     span = vals.max(axis=-1) - vals.min(axis=-1)
     scale = np.maximum(np.abs(vals).max(axis=-1), 1e-30)
     return bool((span / scale > rel_eps).any())
+
+
+def static_influence_map() -> InfluenceMap:
+    """The SAME InfluenceMap contract, acquired WITHOUT executing the model:
+    built from the influence graph that :mod:`repro.analysis.influence`
+    extracts from the perfmodel source (the paper's literal 'LLM statically
+    analyses the simulator codebase' path).  Zero evaluator dispatches —
+    usable as ``LuminaDSE(imap=static_influence_map())`` — and the probe
+    map cross-validates it (:meth:`LuminaDSE.rule_audit`)."""
+    from repro.analysis.influence import extract_influence_graph
+    graph = extract_influence_graph()
+    metric_edges = {p: set(ms) for p, ms in graph.param_metrics().items()}
+    stall_edges: Dict[str, Set[str]] = {p: set() for p in graph.params}
+    for stall in graph.stalls:
+        for p in graph.params_for_stall(stall):
+            stall_edges[p].add(stall)
+    return InfluenceMap(metric_edges=metric_edges, stall_edges=stall_edges)

@@ -1,128 +1,34 @@
-"""QualE static-analysis path: derive the Influence Map by PARSING the
-simulator source code (the literal analogue of the paper's §3.2.1, where
-the LLM statically analyses the simulator codebase).
+"""DEPRECATED shim: the AST-based QualE path moved to
+:mod:`repro.analysis.influence`.
 
-The analyser reads the actual Python sources of the performance model
-(``repro.perfmodel.hardware`` / ``roofline``), builds an assignment-level
-dataflow graph with :mod:`ast`, and traces which design-space parameters
-reach which derived quantities (tensor/vector throughput, memory/ici
-bandwidth, area) — e.g. it discovers from code alone that
-``vector_flops`` depends on core/sublane/vector width but NOT on
-``sa_dim``, the exact example in the paper.
+The original single-file walker (``_DepVisitor``) grew into the full
+interprocedural extractor in :mod:`repro.analysis` — guard-aware dataflow,
+``file:line`` provenance, stall/term edges and the AHK primaries, with a
+checked-in artifact guarded by ``python -m repro.analysis.extract --check``.
+This module re-exports the compatible surface and warns on import; new code
+should import from :mod:`repro.analysis.influence` directly.
 
-The probing-based QualE (repro.core.quale) remains the default (it also
-quantifies *stall-class* reachability, which needs execution); this module
-cross-validates it: tests assert the two maps agree on metric edges.
+Note one intentional table delta: the old hand-coded ``DERIVED_TO_METRICS``
+listed the ``vector_width`` passthrough key, which no roofline term reads
+(``vector_flops`` carries its influence); the extracted table only contains
+edges that exist in the source.  Param-level results are identical.
 """
 from __future__ import annotations
 
-import ast
-import inspect
-from typing import Dict, Set
+import warnings
 
-from repro.perfmodel import hardware as HW
-from repro.perfmodel.designspace import PARAM_NAMES
+from repro.analysis.influence import derive_influence_map_from_source
 
-# derived quantity -> PPA metrics it feeds (the model's output surface)
-DERIVED_TO_METRICS = {
-    "tensor_flops": {"ttft", "tpot"},
-    "vector_flops": {"ttft", "tpot"},
-    "mem_bw": {"ttft", "tpot"},
-    "ici_bw": {"ttft", "tpot"},
-    "sram_kb": {"ttft", "tpot"},       # utilization terms
-    "gbuf_bytes": {"ttft", "tpot"},    # blocked-matmul traffic
-    "sa_dim": {"ttft", "tpot"},
-    "sublane_count": {"ttft", "tpot"},
-    "core_count": {"ttft", "tpot"},
-    "vector_width": {"ttft", "tpot"},
-    "area_mm2": {"area"},
-}
+__all__ = ["derive_influence_map_from_source", "DERIVED_TO_METRICS"]
+
+warnings.warn(
+    "repro.core.quale_ast is deprecated; use repro.analysis.influence "
+    "(the interprocedural extractor) instead",
+    DeprecationWarning, stacklevel=2)
 
 
-class _DepVisitor(ast.NodeVisitor):
-    """Collects, per assignment target, the set of names it reads."""
-
-    def __init__(self):
-        self.deps: Dict[str, Set[str]] = {}
-        self._func = None
-
-    def visit_FunctionDef(self, node: ast.FunctionDef):
-        prev, self._func = self._func, node.name
-        self.generic_visit(node)
-        self._func = prev
-
-    def visit_Assign(self, node: ast.Assign):
-        reads = {n.id for n in ast.walk(node.value)
-                 if isinstance(n, ast.Name)}
-        reads |= {n.value for n in ast.walk(node.value)
-                  if isinstance(n, ast.Constant) and isinstance(n.value, str)}
-        # dict-style reads: v["core_count"] -> record the subscript key
-        for sub in ast.walk(node.value):
-            if isinstance(sub, ast.Subscript) and \
-                    isinstance(sub.slice, ast.Constant):
-                reads.add(str(sub.slice.value))
-        for tgt in node.targets:
-            if isinstance(tgt, ast.Name):
-                self.deps.setdefault(tgt.id, set()).update(reads)
-            elif isinstance(tgt, ast.Tuple):
-                for e in tgt.elts:
-                    if isinstance(e, ast.Name):
-                        self.deps.setdefault(e.id, set()).update(reads)
-        self.generic_visit(node)
-
-    def visit_Return(self, node: ast.Return):
-        # dict literal returns: {"tensor_flops": expr, ...}
-        if isinstance(node.value, ast.Dict):
-            for k, v in zip(node.value.keys, node.value.values):
-                if isinstance(k, ast.Constant):
-                    reads = {n.id for n in ast.walk(v)
-                             if isinstance(n, ast.Name)}
-                    for sub in ast.walk(v):
-                        if isinstance(sub, ast.Subscript) and \
-                                isinstance(sub.slice, ast.Constant):
-                            reads.add(str(sub.slice.value))
-                    self.deps.setdefault(str(k.value), set()).update(reads)
-        elif node.value is not None and self._func:
-            # plain `return expr`: attribute the reads to the function name
-            reads = {n.id for n in ast.walk(node.value)
-                     if isinstance(n, ast.Name)}
-            for sub in ast.walk(node.value):
-                if isinstance(sub, ast.Subscript) and \
-                        isinstance(sub.slice, ast.Constant):
-                    reads.add(str(sub.slice.value))
-            self.deps.setdefault(self._func, set()).update(reads)
-        self.generic_visit(node)
-
-
-def _transitive(deps: Dict[str, Set[str]], target: str,
-                params: Set[str]) -> Set[str]:
-    """Design-space params reachable from `target` through the assignments."""
-    seen, stack, hits = set(), [target], set()
-    while stack:
-        cur = stack.pop()
-        if cur in seen:
-            continue
-        seen.add(cur)
-        if cur in params:
-            hits.add(cur)
-        stack.extend(deps.get(cur, ()))
-    return hits
-
-
-def derive_influence_map_from_source() -> Dict[str, Set[str]]:
-    """param -> set of PPA metrics, discovered from the model SOURCE CODE."""
-    src = inspect.getsource(HW.derive_hardware) + "\n" + \
-        inspect.getsource(HW.area_mm2)
-    tree = ast.parse(src)
-    v = _DepVisitor()
-    v.visit(tree)
-    params = set(PARAM_NAMES)
-
-    out: Dict[str, Set[str]] = {p: set() for p in PARAM_NAMES}
-    for derived, metrics in DERIVED_TO_METRICS.items():
-        for p in _transitive(v.deps, derived, params):
-            out[p].update(metrics)
-    # every hardware parameter feeds the area model (checked transitively)
-    for p in _transitive(v.deps, "area_mm2", params):
-        out[p].add("area")
-    return out
+def __getattr__(name):
+    if name == "DERIVED_TO_METRICS":
+        from repro.analysis.influence import derived_to_metrics
+        return {k: set(v) for k, v in derived_to_metrics().items()}
+    raise AttributeError(name)

@@ -42,22 +42,23 @@ class Directive:
                 "rationale": self.rationale}
 
 
-# the single most-correlated resource per stall class (AHK primary edges)
-PRIMARY_RESOURCE = {
-    "tensor_compute": "sa_dim",
-    "vector_compute": "vector_width",
-    "memory_bw": "mem_channels",
-    "interconnect": "link_count",
-}
-
-
 class StrategyEngine:
+    """``primary_map`` (stall class -> the single most-correlated resource,
+    the AHK primary edges) defaults to the edges EXTRACTED from the
+    perfmodel source by :mod:`repro.analysis.influence`; inject a mapping
+    for ablations (e.g. the frozen legacy hand-coded table)."""
+
     def __init__(self, llm: LLMBackend, imap: InfluenceMap,
-                 space: DesignSpace = SPACE, max_aggressiveness: int = 3):
+                 space: DesignSpace = SPACE, max_aggressiveness: int = 3,
+                 primary_map: Optional[Dict[str, str]] = None):
         self.llm = llm
         self.imap = imap
         self.space = space
         self.max_aggressiveness = max_aggressiveness
+        if primary_map is None:
+            from repro.analysis.influence import primary_resources
+            primary_map = primary_resources()
+        self.primary_map = dict(primary_map)
 
     # ------------------------------------------------------------------
     def propose(self, idx: np.ndarray, report: StallReport, sens: Sensitivity,
@@ -140,7 +141,7 @@ class StrategyEngine:
     def _relieve_moves(self, idx, vals, dominant, tm) -> List[List[Move]]:
         """Candidate move-sets that grow capacity for the dominant stall."""
         out: List[List[Move]] = []
-        primary = PRIMARY_RESOURCE[dominant]
+        primary = self.primary_map[dominant]
         candidates = [primary] + [p for p in self.imap.params_for_stall(dominant)
                                   if p != primary]
         for p in candidates:

@@ -442,7 +442,8 @@ class EvalService:
             while (getattr(self.evaluator, "workers", 1) > 1
                    and hasattr(self.evaluator, "resize")):
                 self.evaluator.resize(max(1, self.evaluator.workers // 2))
-                self.degraded["narrow"] += 1
+                with self._lock:   # concurrent self-ticking clients race here
+                    self.degraded["narrow"] += 1
                 try:
                     return (self.evaluator.evaluate(
                         EvalRequest(rows, detail=detail)), detail, None)
@@ -452,7 +453,8 @@ class EvalService:
             try:
                 rep = self.evaluator.evaluate(
                     EvalRequest(rows, detail="objectives"))
-                self.degraded["proxy"] += 1
+                with self._lock:
+                    self.degraded["proxy"] += 1
                 return rep, "objectives", None
             except BaseException as exc:
                 last = exc

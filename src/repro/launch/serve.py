@@ -54,12 +54,12 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int, smoke: bool,
         t0 = time.time()
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         for _ in range(gen):
-            toks.append(np.asarray(tok))
+            toks.append(tok)        # stays on device: no per-token sync
             logits, cache = step(params, cache, tok)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(logits)
         tpot = (time.time() - t0) / max(gen, 1)
-        out = np.stack(toks, axis=1)
+        out = np.asarray(jnp.stack(toks, axis=1))
         return {"tokens": out, "ttft_s": ttft, "tpot_s": tpot}
 
 

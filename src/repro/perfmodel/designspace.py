@@ -8,6 +8,10 @@ physical values.
 
 Total cardinality: 4 * 14 * 4 * 6 * 6 * 7 * 7 * 12 = 4,741,632  (~4.7M,
 matching the paper).
+
+:data:`PARAM_NAMES` is also the parameter universe of the influence graph
+:mod:`repro.analysis.influence` extracts from the perfmodel source (every
+graph edge chain starts at one of these names).
 """
 from __future__ import annotations
 

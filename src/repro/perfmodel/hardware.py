@@ -10,6 +10,12 @@ Calibrated against the NVIDIA A100 reference of Table 4:
   A100 (12 links)          -> 300 GB/s/dir         (NVLink3 spec)          OK
 * die area model sums component areas, calibrated to ~826 mm^2 for A100.
 
+This module is part of the surface :mod:`repro.analysis.influence` parses:
+``derive_hardware``'s dict-literal return defines the param -> derived-
+quantity edges of the extracted influence graph (CI checks the artifact via
+``python -m repro.analysis.extract --check`` — refresh with ``--write``
+after changing which parameters a derived key reads).
+
 All functions accept dicts of scalar-or-batched jnp arrays (the output of
 ``DesignSpace.decode``) and are jit/vmap friendly.
 """

@@ -13,6 +13,15 @@ metrics it physically influences:
 Evaluating the *entire* 4.7M-point space takes ~1 s on one device (the paper
 reports 6000 CPU-hours per 1000 LLMCompass samples — this is the substrate
 speedup that lets us run 1000-sample DSE campaigns in CI).
+
+This module is the core of the surface :mod:`repro.analysis.influence`
+parses: ``RooflineModel._op_terms`` defines the derived -> op-term edges,
+``_dominant_class`` the term -> stall attribution (its ``jnp.where`` guard
+tree becomes per-edge workload-kind constraints), and the division
+denominators the per-class PEAK throughputs from which the AHK primary
+stall -> parameter edges are derived.  After restructuring any of these,
+re-run ``python -m repro.analysis.extract --check`` (CI does) and refresh
+the artifact with ``--write`` if the edge change is intentional.
 """
 from __future__ import annotations
 

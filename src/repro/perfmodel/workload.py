@@ -14,6 +14,11 @@ Builders:
   (dense / MoE / hybrid-SSM / RWKV / enc-dec / VLM backbone), so every arch
   doubles as a DSE workload.
 
+Two anchors here are parsed by :mod:`repro.analysis.influence`: the op-kind
+constants (``MATMUL``/``VECTOR``/...) resolve the roofline guard
+comparisons, and ``paper_suite``'s dict literal names the latency metrics
+("ttft"/"tpot") of the extracted influence graph.
+
 Portfolio pieces:
 
 * :class:`WorkloadStack` — the deduped union of many workloads' op tables:

@@ -1,0 +1,262 @@
+"""repro.analysis.lint: every rule must fire on its known-bad fixture and
+stay quiet on the clean twin; the baseline workflow gates CI on NEW findings
+only."""
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import (RULE_NAMES, Finding, lint_file, lint_paths,
+                                 load_baseline, main, write_baseline)
+
+# one known-bad snippet per rule (and a clean twin where the hazard is
+# resolved the way the codebase actually resolves it)
+CORPUS = {
+    "mutable-default": """
+        def enqueue(job, queue=[]):
+            queue.append(job)
+            return queue
+    """,
+    "future-swallow": """
+        from concurrent.futures import Future
+
+        def submit(work):
+            fut = Future()
+            try:
+                work()
+            except Exception:
+                pass
+            return fut
+    """,
+    "thread-not-daemon": """
+        import threading
+
+        def start():
+            t = threading.Thread(target=print)
+            t.start()
+            return t
+    """,
+    "executor-leak": """
+        from concurrent.futures import ThreadPoolExecutor
+
+        def fanout(jobs):
+            ex = ThreadPoolExecutor(4)
+            return [ex.submit(j) for j in jobs]
+    """,
+    "jit-static-mutable": """
+        import jax
+
+        def compile_step(fn):
+            return jax.jit(fn, static_argnames=["mode"])
+    """,
+    "jit-traced-branch": """
+        import jax
+
+        @jax.jit
+        def step(x, threshold):
+            if threshold > 0:
+                return x * 2
+            return x
+    """,
+    "host-sync-hot-loop": """
+        import jax.numpy as jnp
+
+        def decode(steps):
+            out = []
+            for _ in range(steps):
+                tok = jnp.argmax(jnp.ones(4))
+                out.append(int(tok))
+            return out
+    """,
+}
+
+CLEAN = {
+    "mutable-default": """
+        def enqueue(job, queue=None):
+            queue = [] if queue is None else queue
+            queue.append(job)
+            return queue
+    """,
+    "future-swallow": """
+        from concurrent.futures import Future
+
+        def submit(work):
+            fut = Future()
+            try:
+                work()
+            except Exception as exc:
+                fut.set_exception(exc)
+            return fut
+    """,
+    "thread-not-daemon": """
+        import threading
+
+        def start():
+            t = threading.Thread(target=print, daemon=True)
+            t.start()
+            return t
+    """,
+    "executor-leak": """
+        from concurrent.futures import ThreadPoolExecutor
+
+        def fanout(jobs):
+            with ThreadPoolExecutor(4) as ex:
+                return [f.result() for f in [ex.submit(j) for j in jobs]]
+    """,
+    "jit-static-mutable": """
+        import jax
+
+        def compile_step(fn):
+            return jax.jit(fn, static_argnames=("mode",))
+    """,
+    "jit-traced-branch": """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x, threshold):
+            return jnp.where(threshold > 0, x * 2, x)
+    """,
+    "host-sync-hot-loop": """
+        import jax.numpy as jnp
+
+        def decode(steps):
+            out = []
+            for _ in range(steps):
+                tok = jnp.argmax(jnp.ones(4))
+                out.append(tok)       # stays on device
+            return [int(t) for t in out]
+    """,
+}
+
+# the shared-write rule needs a src/distributed/ path, handled separately
+UNLOCKED_BAD = """
+    import threading
+
+    class Registry:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._jobs = {}
+
+        def put(self, k, v):
+            self._jobs[k] = v
+
+        def drop(self, k):
+            self._jobs.pop(k, None)
+"""
+
+UNLOCKED_CLEAN = """
+    import threading
+
+    class Registry:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._jobs = {}
+
+        def put(self, k, v):
+            with self._lock:
+                self._jobs[k] = v
+
+        def _drop(self, k):
+            \"\"\"Caller holds the lock.\"\"\"
+            self._jobs.pop(k, None)
+"""
+
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(text))
+    return p
+
+
+@pytest.mark.parametrize("rule", sorted(CORPUS))
+def test_rule_fires_on_bad_fixture(tmp_path, rule):
+    findings = lint_file(_write(tmp_path, f"{rule}.py", CORPUS[rule]))
+    assert [f.rule for f in findings] == [rule], findings
+
+
+@pytest.mark.parametrize("rule", sorted(CLEAN))
+def test_rule_quiet_on_clean_fixture(tmp_path, rule):
+    findings = lint_file(_write(tmp_path, f"{rule}.py", CLEAN[rule]))
+    assert findings == [], findings
+
+
+def test_unlocked_shared_write_fires_in_scope(tmp_path):
+    p = _write(tmp_path, "src/distributed/registry.py", UNLOCKED_BAD)
+    findings = lint_file(p)
+    assert {f.rule for f in findings} == {"unlocked-shared-write"}
+    assert {f.symbol for f in findings} == {"Registry.put", "Registry.drop"}
+
+
+def test_unlocked_shared_write_respects_lock_and_docstring(tmp_path):
+    p = _write(tmp_path, "src/serve/registry.py", UNLOCKED_CLEAN)
+    assert lint_file(p) == []
+
+
+def test_unlocked_shared_write_out_of_scope(tmp_path):
+    # same hazard outside distributed/ or serve/: not this rule's business
+    p = _write(tmp_path, "src/other/registry.py", UNLOCKED_BAD)
+    assert lint_file(p) == []
+
+
+def test_every_rule_has_a_fixture():
+    assert set(RULE_NAMES) == set(CORPUS) | {"unlocked-shared-write"}
+
+
+def test_syntax_error_is_reported_not_raised(tmp_path):
+    p = _write(tmp_path, "broken.py", "def broken(:\n")
+    findings = lint_file(p)
+    assert [f.rule for f in findings] == ["syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# baseline workflow + CLI
+# ---------------------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    findings = lint_file(_write(tmp_path, "a.py", CORPUS["mutable-default"]))
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, findings, {})
+    accepted = load_baseline(bl)
+    assert set(accepted) == {f.key for f in findings}
+    # keys are line-free: shifting the code must not churn the baseline
+    (tmp_path / "a.py").write_text(
+        "# comment\n\n" + textwrap.dedent(CORPUS["mutable-default"]))
+    shifted = lint_file(tmp_path / "a.py")
+    assert {f.key for f in shifted} == set(accepted)
+    # re-writing preserves hand-edited justifications
+    d = json.loads(bl.read_text())
+    d["findings"][0]["justification"] = "intentional"
+    bl.write_text(json.dumps(d))
+    write_baseline(bl, findings, load_baseline(bl))
+    assert load_baseline(bl)[findings[0].key] == "intentional"
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = _write(tmp_path, "bad.py", CORPUS["thread-not-daemon"])
+    clean = _write(tmp_path, "ok.py", CLEAN["thread-not-daemon"])
+    bl = tmp_path / "bl.json"
+    assert main([str(clean)]) == 0
+    assert main([str(bad)]) == 1                       # new finding
+    assert main([str(bad), "--write-baseline", str(bl)]) == 0
+    assert main([str(bad), "--baseline", str(bl)]) == 0   # accepted now
+    assert main([str(clean), "--baseline", str(bl)]) == 0  # stale entry only
+
+
+def test_repo_is_clean_against_committed_baseline():
+    """The committed baseline accepts every current repo finding — the CI
+    gate (`python -m repro.analysis.lint --baseline .lint-baseline.json`)
+    must hold for the tree under test."""
+    import pathlib
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    accepted = load_baseline(repo / ".lint-baseline.json")
+    findings = lint_paths([repo / "src" / "repro"])
+    new = [f for f in findings if f.key not in accepted]
+    assert new == [], new
+
+
+def test_finding_str_and_key():
+    f = Finding("r", "src/x.py", 3, "C.m", "msg")
+    assert f.key == ("r", "src/x.py", "C.m")
+    assert str(f) == "src/x.py:3: [r] C.m: msg"
