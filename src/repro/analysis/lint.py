@@ -34,6 +34,13 @@ Rules:
                        in that same loop is pulled to host
                        (``float()``/``np.asarray``/``block_until_ready``)
                        — a per-iteration device sync in a hot path.
+``raw-telemetry-dict`` In ``distributed/``/``serve/``: a public ``self``
+                       attribute zero-initialized in ``__init__`` (``= 0``
+                       or a dict of zeros) is ``+=``-incremented — an
+                       ad-hoc telemetry counter that should be a
+                       :class:`repro.obs.metrics.Counter` (typed, locked,
+                       exported).  Underscore-prefixed attributes are
+                       internal state, not telemetry, and are exempt.
 =====================  =====================================================
 """
 from __future__ import annotations
@@ -426,6 +433,64 @@ def _rule_host_sync_hot_loop(tree: ast.Module, file: str) -> Iterator[Finding]:
                         "host every iteration of this loop")
 
 
+def _is_zero_counter_init(value: ast.expr) -> bool:
+    """`= 0`, `= {...: 0}` or `= {k: 0 for ...}` — the ad-hoc counter
+    initialization shapes the registry replaces."""
+    if isinstance(value, ast.Constant):
+        return value.value == 0 and not isinstance(value.value, bool)
+    if isinstance(value, ast.Dict):
+        return bool(value.values) and all(
+            isinstance(v, ast.Constant) and v.value == 0
+            for v in value.values)
+    if isinstance(value, ast.DictComp):
+        return isinstance(value.value, ast.Constant) and \
+            value.value.value == 0
+    return False
+
+
+def _rule_raw_telemetry_dict(tree: ast.Module,
+                             file: str) -> Iterator[Finding]:
+    if not any(s in file for s in CONCURRENCY_SCOPES):
+        return
+    for cls in tree.body:
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        methods = {m.name: m for m in cls.body
+                   if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        init = methods.get("__init__")
+        if init is None:
+            continue
+        counters: Set[str] = set()
+        for stmt in ast.walk(init):
+            if not isinstance(stmt, ast.Assign):
+                continue
+            for tgt in stmt.targets:
+                attr = _self_attr(tgt)
+                if attr is None or attr.startswith("_"):
+                    continue
+                if _is_zero_counter_init(stmt.value):
+                    counters.add(attr)
+        if not counters:
+            continue
+        for mname, m in methods.items():
+            if mname == "__init__":
+                continue
+            for node in ast.walk(m):
+                if not isinstance(node, ast.AugAssign):
+                    continue
+                tgt = node.target
+                attr = _self_attr(tgt)
+                if attr is None and isinstance(tgt, ast.Subscript):
+                    attr = _self_attr(tgt.value)
+                if attr in counters:
+                    yield Finding(
+                        "raw-telemetry-dict", file, node.lineno,
+                        f"{cls.name}.{mname}",
+                        f"self.{attr} is an ad-hoc telemetry counter "
+                        "(zero-initialized in __init__, incremented here); "
+                        "register a repro.obs.metrics Counter instead")
+
+
 _RULES = (
     _rule_mutable_default,
     _rule_unlocked_shared_write,
@@ -435,11 +500,13 @@ _RULES = (
     _rule_jit_static_mutable,
     _rule_jit_traced_branch,
     _rule_host_sync_hot_loop,
+    _rule_raw_telemetry_dict,
 )
 
 RULE_NAMES = ("mutable-default", "unlocked-shared-write", "future-swallow",
               "thread-not-daemon", "executor-leak", "jit-static-mutable",
-              "jit-traced-branch", "host-sync-hot-loop")
+              "jit-traced-branch", "host-sync-hot-loop",
+              "raw-telemetry-dict")
 
 
 # --------------------------------------------------------------------------

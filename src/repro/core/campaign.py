@@ -56,6 +56,8 @@ from repro.core.explore import ExplorationEngine
 from repro.core.llm import LLMBackend
 from repro.core.loop import Campaign, DSEResult, LuminaDSE
 from repro.core.memory import Sample, TrajectoryMemory
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NOOP
 from repro.perfmodel.designspace import DesignSpace, SPACE, A100_REFERENCE
 from repro.perfmodel.evaluator import (EvalRequest, Evaluator,
                                        OracleEvaluator, as_evaluator)
@@ -67,7 +69,8 @@ REFERENCE_CAMPAIGN = "a100"
 
 POLICIES = ("uniform", "adaptive")
 
-TELEMETRY_VERSION = 4    # v4: + stall_histogram, rule_audit
+TELEMETRY_VERSION = 5    # v5: + metrics (registry snapshot); v4: +
+                         # stall_histogram, rule_audit
 
 #: Adaptive policy: minimum scheduling weight of a fully-stalled campaign.
 #: Nonzero so no campaign is ever starved outright — a long-stalled
@@ -144,6 +147,9 @@ class CampaignSetResult:
     # ^ source-extracted influence graph vs this run's probe-derived map
     #   (repro.analysis.influence.RuleAudit.as_dict()): the §5.2
     #   auto-correction telemetry — disagreements = candidate corrections
+    metrics: Optional[dict] = None
+    # ^ the runner's MetricsRegistry.snapshot() at run end (v5): round /
+    #   per-campaign observation counters in the unified obs format
 
     def telemetry_dict(self) -> dict:
         return {
@@ -159,6 +165,7 @@ class CampaignSetResult:
             "stall_histogram": (None if self.stall_histogram is None
                                 else dict(self.stall_histogram)),
             "rule_audit": self.rule_audit,
+            "metrics": self.metrics,
             "records": [dataclasses.asdict(r) for r in self.telemetry],
         }
 
@@ -177,6 +184,32 @@ class CampaignSetResult:
     def phv_frac_curve(self) -> np.ndarray:
         return np.array([np.nan if r.phv_frac is None else r.phv_frac
                          for r in self.telemetry])
+
+
+def load_telemetry(path: str) -> dict:
+    """Load a :meth:`CampaignSetResult.save_telemetry` JSON, upgrading
+    older format versions to the current one in memory.
+
+    v4 (and earlier) files predate the ``metrics`` registry snapshot;
+    v3 files predate ``stall_histogram`` / ``rule_audit``.  Missing keys
+    are filled with ``None`` and ``version`` is stamped to the current
+    :data:`TELEMETRY_VERSION` — a file from a NEWER build refuses to
+    load (its keys could mean something this build does not know).
+    """
+    with open(path) as f:
+        data = json.load(f)
+    version = int(data.get("version", 1))
+    if version > TELEMETRY_VERSION:
+        raise ValueError(
+            f"telemetry format v{version} is newer than this build's "
+            f"v{TELEMETRY_VERSION}; refusing to load")
+    if version < 4:
+        data.setdefault("stall_histogram", None)
+        data.setdefault("rule_audit", None)
+    if version < 5:
+        data.setdefault("metrics", None)
+    data["version"] = TELEMETRY_VERSION
+    return data
 
 
 class CampaignRunner:
@@ -230,7 +263,9 @@ class CampaignRunner:
                  patience: int = 3,
                  workloads: Optional[tuple] = None,
                  scenario: Optional[str] = None,
-                 primary_map: Optional[Dict[str, str]] = None):
+                 primary_map: Optional[Dict[str, str]] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None):
         # deferred import: repro.distributed pulls perfmodel (and through
         # it this module) back in — binding it lazily breaks the cycle for
         # processes whose import chain starts at repro.distributed
@@ -239,7 +274,19 @@ class CampaignRunner:
         self.evaluator = as_evaluator(evaluator)
         self._service = (self.evaluator
                          if isinstance(self.evaluator, EvalService) else None)
-        self.service_resubmits = 0       # failed-request resubmissions
+        # default to the service's tracer so campaign spans root the same
+        # causal tree its tick/dispatch spans grow under
+        self.tracer = (tracer if tracer is not None
+                       else getattr(self._service, "tracer", None) or NOOP)
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._c_rounds = self.metrics.counter(
+            "campaign_rounds", "fused-dispatch rounds driven")
+        self._c_obs = self.metrics.counter(
+            "campaign_observations", "budgeted observations, per campaign",
+            labelnames=("campaign",))
+        self._c_resubmits = self.metrics.counter(
+            "campaign_service_resubmits",
+            "failed service requests resubmitted once")
         if scenario is not None:
             # pick a zoo-suite scenario by name: its (prefill, decode)
             # workload pair becomes this runner's objective pair
@@ -269,6 +316,11 @@ class CampaignRunner:
                              engine=self.ee, workloads=workloads,
                              primary_map=primary_map)
         self.ref_point = self.dse.ref_point
+
+    @property
+    def service_resubmits(self) -> int:
+        """Failed-request resubmissions across all :meth:`run` calls."""
+        return int(self._c_resubmits.value())
 
     # ------------------------------------------------------------------
     def seed_starts(self, seeds: Mapping[str, np.ndarray],
@@ -356,82 +408,97 @@ class CampaignRunner:
         credit: Dict[str, float] = {label: 0.0 for label in campaigns}
 
         order = list(campaigns)
-        while self.ee.evals < budget_stop:
-            rounds += 1
-            room = budget_stop - self.ee.evals
-            if self.policy == "adaptive":
-                # budget flows to falling-regret campaigns continuously:
-                # weighted-deficit allocation over floor + gain EWMA
-                weights = {lb: ADAPTIVE_WEIGHT_FLOOR + gain_ewma[lb]
-                           for lb in order}
-                chosen = allocate_slots(order, credit, weights,
-                                        min(room, len(order)))
-            else:
-                chosen = order[:room]
-            proposals = []
-            for label in chosen:
-                camp = campaigns[label]
-                idx, directive = camp.propose()
-                proposals.append((label, camp, idx, directive))
-            # ---- the fused round dispatch: K candidates, ONE dispatch.
-            # With a plain evaluator the RUNNER batches (one prefetched
-            # EvalRequest); with an EvalService each campaign submits its
-            # own request and the SERVICE's coalescing tick fuses them.
-            if self._service is not None:
-                # campaign traffic is latency-critical for the human in
-                # the loop: ride the interactive QoS tier so background
-                # batch/scavenger sweeps cannot starve the DSE rounds
-                futures = [self._service.submit(
-                    EvalRequest(p[2][None, :], detail="stalls"),
-                    client=p[0],                 # campaign label = client
-                    tier="interactive")
-                    for p in proposals]
-                self._service.tick()
-                while not all(f.done() for f in futures):
-                    self._service.tick()         # row-capped service ticks
-                # worker loss heals between ticks: a failed request gets
-                # ONE resubmission before its error is surfaced
-                retried = []
-                for p, fut in zip(proposals, futures):
-                    if fut.exception() is not None:
-                        self.service_resubmits += 1
-                        retried.append(self._service.submit(
+        tr = self.tracer
+        with tr.span("campaign.run", budget=int(budget),
+                     campaigns=len(campaigns)):
+            while self.ee.evals < budget_stop:
+                rounds += 1
+                self._c_rounds.inc()
+                room = budget_stop - self.ee.evals
+                if self.policy == "adaptive":
+                    # budget flows to falling-regret campaigns continuously:
+                    # weighted-deficit allocation over floor + gain EWMA
+                    weights = {lb: ADAPTIVE_WEIGHT_FLOOR + gain_ewma[lb]
+                               for lb in order}
+                    chosen = allocate_slots(order, credit, weights,
+                                            min(room, len(order)))
+                else:
+                    chosen = order[:room]
+                with tr.span("campaign.round", round_i=rounds,
+                             slots=len(chosen)):
+                    proposals = []
+                    for label in chosen:
+                        camp = campaigns[label]
+                        idx, directive = camp.propose()
+                        proposals.append((label, camp, idx, directive))
+                    # ---- the fused round dispatch: K candidates, ONE
+                    # dispatch.  With a plain evaluator the RUNNER batches
+                    # (one prefetched EvalRequest); with an EvalService each
+                    # campaign submits its own request and the SERVICE's
+                    # coalescing tick fuses them.
+                    if self._service is not None:
+                        # campaign traffic is latency-critical for the human
+                        # in the loop: ride the interactive QoS tier so
+                        # background batch/scavenger sweeps cannot starve
+                        # the DSE rounds
+                        futures = [self._service.submit(
                             EvalRequest(p[2][None, :], detail="stalls"),
-                            client=p[0], tier="interactive"))
-                while retried and not all(f.done() for f in retried):
-                    self._service.tick()
-                for fut in retried:
-                    fut.result()                 # second failure is real
-            else:
-                self.ee.prefetch(np.stack([p[2] for p in proposals]))
-            for label, camp, idx, directive in proposals:
-                sample = self.ee.evaluate(idx, step=camp.step,
-                                          directive=directive)
-                camp.observe(sample)
-                merged.add(sample)
-                improved = bool((sample.objectives < best).any())
-                best = np.minimum(best, sample.objectives)
-                record = StepRecord(
-                    eval_i=self.ee.evals, round_i=rounds, campaign=label,
-                    step=camp.step,
-                    objectives=[float(v) for v in sample.objectives],
-                    phv=merged.phv(),
-                )
-                gained = 1.0 if (record.phv > prev_phv or improved) else 0.0
-                gain_ewma[label] += gain_alpha * (gained - gain_ewma[label])
-                prev_phv = record.phv
-                if self.oracle is not None:
-                    record.regret = [float(v)
-                                     for v in self.oracle.regret(best[None, :])]
-                    record.phv_frac = self.oracle.normalized_phv(
-                        record.phv, self.ref_point)
-                telemetry.append(record)
-                if step_callback is not None:
-                    step_callback(record, sample)
-            # round-robin fairness: rotate which campaign is clipped
-            # (uniform) or wins credit ties (adaptive) when the remaining
-            # budget no longer covers every live campaign
-            order = order[1:] + order[:1]
+                            client=p[0],         # campaign label = client
+                            tier="interactive")
+                            for p in proposals]
+                        self._service.tick()
+                        while not all(f.done() for f in futures):
+                            self._service.tick()  # row-capped service ticks
+                        # worker loss heals between ticks: a failed request
+                        # gets ONE resubmission before its error is surfaced
+                        retried = []
+                        for p, fut in zip(proposals, futures):
+                            if fut.exception() is not None:
+                                self._c_resubmits.inc()
+                                retried.append(self._service.submit(
+                                    EvalRequest(p[2][None, :],
+                                                detail="stalls"),
+                                    client=p[0], tier="interactive"))
+                        while retried and not all(f.done() for f in retried):
+                            self._service.tick()
+                        for fut in retried:
+                            fut.result()         # second failure is real
+                    else:
+                        self.ee.prefetch(np.stack([p[2]
+                                                   for p in proposals]))
+                    for label, camp, idx, directive in proposals:
+                        sample = self.ee.evaluate(idx, step=camp.step,
+                                                  directive=directive)
+                        camp.observe(sample)
+                        merged.add(sample)
+                        self._c_obs.inc(campaign=label)
+                        improved = bool((sample.objectives < best).any())
+                        best = np.minimum(best, sample.objectives)
+                        record = StepRecord(
+                            eval_i=self.ee.evals, round_i=rounds,
+                            campaign=label, step=camp.step,
+                            objectives=[float(v)
+                                        for v in sample.objectives],
+                            phv=merged.phv(),
+                        )
+                        gained = (1.0 if (record.phv > prev_phv or improved)
+                                  else 0.0)
+                        gain_ewma[label] += gain_alpha * (gained
+                                                          - gain_ewma[label])
+                        prev_phv = record.phv
+                        if self.oracle is not None:
+                            record.regret = [
+                                float(v)
+                                for v in self.oracle.regret(best[None, :])]
+                            record.phv_frac = self.oracle.normalized_phv(
+                                record.phv, self.ref_point)
+                        telemetry.append(record)
+                        if step_callback is not None:
+                            step_callback(record, sample)
+                # round-robin fairness: rotate which campaign is clipped
+                # (uniform) or wins credit ties (adaptive) when the
+                # remaining budget no longer covers every live campaign
+                order = order[1:] + order[:1]
 
         return CampaignSetResult(
             per_campaign={label: c.result() for label, c in campaigns.items()},
@@ -452,4 +519,5 @@ class CampaignRunner:
                               if self._service is not None else None),
             stall_histogram=dict(self.ee.stall_counts),
             rule_audit=self.dse.rule_audit().as_dict(),
+            metrics=self.metrics.snapshot(),
         )

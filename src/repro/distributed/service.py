@@ -59,6 +59,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import Clock, CounterView, MetricsRegistry
+from repro.obs.trace import NOOP
 from repro.perfmodel.evaluator import (DETAILS, EvalRequest, PPAReport,
                                        RowCache, as_evaluator)
 
@@ -89,6 +91,7 @@ class _Pending:
     tier: str = "batch"
     deadline: Optional[float] = None     # absolute monotonic deadline
     t_submit: float = 0.0                # monotonic submit time (latency)
+    span: object = None                  # detached service.request span
 
 
 def _assemble(rows: List[PPAReport], names: Tuple[str, ...],
@@ -152,6 +155,13 @@ class EvalService:
         Only a request that exhausts every rung sees the evaluator's
         exception; ``service.degraded`` counts rung traffic and requests
         NEVER crash the tick.
+    registry / tracer / clock:
+        Observability hooks (:mod:`repro.obs`): the
+        :class:`~repro.obs.metrics.MetricsRegistry` holding the traffic
+        instruments (fresh per service by default), a
+        :class:`~repro.obs.trace.Tracer` for tick/dispatch/request spans
+        (default: the free no-op tracer), and an injectable clock for
+        deterministic latency accounting under test.
     """
 
     def __init__(self, evaluator, *, cache_rows: int = 65_536,
@@ -159,11 +169,16 @@ class EvalService:
                  max_rows_per_tick: Optional[int] = None,
                  autostart: bool = False, window_s: float = 0.002,
                  degrade: Tuple[str, ...] = DEGRADE_RUNGS,
-                 tier_weights: Optional[Dict[str, float]] = None):
+                 tier_weights: Optional[Dict[str, float]] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None, clock: Optional[Clock] = None):
         self.evaluator = as_evaluator(evaluator)
         self.space = self.evaluator.space
         self.tier = self.evaluator.tier
         self.window_s = float(window_s)
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NOOP
+        self._clock: Clock = clock if clock is not None else time.monotonic
         self.max_rows_per_tick = (None if max_rows_per_tick is None
                                   else int(max_rows_per_tick))
         self._lock = threading.Lock()
@@ -185,10 +200,6 @@ class EvalService:
                     raise ValueError(f"tier weight for {t!r} must be > 0")
                 weights[t] = float(w)
         self.tier_weights = weights
-        # per-tier service stats: resolve counts + queue-to-resolve latency
-        self.tier_served = {t: 0 for t in QOS_TIERS}
-        self._tier_lat: Dict[str, Deque[float]] = {
-            t: deque(maxlen=4096) for t in QOS_TIERS}
         # THE shared cross-client design-row cache (ExplorationEngine reads
         # this same object when its evaluator is a service)
         self.row_cache: RowCache = (cache if cache is not None
@@ -199,13 +210,40 @@ class EvalService:
             raise ValueError(f"unknown degrade rungs {sorted(unknown_rungs)}; "
                              f"choose from {DEGRADE_RUNGS}")
         self.degrade = tuple(degrade)
-        # traffic counters
-        self.submits = 0                 # requests received
-        self.cache_hits = 0              # requests resolved straight from cache
-        self.fused_dispatches = 0        # ticks that reached the evaluator
-        self.coalesced_requests = 0      # requests resolved by a fused tick
-        # degradation counters: deadline demotions + ladder rung traffic
-        self.degraded = {"deadline": 0, "narrow": 0, "proxy": 0, "cached": 0}
+        # traffic instruments — each takes its OWN lock on write, so no
+        # increment needs the service lock (the PR 8 unlocked-shared-write
+        # rule passes by construction).  Int-valued properties and
+        # CounterView facades below keep the old attribute surface
+        # (`svc.submits`, `svc.degraded["narrow"]`, `dict(svc.tier_served)`)
+        # working bit-for-bit.
+        m = self.metrics
+        self._c_submits = m.counter(
+            "service_submits", "requests received")
+        self._c_cache_hits = m.counter(
+            "service_cache_hits", "requests resolved straight from cache")
+        self._c_fused = m.counter(
+            "service_fused_dispatches", "ticks that reached the evaluator")
+        self._c_coalesced = m.counter(
+            "service_coalesced_requests", "requests resolved by a fused tick")
+        self._c_degraded = m.counter(
+            "service_degraded",
+            "deadline demotions + degradation-ladder rung traffic",
+            labelnames=("rung",))
+        for rung in ("deadline",) + DEGRADE_RUNGS:
+            self._c_degraded.touch(rung=rung)
+        self._c_tier_served = m.counter(
+            "service_tier_served", "requests resolved, by QoS tier",
+            labelnames=("tier",))
+        self._h_queue_lat = m.histogram(
+            "service_queue_latency_s", "queue-to-resolve latency (s) by tier",
+            labelnames=("tier",))
+        for t in QOS_TIERS:
+            self._c_tier_served.touch(tier=t)
+            self._h_queue_lat.touch(tier=t)
+        self._h_tick = m.histogram(
+            "service_tick_s", "non-empty tick wall time (s)")
+        self.degraded = CounterView(self._c_degraded)
+        self.tier_served = CounterView(self._c_tier_served)
         self._batcher: Optional[threading.Thread] = None
         if autostart:
             self._batcher = threading.Thread(target=self._batch_loop,
@@ -230,6 +268,23 @@ class EvalService:
     def dispatches(self) -> int:
         """Fused device dispatches spent by the underlying evaluator."""
         return getattr(self.evaluator, "dispatches", 0)
+
+    # -- traffic counters (registry-backed, old attribute surface) -------
+    @property
+    def submits(self) -> int:
+        return int(self._c_submits.value())
+
+    @property
+    def cache_hits(self) -> int:
+        return int(self._c_cache_hits.value())
+
+    @property
+    def fused_dispatches(self) -> int:
+        return int(self._c_fused.value())
+
+    @property
+    def coalesced_requests(self) -> int:
+        return int(self._c_coalesced.value())
 
     @property
     def cache_rows(self) -> int:
@@ -272,16 +327,25 @@ class EvalService:
         if unknown:
             raise KeyError(f"unknown workloads {sorted(unknown)}; "
                            f"have {self.workloads}")
-        now = time.monotonic()
+        now = self._clock()
         deadline = None if deadline_s is None else now + float(deadline_s)
+        tr = self.tracer
+        rsp = None
+        if tr.enabled:
+            # detached: resolved (finished) by whichever tick serves it
+            rsp = tr.start("service.request", detached=True, tier=tier,
+                           client=client, rows=int(idx.shape[0]),
+                           detail=request.detail)
         pend = _Pending(idx, request.detail, names, Future(), client,
-                        tier, deadline, now)
+                        tier, deadline, now, rsp)
         with self._lock:
             if self._closed:
+                if rsp is not None:
+                    tr.lose(rsp, "service closed")
                 raise RuntimeError("EvalService is closed")
-            self.submits += 1
+            self._c_submits.inc()
             if self._try_resolve(pend):
-                self.cache_hits += 1
+                self._c_cache_hits.inc()
             else:
                 self._queues[tier].setdefault(client, deque()).append(pend)
                 self._cond.notify()
@@ -366,11 +430,24 @@ class EvalService:
         future sees an exception, so blocked ``result()`` callers — and
         the autostart batcher — always make progress.
         """
+        tr = self.tracer
+        if not tr.enabled:
+            return self._tick_inner(None)
+        with self._lock:
+            if not any(self._queues[t] for t in QOS_TIERS):
+                return 0                       # don't trace empty ticks
+        t0 = self._clock()
+        with tr.span("service.tick") as sp:
+            rows = self._tick_inner(sp)
+        self._h_tick.observe(self._clock() - t0)
+        return rows
+
+    def _tick_inner(self, sp) -> int:
         with self._lock:
             pending = self._drain_fair()
             if not pending:
                 return 0
-            now = time.monotonic()
+            now = self._clock()
             still: List[_Pending] = []
             for p in pending:
                 if p.deadline is not None and now >= p.deadline:
@@ -378,12 +455,12 @@ class EvalService:
                     # the request to the cheap proxy detail for this tick
                     if ("cached" in self.degrade
                             and self._try_resolve_degraded(p)):
-                        self.degraded["deadline"] += 1
-                        self.coalesced_requests += 1
+                        self._c_degraded.inc(rung="deadline")
+                        self._c_coalesced.inc()
                         continue
                     if p.detail != "objectives":
                         p.detail = "objectives"
-                        self.degraded["deadline"] += 1
+                        self._c_degraded.inc(rung="deadline")
                 still.append(p)
             pending = still
             if not pending:
@@ -402,25 +479,31 @@ class EvalService:
                         seen.add(key)
                         fresh_keys.append(key)
                         fresh_rows.append(row)
+        if sp is not None:
+            sp.attrs["requests"] = len(pending)
+            sp.attrs["fresh_rows"] = len(fresh_rows)
         rep, used_detail, exc = None, detail, None
         if fresh_rows:                         # dispatch without the lock
             rep, used_detail, exc = self._dispatch_degrading(
                 np.stack(fresh_rows), detail)
         with self._lock:
             if rep is not None:
-                self.fused_dispatches += 1
+                self._c_fused.inc()
                 for i, key in enumerate(fresh_keys):
                     self.row_cache.put(key, used_detail, rep.row(i))
             for p in pending:
                 if self._try_resolve(p):
-                    self.coalesced_requests += 1
+                    self._c_coalesced.inc()
                     continue
                 # last rung: serve whatever detail the cache holds
                 if ("cached" in self.degrade
                         and self._try_resolve_degraded(p)):
-                    self.degraded["cached"] += 1
-                    self.coalesced_requests += 1
+                    self._c_degraded.inc(rung="cached")
+                    self._c_coalesced.inc()
                     continue
+                if p.span is not None:
+                    p.span.attrs["error"] = str(exc) if exc else "cache miss"
+                    self.tracer.finish(p.span, status="error")
                 p.future.set_exception(
                     exc if exc is not None else
                     RuntimeError("coalesced rows missing from cache"))
@@ -431,40 +514,48 @@ class EvalService:
 
         Returns ``(report | None, detail actually evaluated, last error)``.
         """
-        try:
-            return (self.evaluator.evaluate(EvalRequest(rows, detail=detail)),
-                    detail, None)
-        except BaseException as exc:
-            last: BaseException = exc
-        if "narrow" in self.degrade:
-            # worker-loss recovery: halve the sharded pool and retry,
-            # down to a single worker
-            while (getattr(self.evaluator, "workers", 1) > 1
-                   and hasattr(self.evaluator, "resize")):
-                self.evaluator.resize(max(1, self.evaluator.workers // 2))
-                with self._lock:   # concurrent self-ticking clients race here
-                    self.degraded["narrow"] += 1
+        tr = self.tracer
+        with tr.span("service.dispatch", rows=int(rows.shape[0]),
+                     detail=detail) as sp:
+            try:
+                return (self.evaluator.evaluate(
+                    EvalRequest(rows, detail=detail)), detail, None)
+            except BaseException as exc:
+                last: BaseException = exc
+            if tr.enabled:
+                sp.attrs["first_error"] = str(last)
+            if "narrow" in self.degrade:
+                # worker-loss recovery: halve the sharded pool and retry,
+                # down to a single worker (the counter takes its own lock,
+                # so concurrent self-ticking clients don't race here)
+                while (getattr(self.evaluator, "workers", 1) > 1
+                       and hasattr(self.evaluator, "resize")):
+                    self.evaluator.resize(max(1, self.evaluator.workers // 2))
+                    self._c_degraded.inc(rung="narrow")
+                    try:
+                        return (self.evaluator.evaluate(
+                            EvalRequest(rows, detail=detail)), detail, None)
+                    except BaseException as exc:
+                        last = exc
+            if "proxy" in self.degrade and detail != "objectives":
                 try:
-                    return (self.evaluator.evaluate(
-                        EvalRequest(rows, detail=detail)), detail, None)
+                    rep = self.evaluator.evaluate(
+                        EvalRequest(rows, detail="objectives"))
+                    self._c_degraded.inc(rung="proxy")
+                    return rep, "objectives", None
                 except BaseException as exc:
                     last = exc
-        if "proxy" in self.degrade and detail != "objectives":
-            try:
-                rep = self.evaluator.evaluate(
-                    EvalRequest(rows, detail="objectives"))
-                with self._lock:
-                    self.degraded["proxy"] += 1
-                return rep, "objectives", None
-            except BaseException as exc:
-                last = exc
-        return None, detail, last
+            tr.finish(sp, status="error")
+            return None, detail, last
 
     def _record_served(self, pend: _Pending) -> None:
         """Per-tier QoS accounting at resolve time (caller holds the
         lock): served count + queue-to-resolve latency sample."""
-        self.tier_served[pend.tier] += 1
-        self._tier_lat[pend.tier].append(time.monotonic() - pend.t_submit)
+        self._c_tier_served.inc(tier=pend.tier)
+        self._h_queue_lat.observe(self._clock() - pend.t_submit,
+                                  tier=pend.tier)
+        if pend.span is not None:
+            self.tracer.finish(pend.span)
 
     def _try_resolve(self, pend: _Pending) -> bool:
         """Resolve a request from cache alone (caller holds the lock)."""
@@ -498,21 +589,24 @@ class EvalService:
         return True
 
     def telemetry(self) -> dict:
-        """Service + QoS + degradation counters (plus the evaluator's)."""
+        """Service + QoS + degradation counters (plus the evaluator's).
+
+        A pure VIEW over the metrics registry — exact same keys as the
+        pre-registry ad-hoc dicts (frozen by test)."""
         with self._lock:
-            tiers = {}
-            for t in QOS_TIERS:
-                lat = np.asarray(self._tier_lat[t], dtype=np.float64)
-                tiers[t] = {
-                    "weight": self.tier_weights[t],
-                    "served": self.tier_served[t],
-                    "queued": sum(len(q)
-                                  for q in self._queues[t].values()),
-                    "p50_ms": (round(float(np.percentile(lat, 50)) * 1e3, 3)
-                               if lat.size else None),
-                    "p99_ms": (round(float(np.percentile(lat, 99)) * 1e3, 3)
-                               if lat.size else None),
-                }
+            queued = {t: sum(len(q) for q in self._queues[t].values())
+                      for t in QOS_TIERS}
+        tiers = {}
+        for t in QOS_TIERS:
+            p50 = self._h_queue_lat.percentile(50, tier=t)
+            p99 = self._h_queue_lat.percentile(99, tier=t)
+            tiers[t] = {
+                "weight": self.tier_weights[t],
+                "served": int(self._c_tier_served.value(tier=t)),
+                "queued": queued[t],
+                "p50_ms": (round(p50 * 1e3, 3) if p50 is not None else None),
+                "p99_ms": (round(p99 * 1e3, 3) if p99 is not None else None),
+            }
         out = {
             "submits": self.submits,
             "cache_hits": self.cache_hits,

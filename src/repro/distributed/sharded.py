@@ -61,6 +61,8 @@ import numpy as np
 
 from repro.distributed.faults import (ChaosPool, FaultPlan, WorkerFault,
                                       WorkerRegistry)
+from repro.obs.metrics import Clock, MetricsRegistry
+from repro.obs.trace import NOOP
 from repro.perfmodel.evaluator import (EvalRequest, ModelEvaluator, PPAReport,
                                        as_evaluator)
 from repro.runtime.elastic import plan_elastic_pool
@@ -345,6 +347,14 @@ class ShardedEvaluator:
         positive area/latency); a failing shard raises
         :class:`~repro.distributed.faults.WorkerFault` into the retry
         path.  On by default.
+    registry / tracer / clock:
+        Observability hooks (:mod:`repro.obs`): a shared
+        :class:`~repro.obs.metrics.MetricsRegistry` for the traffic
+        instruments, a :class:`~repro.obs.trace.Tracer` for per-shard
+        causal spans (default: the free no-op tracer), and an injectable
+        clock for deterministic timing under test.  All three are also
+        handed to the socket pool so wire spans and heartbeat RTT land
+        in the same registry/trace.
     """
 
     def __init__(self, base, *, workers: Optional[int] = None,
@@ -358,7 +368,9 @@ class ShardedEvaluator:
                  fault_plan: Optional[FaultPlan] = None,
                  heartbeat_timeout_s: float = 30.0,
                  elastic: bool = False, max_workers: Optional[int] = None,
-                 validate: bool = True):
+                 validate: bool = True,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None, clock: Optional[Clock] = None):
         base = as_evaluator(base)
         if not hasattr(base, "models"):
             raise TypeError("ShardedEvaluator needs a model-backed evaluator")
@@ -384,10 +396,17 @@ class ShardedEvaluator:
         elif mode == "auto":
             mode = "thread"
         self.mode = mode
+        # observability: one registry/tracer/clock shared with the pool so
+        # heartbeat RTT and wire spans land next to the shard instruments
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NOOP
+        self._clock: Clock = clock if clock is not None else time.monotonic
         if mode == "socket":
             from repro.serve.pool import SocketPool
             raw_pool = SocketPool(base, self.workers, addresses=addresses,
-                                  heartbeat_timeout_s=heartbeat_timeout_s)
+                                  heartbeat_timeout_s=heartbeat_timeout_s,
+                                  metrics=self.metrics, tracer=self.tracer,
+                                  clock=self._clock)
         else:
             raw_pool = _POOLS[mode](base, self.workers)
         self._pool = (ChaosPool(raw_pool, fault_plan)
@@ -415,18 +434,60 @@ class ShardedEvaluator:
         pool_registry = getattr(raw_pool, "registry", None)
         self._pool_owns_registry = pool_registry is not None
         self.registry = (pool_registry if pool_registry is not None
-                         else WorkerRegistry(timeout_s=heartbeat_timeout_s))
+                         else WorkerRegistry(timeout_s=heartbeat_timeout_s,
+                                             now=self._clock))
         for s in range(self.workers):
             self.registry.register(s)
         self._dispatch_no = 0               # round-robin slot attribution
-        # traffic counters
-        self.dispatches = 0                 # logical fused requests served
-        self.worker_dispatches = 0          # shard tasks sent to workers
-        self.retried = 0                    # shard retries after failures
-        self.straggler_redispatches = 0     # speculative twin dispatches
-        self.timeouts = 0                   # shards declared lost
-        self.corrupt_rejected = 0           # shards failing integrity check
-        self.resizes = 0                    # elastic pool resizes applied
+        # traffic instruments (int-valued properties below keep the old
+        # `ev.retried`-style attribute surface intact)
+        m = self.metrics
+        self._c_dispatches = m.counter(
+            "sharded_dispatches", "logical fused requests served")
+        self._c_worker_dispatches = m.counter(
+            "sharded_worker_dispatches", "shard tasks sent to workers")
+        self._c_retried = m.counter(
+            "sharded_retried", "shard retries after failures")
+        self._c_straggler = m.counter(
+            "sharded_straggler_redispatches", "speculative twin dispatches")
+        self._c_timeouts = m.counter(
+            "sharded_timeouts", "shards declared lost past the deadline")
+        self._c_corrupt = m.counter(
+            "sharded_corrupt_rejected", "shards failing the integrity check")
+        self._c_resizes = m.counter(
+            "sharded_resizes", "elastic pool resizes applied")
+        self._h_shard = m.histogram(
+            "sharded_shard_s", "completed-shard wall time (s) by worker slot",
+            labelnames=("slot",))
+
+    # -- traffic counters (registry-backed, old attribute surface) -------
+    @property
+    def dispatches(self) -> int:
+        return int(self._c_dispatches.value())
+
+    @property
+    def worker_dispatches(self) -> int:
+        return int(self._c_worker_dispatches.value())
+
+    @property
+    def retried(self) -> int:
+        return int(self._c_retried.value())
+
+    @property
+    def straggler_redispatches(self) -> int:
+        return int(self._c_straggler.value())
+
+    @property
+    def timeouts(self) -> int:
+        return int(self._c_timeouts.value())
+
+    @property
+    def corrupt_rejected(self) -> int:
+        return int(self._c_corrupt.value())
+
+    @property
+    def resizes(self) -> int:
+        return int(self._c_resizes.value())
 
     # -- identity / protocol surface -----------------------------------
     @property
@@ -450,18 +511,25 @@ class ShardedEvaluator:
         idx = np.atleast_2d(np.asarray(request.idx, dtype=np.int32))
         n = idx.shape[0]
         n_shards = min(self.workers, max(1, n // self.min_shard_rows))
-        self.dispatches += 1
-        if ((self.mode == "inline" or n_shards <= 1)
-                and self.fault_plan is None and self.mode != "socket"):
-            self.worker_dispatches += 1
-            return self.base.evaluate(
-                EvalRequest(idx, request.detail, request.workloads))
-        # under a fault plan even single-shard requests route through the
-        # pool so injection + recovery cover the inline path too; socket
-        # mode ALWAYS rides the pool — offloading is the point
-        payloads = [ShardPayload(s, request.detail, request.workloads)
-                    for s in np.array_split(idx, max(1, n_shards))]
-        return concat_reports(self._gather(payloads))
+        self._c_dispatches.inc()
+        tr = self.tracer
+        with tr.span("sharded.evaluate", rows=n, mode=self.mode,
+                     detail=request.detail) as sp:
+            if ((self.mode == "inline" or n_shards <= 1)
+                    and self.fault_plan is None and self.mode != "socket"):
+                self._c_worker_dispatches.inc()
+                return self.base.evaluate(
+                    EvalRequest(idx, request.detail, request.workloads))
+            # under a fault plan even single-shard requests route through
+            # the pool so injection + recovery cover the inline path too;
+            # socket mode ALWAYS rides the pool — offloading is the point
+            payloads = [ShardPayload(s, request.detail, request.workloads)
+                        for s in np.array_split(idx, max(1, n_shards))]
+            if tr.enabled:
+                sp.attrs["shards"] = len(payloads)
+            parts = self._gather(payloads)
+            with tr.span("sharded.reassemble", shards=len(parts)):
+                return concat_reports(parts)
 
     def objectives(self, idx: np.ndarray) -> np.ndarray:
         return self.evaluate(EvalRequest(idx, detail="objectives")).objectives
@@ -487,7 +555,7 @@ class ShardedEvaluator:
         old = self.workers
         self._pool.resize(workers)
         self.workers = workers
-        self.resizes += 1
+        self._c_resizes.inc()
         if self._pool_owns_registry:
             return                     # the pool's reconnect/close path
         for s in range(workers):       # maintains its registry itself
@@ -513,7 +581,7 @@ class ShardedEvaluator:
                     ok = False
                     break
         if not ok:
-            self.corrupt_rejected += 1
+            self._c_corrupt.inc()
             raise WorkerFault(f"corrupt shard payload rejected "
                               f"({n} rows, mode={self.mode!r})")
 
@@ -541,23 +609,49 @@ class ShardedEvaluator:
     # -- shard dispatch: retry + timeout + straggler speculation ---------
     def _gather(self, payloads: List[ShardPayload]) -> List[PPAReport]:
         policy = self.retry_policy
+        clock = self._clock
+        tr = self.tracer
         results: List[Optional[PPAReport]] = [None] * len(payloads)
         # fut -> (shard, attempt, worker slot, absolute deadline)
         pending: Dict[Future, Tuple[int, int, int, float]] = {}
         started: Dict[Future, float] = {}
+        # fut -> detached shard span (finished out of order as futures
+        # resolve; every exit path closes it: ok / error / lost)
+        spans: Dict[Future, object] = {}
         speculated: set = set()
         durations: List[float] = []
+        parent_ctx = tr.current_ctx()          # the sharded.evaluate span
 
         def submit(i: int, attempt: int) -> None:
             slot = self._dispatch_no % self.workers
             self._dispatch_no += 1
-            fut = self._pool.submit(payloads[i])
-            now = time.perf_counter()
+            if tr.enabled:
+                sp = tr.start("shard", detached=True, parent=parent_ctx,
+                              shard=i, attempt=attempt, slot=slot)
+                # current during the pool submit so the wire span (socket
+                # mode) parents under this shard attempt
+                with tr.activate(sp):
+                    fut = self._pool.submit(payloads[i])
+                spans[fut] = sp
+            else:
+                fut = self._pool.submit(payloads[i])
+            now = clock()
             started[fut] = now
             deadline = (now + self.shard_timeout_s
                         if self.shard_timeout_s else math.inf)
             pending[fut] = (i, attempt, slot, deadline)
-            self.worker_dispatches += 1
+            self._c_worker_dispatches.inc()
+
+        def close_span(fut: Future, status: str, reason: str = "") -> None:
+            sp = spans.pop(fut, None)
+            if sp is None:
+                return
+            if status == "lost":
+                tr.lose(sp, reason)
+            else:
+                if reason:
+                    sp.attrs["error"] = reason
+                tr.finish(sp, status=None if status == "ok" else status)
 
         def fail(i: int, attempt: int, slot: int, exc: Optional[BaseException],
                  what: str) -> None:
@@ -567,7 +661,7 @@ class ShardedEvaluator:
                 raise RuntimeError(
                     f"shard {i} {what} after {attempt + 1} attempts "
                     f"on the {self.mode!r} pool") from exc
-            self.retried += 1
+            self._c_retried.inc()
             d = policy.delay(attempt)
             if d:
                 time.sleep(d)
@@ -576,7 +670,7 @@ class ShardedEvaluator:
         for i in range(len(payloads)):
             submit(i, 0)
         while any(r is None for r in results):
-            now = time.perf_counter()
+            now = clock()
             # next wake-up: earliest shard deadline or straggler threshold
             thresh = (max(self.straggler_min_s, self.straggler_factor
                           * float(np.median(durations)))
@@ -591,21 +685,26 @@ class ShardedEvaluator:
             timeout = None if wake is math.inf else max(0.0, wake - now)
             done, _ = wait(list(pending), timeout=timeout,
                            return_when=FIRST_COMPLETED)
-            now = time.perf_counter()
+            now = clock()
             for fut in done:
                 i, attempt, slot, _deadline = pending.pop(fut)
                 t0 = started.pop(fut, now)
                 if results[i] is not None:
-                    continue                   # a faster twin already landed
+                    # a faster twin already landed; this one's work is moot
+                    close_span(fut, "lost", "lost the twin race")
+                    continue
                 try:
                     rep = fut.result()
                     if self.validate:
                         self._check_shard(payloads[i], rep)
                 except policy.retryable as exc:
+                    close_span(fut, "error", str(exc))
                     fail(i, attempt, slot, exc, "failed")
                     continue
+                close_span(fut, "ok")
                 results[i] = rep
                 durations.append(now - t0)
+                self._h_shard.observe(now - t0, slot=slot)
                 self.registry.beat(slot)
             # shard timeouts: the dispatch is LOST, not merely slow —
             # abandon the future, evict the slot, consume retry budget
@@ -615,7 +714,8 @@ class ShardedEvaluator:
                 pending.pop(fut)
                 started.pop(fut, None)
                 fut.cancel()
-                self.timeouts += 1
+                close_span(fut, "lost", "shard timeout")
+                self._c_timeouts.inc()
                 fail(i, attempt, slot, None, "timed out")
             # straggler speculation: one twin per slow shard, at the SAME
             # attempt (speculation never consumes the retry budget)
@@ -624,8 +724,9 @@ class ShardedEvaluator:
                     if (results[i] is None and i not in speculated
                             and now - started.get(fut, now) >= thresh):
                         speculated.add(i)
-                        self.straggler_redispatches += 1
+                        self._c_straggler.inc()
                         submit(i, attempt)
         for fut in pending:                    # abandoned twins
             fut.cancel()
+            close_span(fut, "lost", "abandoned twin")
         return results

@@ -1,0 +1,60 @@
+"""repro.obs — unified metrics registry + cross-machine causal tracing.
+
+The observability layer for the whole dispatch path:
+
+- :mod:`repro.obs.metrics` — typed ``Counter``/``Gauge``/``Histogram``
+  instruments behind a process-wide :class:`MetricsRegistry`.  Every
+  ad-hoc telemetry dict in ``distributed/`` and ``serve/`` is a view
+  over these instruments; writes take a lock **per instrument** so the
+  ``unlocked-shared-write`` lint rule passes by construction.
+- :mod:`repro.obs.trace` — ``Span``/``Tracer`` with per-thread buffers
+  and context propagation across the socket boundary (the ``Dispatch``
+  wire frame carries a ``trace_ctx``; worker-side spans re-parent under
+  the client span).  ``NOOP`` is the always-on-cheap default.
+- :mod:`repro.obs.export` — Perfetto/Chrome ``trace_event`` JSON, flat
+  metrics JSON/CSV snapshots, span-tree validation and ASCII rendering.
+- :mod:`repro.obs.report` — ``python -m repro.obs.report`` fleet
+  dashboard from a live ``Gateway`` or a saved snapshot.
+
+This package is a leaf: it imports nothing from the rest of ``repro``.
+"""
+
+from repro.obs.metrics import (
+    Clock,
+    Counter,
+    CounterView,
+    Gauge,
+    Histogram,
+    ManualClock,
+    MetricsRegistry,
+)
+from repro.obs.trace import NOOP, NoopTracer, Span, Tracer
+
+from repro.obs.export import (
+    completeness_errors,
+    metrics_csv_lines,
+    render_tree,
+    trace_events,
+    validate_trace_events,
+    write_trace,
+)
+
+__all__ = [
+    "Clock",
+    "Counter",
+    "CounterView",
+    "Gauge",
+    "Histogram",
+    "ManualClock",
+    "MetricsRegistry",
+    "NOOP",
+    "NoopTracer",
+    "Span",
+    "Tracer",
+    "completeness_errors",
+    "metrics_csv_lines",
+    "render_tree",
+    "trace_events",
+    "validate_trace_events",
+    "write_trace",
+]

@@ -56,6 +56,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pareto import ParetoArchive
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NOOP
 from repro.runtime.fault import RetryPolicy, run_with_retries
 from repro.perfmodel.designspace import DesignSpace, SPACE, A100_REFERENCE
 from repro.perfmodel.hardware import derive_hardware
@@ -242,6 +244,11 @@ class SweepEngine:
         keep the default).
     shard:
         Shard the id range over all local devices (no-op on one device).
+    registry / tracer:
+        Optional :class:`~repro.obs.metrics.MetricsRegistry` and tracer;
+        the engine registers run/chunk/id counters and a per-chunk wall
+        time histogram, and wraps ``run`` / worker spans in trace spans.
+        Defaults: a private registry, and the no-op tracer.
     """
 
     def __init__(self, ttft_model, tpot_model: Optional[RooflineModel] = None,
@@ -254,7 +261,9 @@ class SweepEngine:
                  stall_topk: int = 0, stall_rank: str = "ttft",
                  robust: str = "worst",
                  chunk_candidates: Tuple[int, ...] = (65_536, 131_072,
-                                                      262_144)):
+                                                      262_144),
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None):
         evaluator = None
         scenarios = None
         if tpot_model is None and hasattr(ttft_model, "models"):
@@ -403,6 +412,17 @@ class SweepEngine:
         iota = jnp.arange(self.chunk_size, dtype=jnp.int32)
         self._iota = (jax.device_put(iota, self._sharding)
                       if self._sharding is not None else iota)
+
+        self.tracer = tracer if tracer is not None else NOOP
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._c_runs = self.metrics.counter(
+            "sweep_runs", "completed run() calls")
+        self._c_chunks = self.metrics.counter(
+            "sweep_chunks", "device chunk steps executed")
+        self._c_ids = self.metrics.counter(
+            "sweep_ids", "design ids evaluated (valid rows)")
+        self._h_chunk = self.metrics.histogram(
+            "sweep_chunk_s", "wall time per chunk step incl. host reduce (s)")
 
         self._step = jax.jit(
             self._step_portfolio_impl if self._portfolio else self._step_impl,
@@ -826,32 +846,40 @@ class SweepEngine:
         """
         stop = self.size if stop is None else min(int(stop), self.size)
         workers = max(1, int(workers))
+        tr = self.tracer
         t0 = time.perf_counter()
-        if workers == 1:
-            states = [self._run_span(
-                0, start, stop, checkpoint_path=checkpoint_path,
-                checkpoint_every=checkpoint_every, resume_from=resume_from,
-                progress=progress, label="", fp_extra="",
-                fault_plan=fault_plan, span_retry=span_retry)]
-        else:
-            spans = self._worker_spans(start, stop, workers)
-            n = len(spans)
-            with ThreadPoolExecutor(max_workers=n,
-                                    thread_name_prefix="sweep") as ex:
-                futs = []
-                for w, (s0, s1) in enumerate(spans):
-                    suffix = f".w{w}of{n}"
-                    futs.append(ex.submit(
-                        self._run_span, w, s0, s1,
-                        checkpoint_path=(f"{checkpoint_path}{suffix}"
-                                         if checkpoint_path else None),
-                        checkpoint_every=checkpoint_every,
-                        resume_from=(f"{resume_from}{suffix}"
-                                     if resume_from else None),
-                        progress=progress, label=f"w{w}: ",
-                        fp_extra=f"|span={s0}:{s1}",
-                        fault_plan=fault_plan, span_retry=span_retry))
-                states = [f.result() for f in futs]
+        with tr.span("sweep.run", start=int(start), stop=int(stop),
+                     workers=workers):
+            parent = tr.current_ctx()
+            if workers == 1:
+                states = [self._run_span(
+                    0, start, stop, checkpoint_path=checkpoint_path,
+                    checkpoint_every=checkpoint_every,
+                    resume_from=resume_from,
+                    progress=progress, label="", fp_extra="",
+                    fault_plan=fault_plan, span_retry=span_retry,
+                    trace_parent=parent)]
+            else:
+                spans = self._worker_spans(start, stop, workers)
+                n = len(spans)
+                with ThreadPoolExecutor(max_workers=n,
+                                        thread_name_prefix="sweep") as ex:
+                    futs = []
+                    for w, (s0, s1) in enumerate(spans):
+                        suffix = f".w{w}of{n}"
+                        futs.append(ex.submit(
+                            self._run_span, w, s0, s1,
+                            checkpoint_path=(f"{checkpoint_path}{suffix}"
+                                             if checkpoint_path else None),
+                            checkpoint_every=checkpoint_every,
+                            resume_from=(f"{resume_from}{suffix}"
+                                         if resume_from else None),
+                            progress=progress, label=f"w{w}: ",
+                            fp_extra=f"|span={s0}:{s1}",
+                            fault_plan=fault_plan, span_retry=span_retry,
+                            trace_parent=parent))
+                    states = [f.result() for f in futs]
+            self._c_runs.inc()
         return self._reduce_states(states, time.perf_counter() - t0)
 
     def _run_span(self, worker: int, start: int, stop: int, *,
@@ -860,10 +888,19 @@ class SweepEngine:
                   resume_from: Optional[str], progress: bool,
                   label: str, fp_extra: str,
                   fault_plan=None,
-                  span_retry: Optional[RetryPolicy] = None) -> Dict:
+                  span_retry: Optional[RetryPolicy] = None,
+                  trace_parent=None) -> Dict:
         """One worker span, replayed on crash: a failed attempt resumes
         from the span's own atomic checkpoint when one exists, from
-        scratch otherwise — deterministic either way."""
+        scratch otherwise — deterministic either way.
+
+        ``trace_parent`` is the sweep.run span ctx: worker spans run on
+        pool threads, so parenting is explicit, not thread-inherited."""
+        tr = self.tracer
+        sp = (tr.start("sweep.span", parent=trace_parent, detached=True,
+                       worker=worker, start=int(start), stop=int(stop))
+              if tr.enabled else None)
+
         def attempt(resume: Optional[str]) -> Dict:
             return self._run_range(
                 start, stop, checkpoint_path=checkpoint_path,
@@ -871,22 +908,34 @@ class SweepEngine:
                 progress=progress, label=label, fp_extra=fp_extra,
                 fault_plan=fault_plan, worker_slot=worker)
 
-        if fault_plan is None and span_retry is None:
-            return attempt(resume_from)
-        policy = (span_retry if span_retry is not None
-                  else RetryPolicy(max_retries=2, retryable=(RuntimeError,)))
-        resume = {"from": resume_from}
+        try:
+            if fault_plan is None and span_retry is None:
+                return attempt(resume_from)
+            policy = (span_retry if span_retry is not None
+                      else RetryPolicy(max_retries=2,
+                                       retryable=(RuntimeError,)))
+            resume = {"from": resume_from}
 
-        def restore(_attempt: int) -> None:
-            resume["from"] = None
-            if checkpoint_path:
-                f = (checkpoint_path if checkpoint_path.endswith(".npz")
-                     else f"{checkpoint_path}.npz")
-                if os.path.exists(f):
-                    resume["from"] = checkpoint_path
+            def restore(attempt_no: int) -> None:
+                if sp is not None:
+                    sp.attrs["replays"] = attempt_no
+                resume["from"] = None
+                if checkpoint_path:
+                    f = (checkpoint_path if checkpoint_path.endswith(".npz")
+                         else f"{checkpoint_path}.npz")
+                    if os.path.exists(f):
+                        resume["from"] = checkpoint_path
 
-        return run_with_retries(lambda: attempt(resume["from"]), restore,
-                                policy)
+            return run_with_retries(lambda: attempt(resume["from"]), restore,
+                                    policy)
+        except Exception as exc:
+            if sp is not None:
+                sp.attrs["error"] = str(exc)
+                tr.finish(sp, status="error")
+            raise
+        finally:
+            if sp is not None:
+                tr.finish(sp)      # idempotent: no-op on the error path
 
     def _worker_spans(self, start: int, stop: int,
                       workers: int) -> List[Tuple[int, int]]:
@@ -930,6 +979,7 @@ class SweepEngine:
                                       f"{worker_slot} chunk {chunk_i}")
                 if ev is not None and ev.kind == "slow":
                     time.sleep(ev.delay_s)
+            t_chunk = time.perf_counter()
             s = state["next"]
             rows = self._pf_rows if self._portfolio else None
             filt = np.stack([self._filter_from_archive(a, rows)
@@ -954,6 +1004,9 @@ class SweepEngine:
             state["next"] = min(s + self.chunk_size, stop)
             state["carry"] = carry
             chunk_i += 1
+            self._c_chunks.inc()
+            self._c_ids.inc(state["next"] - s)
+            self._h_chunk.observe(time.perf_counter() - t_chunk)
             if progress:
                 done = min(state["next"], stop)
                 # rate counts only ids swept in THIS process (resumed ids
@@ -1133,6 +1186,16 @@ class SweepEngine:
         res.robust = self.robust
         res.per_scenario = per
         return res
+
+    # ------------------------------------------------------------------
+    def telemetry(self) -> dict:
+        """Registry view of the engine's streaming counters."""
+        return {
+            "runs": int(self._c_runs.value()),
+            "chunks": int(self._c_chunks.value()),
+            "ids": int(self._c_ids.value()),
+            "chunk_s": self._h_chunk.stats(),
+        }
 
     # ------------------------------------------------------------------
     def _archives_of(self, state: Dict) -> List[ParetoArchive]:

@@ -29,6 +29,7 @@ front door and inherit admission control + QoS unchanged.
 """
 from __future__ import annotations
 
+import json
 import threading
 import time
 from concurrent.futures import Future
@@ -38,6 +39,8 @@ from typing import Dict, Mapping, Optional
 import numpy as np
 
 from repro.distributed.service import QOS_TIERS, EvalService
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NOOP
 from repro.perfmodel.evaluator import EvalRequest, PPAReport
 from repro.runtime.elastic import admission_retry_after
 
@@ -52,22 +55,11 @@ class RetryAfter(RuntimeError):
 
 @dataclass
 class TenantAccount:
-    """Fixed-window admission ledger for one tenant."""
+    """Fixed-window admission state for one tenant (the traffic counts
+    live in the gateway's metrics registry, labelled by tenant)."""
     rows_per_window: int
     window_start: float
     used_rows: int = 0
-    admitted: int = 0
-    admitted_rows: int = 0
-    rejected_budget: int = 0
-    rejected_backpressure: int = 0
-
-    def as_dict(self) -> Dict[str, int]:
-        return {"rows_per_window": self.rows_per_window,
-                "used_rows": self.used_rows,
-                "admitted": self.admitted,
-                "admitted_rows": self.admitted_rows,
-                "rejected_budget": self.rejected_budget,
-                "rejected_backpressure": self.rejected_backpressure}
 
 
 class Gateway:
@@ -99,9 +91,11 @@ class Gateway:
                  tenants: Optional[Mapping[str, int]] = None,
                  max_queued_rows: Optional[int] = None,
                  default_tier: str = "batch",
-                 now=time.monotonic):
+                 now=time.monotonic,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None):
         if not isinstance(service, EvalService):
-            service = EvalService(service)
+            service = EvalService(service, tracer=tracer, clock=now)
         if default_tier not in QOS_TIERS:
             raise ValueError(f"default_tier must be one of {QOS_TIERS}, "
                              f"got {default_tier!r}")
@@ -118,8 +112,36 @@ class Gateway:
         # observed service rate (rows/s EWMA) feeding the drain-ETA hint
         self._rate_rows_per_s = 0.0
         self._rate_alpha = 0.3
-        self.admitted = 0
-        self.rejected = 0
+        # default to the service's tracer so gateway.evaluate roots the
+        # same causal tree the tick/dispatch/shard spans grow under
+        self.tracer = (tracer if tracer is not None
+                       else getattr(service, "tracer", NOOP))
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        m = self.metrics
+        self._c_admitted = m.counter(
+            "gateway_admitted", "requests past both admission checks")
+        self._c_rejected = m.counter(
+            "gateway_rejected", "requests refused (budget or backpressure)")
+        self._c_t_admitted = m.counter(
+            "gateway_tenant_admitted", "admitted requests, by tenant",
+            labelnames=("tenant",))
+        self._c_t_admitted_rows = m.counter(
+            "gateway_tenant_admitted_rows", "admitted design rows, by tenant",
+            labelnames=("tenant",))
+        self._c_t_rej_budget = m.counter(
+            "gateway_tenant_rejected_budget",
+            "budget-exhausted rejections, by tenant", labelnames=("tenant",))
+        self._c_t_rej_bp = m.counter(
+            "gateway_tenant_rejected_backpressure",
+            "backpressure rejections, by tenant", labelnames=("tenant",))
+
+    @property
+    def admitted(self) -> int:
+        return int(self._c_admitted.value())
+
+    @property
+    def rejected(self) -> int:
+        return int(self._c_rejected.value())
 
     # -- admission ------------------------------------------------------
     def _account(self, tenant: str) -> TenantAccount:
@@ -130,6 +152,9 @@ class Gateway:
                                                     self.rows_per_window)),
                 window_start=self._now())
             self._accounts[tenant] = acct
+            for c in (self._c_t_admitted, self._c_t_admitted_rows,
+                      self._c_t_rej_budget, self._c_t_rej_bp):
+                c.touch(tenant=tenant)
         return acct
 
     def submit(self, request: EvalRequest, *, tenant: str = "default",
@@ -153,8 +178,8 @@ class Gateway:
             if self.max_queued_rows is not None:
                 backlog = self.service.queued_rows()
                 if backlog + n > self.max_queued_rows:
-                    acct.rejected_backpressure += 1
-                    self.rejected += 1
+                    self._c_t_rej_bp.inc(tenant=tenant)
+                    self._c_rejected.inc()
                     hint = admission_retry_after(backlog,
                                                  self._rate_rows_per_s)
                     raise RetryAfter(
@@ -162,8 +187,8 @@ class Gateway:
                         f"(+{n} > {self.max_queued_rows} cap); "
                         f"retry in {hint:.2f}s", hint)
             if acct.used_rows + n > acct.rows_per_window:
-                acct.rejected_budget += 1
-                self.rejected += 1
+                self._c_t_rej_budget.inc(tenant=tenant)
+                self._c_rejected.inc()
                 hint = max(0.0,
                            self.window_s - (now - acct.window_start))
                 raise RetryAfter(
@@ -171,9 +196,9 @@ class Gateway:
                     f"({acct.used_rows}+{n} > {acct.rows_per_window} "
                     f"rows/window); window rolls in {hint:.2f}s", hint)
             acct.used_rows += n
-            acct.admitted += 1
-            acct.admitted_rows += n
-            self.admitted += 1
+            self._c_t_admitted.inc(tenant=tenant)
+            self._c_t_admitted_rows.inc(n, tenant=tenant)
+            self._c_admitted.inc()
         return self.service.submit(request,
                                    client=tenant if client is None
                                    else client,
@@ -182,9 +207,9 @@ class Gateway:
     def tick(self) -> int:
         """Drive the service batcher; feeds the drain-rate estimate the
         backpressure retry hints are computed from."""
-        t0 = time.monotonic()
+        t0 = self._now()
         rows = self.service.tick()
-        dt = time.monotonic() - t0
+        dt = self._now() - t0
         if rows and dt > 0:
             with self._lock:
                 a = self._rate_alpha
@@ -193,10 +218,21 @@ class Gateway:
         return rows
 
     # -- telemetry ------------------------------------------------------
+    def _tenant_dict(self, tenant: str, acct: TenantAccount) -> dict:
+        return {
+            "rows_per_window": acct.rows_per_window,
+            "used_rows": acct.used_rows,
+            "admitted": int(self._c_t_admitted.value(tenant=tenant)),
+            "admitted_rows": int(self._c_t_admitted_rows.value(tenant=tenant)),
+            "rejected_budget": int(self._c_t_rej_budget.value(tenant=tenant)),
+            "rejected_backpressure": int(self._c_t_rej_bp.value(tenant=tenant)),
+        }
+
     def telemetry(self) -> dict:
         """Service QoS counters + tenant ledgers + worker fleet state."""
         with self._lock:
-            tenants = {t: a.as_dict() for t, a in self._accounts.items()}
+            tenants = {t: self._tenant_dict(t, a)
+                       for t, a in self._accounts.items()}
             out = {
                 "service": self.service.telemetry(),
                 "tenants": tenants,
@@ -215,7 +251,42 @@ class Gateway:
             out["fleet"] = registry.snapshot()
             out["fleet"]["mode"] = getattr(ev, "mode", None)
             out["fleet"]["workers"] = getattr(ev, "workers", None)
+            ev_metrics = getattr(ev, "metrics", None)
+            if ev_metrics is not None:
+                rtt = ev_metrics.get("heartbeat_rtt")
+                if rtt is not None:
+                    out["fleet"]["heartbeat_rtt"] = {
+                        labels[0]: {
+                            "count": s["count"],
+                            "p50_ms": (round(s["p50"] * 1e3, 3)
+                                       if s["p50"] is not None else None),
+                            "p99_ms": (round(s["p99"] * 1e3, 3)
+                                       if s["p99"] is not None else None),
+                        }
+                        for labels in rtt.series_keys()
+                        for s in (rtt.stats(worker=labels[0]),)
+                    }
         return out
+
+    def snapshot(self) -> dict:
+        """Everything the fleet dashboard wants in one JSON-able dict:
+        the merged :meth:`telemetry` tree plus the raw metric registries
+        of every layer that has one."""
+        out = {"telemetry": self.telemetry(),
+               "metrics": {"gateway": self.metrics.snapshot()}}
+        svc_metrics = getattr(self.service, "metrics", None)
+        if svc_metrics is not None:
+            out["metrics"]["service"] = svc_metrics.snapshot()
+        ev_metrics = getattr(self.service.evaluator, "metrics", None)
+        if ev_metrics is not None:
+            out["metrics"]["evaluator"] = ev_metrics.snapshot()
+        return out
+
+    def save_snapshot(self, path) -> None:
+        """Write :meth:`snapshot` as JSON — the input format of
+        ``python -m repro.obs.report``."""
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(self.snapshot(), fh, indent=2, default=str)
 
     # -- Evaluator facade ----------------------------------------------
     @property
@@ -244,10 +315,11 @@ class Gateway:
 
     def evaluate(self, request: EvalRequest, *,
                  tenant: str = "default") -> PPAReport:
-        fut = self.submit(request, tenant=tenant)
-        while not fut.done() and self.service._batcher is None:
-            self.tick()
-        return fut.result()
+        with self.tracer.span("gateway.evaluate", tenant=tenant):
+            fut = self.submit(request, tenant=tenant)
+            while not fut.done() and self.service._batcher is None:
+                self.tick()
+            return fut.result()
 
     def objectives(self, idx: np.ndarray) -> np.ndarray:
         return self.evaluate(EvalRequest(idx, detail="objectives")).objectives

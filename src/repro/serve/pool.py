@@ -29,6 +29,8 @@ from concurrent.futures import Future, InvalidStateError
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.distributed.faults import WorkerFault, WorkerRegistry
+from repro.obs.metrics import Clock, MetricsRegistry
+from repro.obs.trace import NOOP, Span
 from repro.serve import wire
 
 
@@ -57,10 +59,14 @@ class _Connection:
         self.sock.settimeout(None)
         self.digest = ready.digest
         self.alive = True
-        self.last_activity = time.monotonic()
+        self.last_activity = pool.clock()
         self._send_lock = threading.Lock()
         self._lock = threading.Lock()
-        self._pending: Dict[int, Future] = {}
+        # seq -> (future, wire span or None)
+        self._pending: Dict[int, Tuple[Future, Optional[Span]]] = {}
+        # seq -> heartbeat send time (for RTT; heartbeats are ~1/s so
+        # this stays tiny — cleared on death)
+        self._pings: Dict[int, float] = {}
         self._seq = itertools.count()
         self._reader = threading.Thread(
             target=self._read_loop, daemon=True,
@@ -70,13 +76,23 @@ class _Connection:
     # -- client side -----------------------------------------------------
     def submit(self, payload) -> Future:
         fut: Future = Future()
+        tr = self.pool.tracer
+        span: Optional[Span] = None
+        ctx: Optional[Tuple[str, str]] = None
+        if tr.enabled:
+            # detached: resolved out of order by the reader thread
+            span = tr.start("wire.dispatch", detached=True, slot=self.slot,
+                            addr=f"{self.address[0]}:{self.address[1]}")
+            ctx = span.ctx
         with self._lock:
             if not self.alive:
+                if span is not None:
+                    tr.lose(span, "worker down at submit")
                 raise WorkerFault(f"worker {self.address} is down")
             seq = next(self._seq)
-            self._pending[seq] = fut
+            self._pending[seq] = (fut, span)
         try:
-            self._send(wire.Dispatch(seq, payload))
+            self._send(wire.Dispatch(seq, payload, ctx))
         except (OSError, wire.WireError) as exc:
             self.die(f"send failed: {exc}")
             raise WorkerFault(
@@ -84,8 +100,11 @@ class _Connection:
         return fut
 
     def ping(self) -> None:
+        seq = next(self._seq)
+        with self._lock:
+            self._pings[seq] = self.pool.clock()
         try:
-            self._send(wire.Ping(next(self._seq)))
+            self._send(wire.Ping(seq))
         except (OSError, wire.WireError) as exc:
             self.die(f"ping failed: {exc}")
 
@@ -99,8 +118,12 @@ class _Connection:
             while True:
                 msg = wire.recv_msg(self.sock, self.pool.max_message_bytes)
                 if isinstance(msg, wire.ResultMsg):
-                    fut = self._pop(msg.seq)
+                    fut, span = self._pop(msg.seq)
                     self.pool._on_activity(self)
+                    # worker-side spans re-parent under `span` client-side
+                    self.pool.tracer.adopt(getattr(msg, "spans", ()))
+                    if span is not None:
+                        self.pool.tracer.finish(span)
                     if fut is not None and not fut.cancelled():
                         try:
                             fut.set_result(msg.report)
@@ -112,8 +135,12 @@ class _Connection:
                                              f"{self.address}: {msg.message}")
                     # the WORKER is alive — the evaluation failed; surface
                     # it without tearing the connection down
-                    fut = self._pop(msg.seq)
+                    fut, span = self._pop(msg.seq)
                     self.pool._on_activity(self)
+                    self.pool.tracer.adopt(getattr(msg, "spans", ()))
+                    if span is not None:
+                        span.attrs["error"] = msg.message
+                        self.pool.tracer.finish(span, status="error")
                     if fut is not None and not fut.cancelled():
                         try:
                             fut.set_exception(WorkerFault(
@@ -122,6 +149,11 @@ class _Connection:
                         except InvalidStateError:
                             pass
                 elif isinstance(msg, wire.Pong):
+                    with self._lock:
+                        sent = self._pings.pop(msg.seq, None)
+                    if sent is not None:
+                        self.pool._observe_rtt(self.slot,
+                                               self.pool.clock() - sent)
                     self.pool._on_activity(self)
                 else:
                     raise wire.WireError(f"unexpected "
@@ -130,9 +162,9 @@ class _Connection:
         except (wire.WireError, OSError) as exc:
             self.die(str(exc))
 
-    def _pop(self, seq: int) -> Optional[Future]:
+    def _pop(self, seq: int) -> Tuple[Optional[Future], Optional[Span]]:
         with self._lock:
-            return self._pending.pop(seq, None)
+            return self._pending.pop(seq, (None, None))
 
     # -- death -----------------------------------------------------------
     def die(self, reason: str) -> None:
@@ -144,12 +176,16 @@ class _Connection:
             self.alive = False
             doomed = list(self._pending.values())
             self._pending.clear()
+            self._pings.clear()
         try:
             self.sock.close()
         except OSError:
             pass
         exc = WorkerFault(f"worker {self.address} died: {reason}")
-        for fut in doomed:
+        for fut, span in doomed:
+            if span is not None:
+                # the worker will never answer: the span is orphaned
+                self.pool.tracer.lose(span, f"connection died: {reason}")
             if not fut.done():
                 try:
                     fut.set_exception(exc)
@@ -180,7 +216,10 @@ class SocketPool:
                  heartbeat_s: float = 1.0,
                  heartbeat_timeout_s: float = 30.0,
                  reconnect_cooldown_s: float = 0.25,
-                 max_message_bytes: int = wire.MAX_MESSAGE_BYTES):
+                 max_message_bytes: int = wire.MAX_MESSAGE_BYTES,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer=None,
+                 clock: Optional[Clock] = None):
         self.addresses: List[Tuple[str, int]] = [
             (str(h), int(p)) for h, p in addresses]
         if not self.addresses:
@@ -198,8 +237,16 @@ class SocketPool:
         self.heartbeat_timeout_s = float(heartbeat_timeout_s)
         self.reconnect_cooldown_s = float(reconnect_cooldown_s)
         self.max_message_bytes = int(max_message_bytes)
-        self.registry = WorkerRegistry(timeout_s=self.heartbeat_timeout_s)
-        self.reconnects = 0
+        self.clock: Clock = clock if clock is not None else time.monotonic
+        self.tracer = tracer if tracer is not None else NOOP
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_reconnects = self.metrics.counter(
+            "pool_reconnects", "worker connections re-established")
+        self._h_rtt = self.metrics.histogram(
+            "heartbeat_rtt", "Ping->Pong round-trip (s) per worker slot",
+            labelnames=("worker",))
+        self.registry = WorkerRegistry(timeout_s=self.heartbeat_timeout_s,
+                                       now=self.clock)
         self._conns: Dict[int, _Connection] = {}
         self._slot_locks = [threading.Lock() for _ in self.addresses]
         self._last_attempt = [-math.inf] * len(self.addresses)
@@ -215,6 +262,13 @@ class SocketPool:
                                     name="socket-pool-heartbeat",
                                     daemon=True)
         self._hb.start()
+
+    @property
+    def reconnects(self) -> int:
+        return int(self._c_reconnects.value())
+
+    def _observe_rtt(self, slot: int, rtt_s: float) -> None:
+        self._h_rtt.observe(rtt_s, worker=slot)
 
     # -- pool protocol ----------------------------------------------------
     def submit(self, payload) -> Future:
@@ -272,7 +326,7 @@ class SocketPool:
             conn = self._conns.get(slot)
             if conn is not None and conn.alive:
                 return conn
-            now = time.monotonic()
+            now = self.clock()
             if now - self._last_attempt[slot] < self.reconnect_cooldown_s:
                 return None
             self._last_attempt[slot] = now
@@ -283,13 +337,13 @@ class SocketPool:
                     errors.append(f"{self.addresses[slot]}: {exc}")
                 return None
             if conn is not None:
-                self.reconnects += 1
+                self._c_reconnects.inc()
             self._conns[slot] = fresh
             self.registry.register(slot)
             return fresh
 
     def _on_activity(self, conn: _Connection) -> None:
-        conn.last_activity = time.monotonic()
+        conn.last_activity = self.clock()
         self.registry.beat(conn.slot)
         if not self.registry.alive(conn.slot):
             # the slot was (possibly mis-)evicted while the wire kept
@@ -305,7 +359,7 @@ class SocketPool:
                                self.heartbeat_timeout_s / 3.0))
         while not self._closed:
             time.sleep(period)
-            now = time.monotonic()
+            now = self.clock()
             for conn in list(self._conns.values()):
                 if not conn.alive:
                     continue

@@ -72,21 +72,34 @@ class Ready:
 
 @dataclasses.dataclass(frozen=True)
 class Dispatch:
-    """One shard request; ``seq`` correlates the eventual response."""
+    """One shard request; ``seq`` correlates the eventual response.
+
+    ``trace_ctx`` is an optional ``(trace_id, span_id)`` pair naming the
+    client-side wire span: when present, the worker opens its evaluation
+    span *under* it so the per-request causal tree crosses the machine
+    boundary.  Old peers pickled this class without the field — always
+    read it via ``getattr(msg, "trace_ctx", None)``.
+    """
     seq: int
     payload: object                # ShardPayload (kept loose: wire is generic)
+    trace_ctx: Optional[Tuple[str, str]] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class ResultMsg:
+    """One shard response.  ``spans`` carries the worker-side span dicts
+    (empty when the dispatch was untraced); read via
+    ``getattr(msg, "spans", ())`` for old-peer compatibility."""
     seq: int
     report: object                 # PPAReport
+    spans: Tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
 class ErrorMsg:
     seq: int
     message: str
+    spans: Tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -29,10 +29,13 @@ import argparse
 import hashlib
 import socket
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
+from repro.obs.metrics import Clock, MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.serve import wire
 
 # evaluators by spec sha256 — shared across connections so a fleet
@@ -58,7 +61,9 @@ class WorkerServer:
     connection."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
-                 max_message_bytes: int = wire.MAX_MESSAGE_BYTES):
+                 max_message_bytes: int = wire.MAX_MESSAGE_BYTES,
+                 registry: Optional[MetricsRegistry] = None,
+                 clock: Optional[Clock] = None):
         self.max_message_bytes = int(max_message_bytes)
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -66,8 +71,24 @@ class WorkerServer:
         self._sock.listen(16)
         self.host, self.port = self._sock.getsockname()[:2]
         self._closed = threading.Event()
-        self.connections_served = 0
-        self.dispatches_served = 0
+        self._clock: Clock = clock if clock is not None else time.monotonic
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._c_connections = self.metrics.counter(
+            "worker_connections_served", "client connections accepted")
+        self._c_dispatches = self.metrics.counter(
+            "worker_dispatches_served", "shard dispatches answered OK")
+        self._h_eval = self.metrics.histogram(
+            "worker_eval_s", "per-dispatch evaluation wall time (s)")
+        # Perfetto process lane for spans minted on this worker
+        self._proc = f"worker:{self.host}:{self.port}"
+
+    @property
+    def connections_served(self) -> int:
+        return int(self._c_connections.value())
+
+    @property
+    def dispatches_served(self) -> int:
+        return int(self._c_dispatches.value())
 
     # -- accept loop ----------------------------------------------------
     def serve_forever(self) -> None:
@@ -77,7 +98,7 @@ class WorkerServer:
                     conn, _addr = self._sock.accept()
                 except OSError:
                     break                        # listener closed
-                self.connections_served += 1
+                self._c_connections.inc()
                 t = threading.Thread(target=self._serve_conn, args=(conn,),
                                      name="serve-conn", daemon=True)
                 t.start()
@@ -113,18 +134,37 @@ class WorkerServer:
                 wire.send_msg(conn, msg)
 
         def run_dispatch(evaluator, msg: wire.Dispatch) -> None:
+            # old clients pickled Dispatch without trace_ctx
+            ctx = getattr(msg, "trace_ctx", None)
+            tracer = (Tracer(clock=self._clock, proc=self._proc)
+                      if ctx is not None else None)
+
+            def shipped_spans() -> Tuple:
+                if tracer is None:
+                    return ()
+                return tuple(s.as_dict() for s in tracer.drain())
+
             try:
                 from repro.distributed.sharded import _eval_payload
-                rep = _eval_payload(evaluator, msg.payload)
-                reply(wire.ResultMsg(msg.seq, rep))
+                t0 = self._clock()
+                if tracer is not None:
+                    idx = getattr(msg.payload, "idx", None)
+                    rows = int(idx.shape[0]) if hasattr(idx, "shape") else 0
+                    with tracer.span("worker.eval", parent=tuple(ctx),
+                                     seq=msg.seq, rows=rows):
+                        rep = _eval_payload(evaluator, msg.payload)
+                else:
+                    rep = _eval_payload(evaluator, msg.payload)
+                self._h_eval.observe(self._clock() - t0)
+                reply(wire.ResultMsg(msg.seq, rep, shipped_spans()))
             except Exception as exc:        # noqa: BLE001 — wire boundary
                 try:
                     reply(wire.ErrorMsg(msg.seq, f"{type(exc).__name__}: "
-                                                 f"{exc}"))
+                                                 f"{exc}", shipped_spans()))
                 except OSError:
                     pass                    # client already gone
             else:
-                self.dispatches_served += 1
+                self._c_dispatches.inc()
 
         try:
             hello = wire.check_hello(

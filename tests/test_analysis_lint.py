@@ -162,6 +162,32 @@ UNLOCKED_CLEAN = """
             self._jobs.pop(k, None)
 """
 
+# the raw-telemetry-dict rule is also distributed//serve/-scoped
+RAW_TELEMETRY_BAD = """
+    class Service:
+        def __init__(self):
+            self.submits = 0
+            self.served = {"fast": 0, "slow": 0}
+
+        def submit(self, req, lane):
+            self.submits += 1
+            self.served[lane] += 1
+"""
+
+RAW_TELEMETRY_CLEAN = """
+    from repro.obs.metrics import MetricsRegistry
+
+    class Service:
+        def __init__(self):
+            self.metrics = MetricsRegistry()
+            self._c_submits = self.metrics.counter("submits", "requests")
+            self._retries_left = 0          # internal state, not telemetry
+
+        def submit(self, req):
+            self._c_submits.inc()
+            self._retries_left += 1
+"""
+
 
 def _write(tmp_path, name, text):
     p = tmp_path / name
@@ -200,8 +226,27 @@ def test_unlocked_shared_write_out_of_scope(tmp_path):
     assert lint_file(p) == []
 
 
+def test_raw_telemetry_dict_fires_in_scope(tmp_path):
+    p = _write(tmp_path, "src/serve/service.py", RAW_TELEMETRY_BAD)
+    findings = lint_file(p)
+    assert {f.rule for f in findings} == {"raw-telemetry-dict"}
+    assert len(findings) == 2                    # int counter + dict lane
+    assert all(f.symbol == "Service.submit" for f in findings)
+
+
+def test_raw_telemetry_dict_quiet_on_registry_and_private(tmp_path):
+    p = _write(tmp_path, "src/distributed/service.py", RAW_TELEMETRY_CLEAN)
+    assert lint_file(p) == []
+
+
+def test_raw_telemetry_dict_out_of_scope(tmp_path):
+    p = _write(tmp_path, "src/perfmodel/service.py", RAW_TELEMETRY_BAD)
+    assert lint_file(p) == []
+
+
 def test_every_rule_has_a_fixture():
-    assert set(RULE_NAMES) == set(CORPUS) | {"unlocked-shared-write"}
+    assert set(RULE_NAMES) == set(CORPUS) | {"unlocked-shared-write",
+                                             "raw-telemetry-dict"}
 
 
 def test_syntax_error_is_reported_not_raised(tmp_path):
