@@ -1,0 +1,129 @@
+"""Secure-fabric smoke: the zero-trust serve stack under fire.
+
+The CI acceptance gate for the hardened transport: two spawned worker
+processes speaking the schema-restricted binary codec with HMAC frame
+signing AND worker-side quotas, driven by a sharded evaluation stream
+that absorbs — in one run —
+
+* a **quota rejection** (one worker caps ``max_rows_per_dispatch`` below
+  the shard size, so its shards reroute to the open worker instead of
+  retrying against the refusal),
+* a **SIGKILL mid-stream** (no goodbye; eviction -> elastic resize),
+
+with the merged report **bit-identical** to the in-process evaluator
+(``secure,smoke_bit_identical,1``) and zero authentication noise on the
+happy path.  A tampered frame against a live keyed worker is then
+verified to be rejected + counted, never evaluated
+(``secure,tamper_rejected,1``).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.distributed import ShardedEvaluator, ShardPayload, concat_reports
+from repro.distributed.sharded import _worker_spec
+from repro.perfmodel import EvalRequest, ModelEvaluator, get_evaluator
+from repro.perfmodel.designspace import SPACE
+from repro.serve import (Keyring, WorkerOptions, WorkerServer,
+                         start_worker_process, wire)
+from repro.serve import codec as codec
+
+
+def _fresh(tier: str = "proxy") -> ModelEvaluator:
+    return ModelEvaluator(get_evaluator(tier).models, tier=tier)
+
+
+def _identical(a, b) -> bool:
+    if not (np.array_equal(a.area, b.area) and a.workloads == b.workloads):
+        return False
+    for w in a.workloads:
+        if not np.array_equal(a.latency[w], b.latency[w]):
+            return False
+        if a.detail == "stalls" and not np.array_equal(a.stall[w],
+                                                       b.stall[w]):
+            return False
+    return True
+
+
+KEYS = {"ci": b"ci-smoke-secret"}
+
+
+def run(smoke: bool = False, full: bool = False) -> List[str]:
+    lines: List[str] = []
+    rng = np.random.default_rng(17)
+    batch = SPACE.sample(rng, 128 if smoke else 512)
+    req = EvalRequest(batch, detail="stalls")
+    want = _fresh().evaluate(req)
+
+    # ---- quota rejection + SIGKILL, bit-identical merge --------------
+    # worker 1 refuses anything over 4 rows (below the ~6-row shards the
+    # chunks split into); worker 2 takes the reroutes until it is
+    # SIGKILLed, after which worker 3 absorbs the fleet
+    quota = WorkerOptions(keys=KEYS, max_rows_per_dispatch=4)
+    open_ = WorkerOptions(keys=KEYS)
+    w1 = start_worker_process(options=quota)
+    w2 = start_worker_process(options=open_)
+    w3 = start_worker_process(options=open_)
+    ev = None
+    try:
+        ev = ShardedEvaluator(_fresh(), mode="socket",
+                              addresses=[w1.address, w2.address, w3.address],
+                              keyring=Keyring(KEYS), elastic=True)
+        chunks = np.array_split(batch, 8)
+        parts = []
+        for i, chunk in enumerate(chunks):
+            if i == 3:
+                w2.kill()                       # no goodbye, mid-stream
+            parts.append(ev.evaluate(EvalRequest(chunk, detail="stalls")))
+        merged = concat_reports(parts)
+        ok = _identical(merged, want)
+        lines.append(f"secure,smoke_bit_identical,{int(ok)}")
+        assert ok, "secure-fabric merged report diverged from in-process"
+        lines.append(f"secure,quota_rerouted,{ev.quota_rerouted}")
+        assert ev.quota_rerouted >= 1, \
+            "rows quota never exercised the reroute path"
+        lines.append(f"secure,post_kill_evictions,"
+                     f"{ev.registry.snapshot()['evictions']}")
+    finally:
+        if ev is not None:
+            ev.close()
+        for w in (w1, w2, w3):
+            if w.alive():
+                w.kill()
+
+    # ---- tampered frame: rejected, counted, never evaluated ----------
+    srv = WorkerServer(options=WorkerOptions(keys=KEYS))
+    srv.start()
+    try:
+        ring = Keyring(KEYS)
+        sock = wire.connect((srv.host, srv.port))
+        ch = codec.Channel(sock, keyring=ring)
+        ch.send(wire.Hello(_worker_spec(_fresh())))
+        assert isinstance(ch.recv(), wire.Ready)
+        payload = ShardPayload(SPACE.sample(rng, 2), "objectives", None)
+        frame = bytearray(codec.seal_frame(
+            codec.encode_msg(wire.Dispatch(0, payload)), ring, seq=1))
+        frame[-1] ^= 0xFF
+        wire.send_frame(sock, bytes(frame))
+        reply = ch.recv()
+        rejected = (isinstance(reply, wire.ErrorMsg)
+                    and reply.code == "auth.tamper")
+        sock.close()
+        deadline = time.monotonic() + 10
+        while srv.auth_rejected("tamper") < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        rejected = rejected and srv.auth_rejected("tamper") == 1 \
+            and srv.dispatches_served == 0
+        lines.append(f"secure,tamper_rejected,{int(rejected)}")
+        assert rejected, "tampered frame was not rejected+counted"
+    finally:
+        srv.close()
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(smoke=True):
+        print(line)

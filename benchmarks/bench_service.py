@@ -15,7 +15,11 @@ Measures the serving layer end to end:
 * **kill-mid-sweep smoke** — a chunked evaluation stream over the socket
   fleet with one worker SIGKILLed between chunks; the merged report must
   be bit-identical to the in-process result (the CI acceptance gate:
-  ``service,smoke_bit_identical,1``).
+  ``service,smoke_bit_identical,1``);
+* **codec + auth overhead** — the same batch over the legacy pickle wire
+  (``insecure=True`` both ends) vs the schema-restricted binary codec
+  with HMAC frame signing; the signed path must stay within 15% of
+  pickle (``service,codec_auth_within_15pct,1``).
 """
 from __future__ import annotations
 
@@ -27,7 +31,8 @@ import numpy as np
 from repro.distributed import EvalService, ShardedEvaluator, concat_reports
 from repro.perfmodel import EvalRequest, ModelEvaluator, get_evaluator
 from repro.perfmodel.designspace import SPACE
-from repro.serve import Gateway, start_worker_process
+from repro.serve import (Gateway, Keyring, WorkerOptions,
+                         start_worker_process)
 
 
 def _fresh(tier: str = "proxy") -> ModelEvaluator:
@@ -148,6 +153,40 @@ def run(smoke: bool = False, full: bool = False) -> List[str]:
         sock.close()
     finally:
         for w in (w1, w2):
+            if w.alive():
+                w.kill()
+
+    # ---- wire codec + auth overhead ----------------------------------
+    # the PR 10 acceptance gate: the schema-restricted binary codec with
+    # HMAC frame signing must stay within 15% of the legacy pickle wire
+    # on the socket dispatch path
+    keys = {"bench": b"bench-secret"}
+    wp1 = start_worker_process(options=WorkerOptions(insecure=True))
+    wp2 = start_worker_process(options=WorkerOptions(insecure=True))
+    ws1 = start_worker_process(options=WorkerOptions(keys=keys))
+    ws2 = start_worker_process(options=WorkerOptions(keys=keys))
+    try:
+        pick = ShardedEvaluator(_fresh(), mode="socket",
+                                addresses=[wp1.address, wp2.address],
+                                insecure=True)
+        assert _identical(pick.evaluate(req), want)
+        t_pick = _timed(lambda: pick.evaluate(req), repeats)
+        pick.close()
+        lines.append(f"service,socket_pickle_ms,{t_pick * 1e3:.1f}")
+
+        sec = ShardedEvaluator(_fresh(), mode="socket",
+                               addresses=[ws1.address, ws2.address],
+                               keyring=Keyring(keys))
+        assert _identical(sec.evaluate(req), want)
+        t_sec = _timed(lambda: sec.evaluate(req), repeats)
+        sec.close()
+        lines.append(f"service,socket_codec_auth_ms,{t_sec * 1e3:.1f}")
+        overhead = 100.0 * (t_sec - t_pick) / max(t_pick, 1e-9)
+        lines.append(f"service,codec_auth_overhead_pct,{overhead:.1f}")
+        lines.append(f"service,codec_auth_within_15pct,"
+                     f"{int(overhead < 15.0)}")
+    finally:
+        for w in (wp1, wp2, ws1, ws2):
             if w.alive():
                 w.kill()
 

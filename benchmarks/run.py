@@ -25,7 +25,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table3,fig45,fig6,budget20,table4,"
                          "sweep,campaigns,portfolio,distributed,faults,"
-                         "service,obs,kernels,archs,ablation")
+                         "service,secure,obs,kernels,archs,ablation")
     args = ap.parse_args()
     if args.full and args.smoke:
         raise SystemExit("--full and --smoke are mutually exclusive")
@@ -78,6 +78,11 @@ def main() -> None:
         benches.append(("service",
                         lambda: bench_service.run(smoke=args.smoke,
                                                   full=args.full)))
+    if only is None or "secure" in only:
+        from benchmarks import bench_secure
+        benches.append(("secure",
+                        lambda: bench_secure.run(smoke=args.smoke,
+                                                 full=args.full)))
     if only is None or "obs" in only:
         from benchmarks import bench_obs
         benches.append(("obs", lambda: bench_obs.run(smoke=args.smoke,

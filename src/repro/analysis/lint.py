@@ -491,6 +491,65 @@ def _rule_raw_telemetry_dict(tree: ast.Module,
                         "register a repro.obs.metrics Counter instead")
 
 
+_PICKLE_LOADERS = {"loads", "load", "Unpickler"}
+
+
+def _rule_pickle_outside_codec(tree: ast.Module,
+                               file: str) -> Iterator[Finding]:
+    """Pickle DESERIALIZATION on the serve/distributed surface is remote
+    code execution for whoever owns the bytes; the only sanctioned sites
+    are ``serve/codec.py``'s shims (the legacy ``insecure=True`` path and
+    the allowlist-restricted unpickler) — everything else must route
+    through them or carry a baseline entry for an intentional
+    single-trust-domain use."""
+    if not any(s in file for s in CONCURRENCY_SCOPES):
+        return
+    if file.replace("\\", "/").endswith("serve/codec.py"):
+        return                          # the sanctioned shim module
+    aliases = {"pickle"}
+    bare: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "pickle":
+                    aliases.add(a.asname or "pickle")
+        elif isinstance(node, ast.ImportFrom) and node.module == "pickle":
+            for a in node.names:
+                if a.name in _PICKLE_LOADERS:
+                    bare.add(a.asname or a.name)
+
+    def hit(call: ast.Call) -> Optional[str]:
+        f = call.func
+        if isinstance(f, ast.Attribute) and f.attr in _PICKLE_LOADERS and \
+                isinstance(f.value, ast.Name) and f.value.id in aliases:
+            return f"pickle.{f.attr}"
+        if isinstance(f, ast.Name) and f.id in bare:
+            return f.id
+        return None
+
+    def visit(node: ast.AST, qual: str) -> Iterator[Finding]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child,
+                          (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+                inner = (child.name if qual == "<module>"
+                         else f"{qual}.{child.name}")
+                yield from visit(child, inner)
+                continue
+            for n in ast.walk(child):
+                if isinstance(n, ast.Call):
+                    name = hit(n)
+                    if name is not None:
+                        yield Finding(
+                            "pickle-outside-codec", file, n.lineno, qual,
+                            f"{name} deserializes attacker-controlled "
+                            "bytes into arbitrary objects; route through "
+                            "repro.serve.codec (restricted_loads / "
+                            "legacy_loads) instead")
+
+    yield from visit(tree, "<module>")
+
+
 _RULES = (
     _rule_mutable_default,
     _rule_unlocked_shared_write,
@@ -501,12 +560,13 @@ _RULES = (
     _rule_jit_traced_branch,
     _rule_host_sync_hot_loop,
     _rule_raw_telemetry_dict,
+    _rule_pickle_outside_codec,
 )
 
 RULE_NAMES = ("mutable-default", "unlocked-shared-write", "future-swallow",
               "thread-not-daemon", "executor-leak", "jit-static-mutable",
               "jit-traced-branch", "host-sync-hot-loop",
-              "raw-telemetry-dict")
+              "raw-telemetry-dict", "pickle-outside-codec")
 
 
 # --------------------------------------------------------------------------

@@ -51,6 +51,20 @@ class WorkerFault(RuntimeError):
     """An injected (or detected) worker failure — retryable by policy."""
 
 
+class QuotaExceeded(WorkerFault):
+    """A worker REFUSED a dispatch by policy (``quota.rows`` /
+    ``quota.rate`` / ``quota.concurrency`` / ``quota.deadline``): the
+    worker is healthy and the shard is fine — it just will not run HERE
+    right now.  :class:`~repro.distributed.sharded.ShardedEvaluator`
+    treats it as non-retryable-at-this-worker: reroute to another slot
+    without consuming retry budget, without backoff, and without
+    evicting the refusing worker."""
+
+    def __init__(self, message: str, code: str = "quota"):
+        super().__init__(message)
+        self.code = code
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultEvent:
     """One scheduled fault: hits dispatch number `dispatch` attributed to

@@ -59,8 +59,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.distributed.faults import (ChaosPool, FaultPlan, WorkerFault,
-                                      WorkerRegistry)
+from repro.distributed.faults import (ChaosPool, FaultPlan, QuotaExceeded,
+                                      WorkerFault, WorkerRegistry)
 from repro.obs.metrics import Clock, MetricsRegistry
 from repro.obs.trace import NOOP
 from repro.perfmodel.evaluator import (EvalRequest, ModelEvaluator, PPAReport,
@@ -215,11 +215,18 @@ def _worker_spec(base: ModelEvaluator) -> bytes:
     }, protocol=pickle.HIGHEST_PROTOCOL)
 
 
-def evaluator_from_spec(spec_bytes: bytes) -> ModelEvaluator:
+def evaluator_from_spec(spec_bytes: bytes, loads=None) -> ModelEvaluator:
     """Rebuild the evaluator a :func:`_worker_spec` blob describes — the
     worker half of the wire contract, shared by the process pool
-    initializer and the ``repro.serve`` socket daemon."""
-    spec = pickle.loads(spec_bytes)
+    initializer and the ``repro.serve`` socket daemon.
+
+    ``loads`` overrides the deserializer: hardened workers pass
+    :func:`repro.serve.codec.restricted_loads` so spec bytes resolve only
+    allowlisted constructors; the default raw ``pickle.loads`` is the
+    single-trust-domain process-pool path (lint-baselined under the
+    ``pickle-outside-codec`` rule).
+    """
+    spec = pickle.loads(spec_bytes) if loads is None else loads(spec_bytes)
     models = {nm: cls(wl, spec["space"])
               for nm, (cls, wl) in spec["models"].items()}
     return ModelEvaluator(models, tier=spec["tier"],
@@ -360,6 +367,11 @@ class ShardedEvaluator:
     def __init__(self, base, *, workers: Optional[int] = None,
                  mode: str = "auto",
                  addresses: Optional[List[Tuple[str, int]]] = None,
+                 membership=None,
+                 insecure: bool = False,
+                 keyring=None, key_id: Optional[str] = None,
+                 ssl_context=None,
+                 max_frame_bytes: Optional[int] = None,
                  min_shard_rows: int = 1, retries: int = 2,
                  retry_policy: Optional[RetryPolicy] = None,
                  shard_timeout_s: Optional[float] = None,
@@ -379,6 +391,9 @@ class ShardedEvaluator:
         if addresses is not None and mode != "socket":
             raise ValueError("addresses= is only meaningful with "
                              "mode='socket'")
+        if membership is not None and mode != "socket":
+            raise ValueError("membership= is only meaningful with "
+                             "mode='socket'")
         self.base = base
         self.space = base.space
         self.tier = base.tier
@@ -386,11 +401,14 @@ class ShardedEvaluator:
             workers = len(addresses) if addresses else 2
         self.workers = max(1, int(workers))
         if mode == "socket":
-            if not addresses:
+            if not addresses and membership is None:
                 raise ValueError("mode='socket' needs addresses="
                                  "[(host, port), ...] of running "
-                                 "`python -m repro.serve.worker` daemons")
-            self.workers = min(self.workers, len(addresses))
+                                 "`python -m repro.serve.worker` daemons "
+                                 "or membership= (a MembershipView workers "
+                                 "announce to)")
+            if addresses:
+                self.workers = min(self.workers, len(addresses))
         elif self.workers == 1:
             mode = "inline"                    # the in-process fallback
         elif mode == "auto":
@@ -403,15 +421,27 @@ class ShardedEvaluator:
         self._clock: Clock = clock if clock is not None else time.monotonic
         if mode == "socket":
             from repro.serve.pool import SocketPool
-            raw_pool = SocketPool(base, self.workers, addresses=addresses,
+            raw_pool = SocketPool(base,
+                                  self.workers if addresses else None,
+                                  addresses=addresses,
+                                  membership=membership,
+                                  insecure=insecure, keyring=keyring,
+                                  key_id=key_id, ssl_context=ssl_context,
+                                  max_frame_bytes=max_frame_bytes,
                                   heartbeat_timeout_s=heartbeat_timeout_s,
                                   metrics=self.metrics, tracer=self.tracer,
                                   clock=self._clock)
+            if membership is not None:
+                # lease-driven topology: the pool's view of the fleet is
+                # authoritative, not the construction-time count
+                self.workers = max(1, raw_pool.workers)
         else:
             raw_pool = _POOLS[mode](base, self.workers)
+        self._raw_pool = raw_pool
         self._pool = (ChaosPool(raw_pool, fault_plan)
                       if fault_plan is not None else raw_pool)
         self.fault_plan = fault_plan
+        self.membership = membership
         self.min_shard_rows = max(1, int(min_shard_rows))
         self.retries = int(retries)
         self.retry_policy = (retry_policy if retry_policy is not None
@@ -456,6 +486,9 @@ class ShardedEvaluator:
             "sharded_corrupt_rejected", "shards failing the integrity check")
         self._c_resizes = m.counter(
             "sharded_resizes", "elastic pool resizes applied")
+        self._c_quota_rerouted = m.counter(
+            "sharded_quota_rerouted",
+            "shards rerouted after worker quota refusals")
         self._h_shard = m.histogram(
             "sharded_shard_s", "completed-shard wall time (s) by worker slot",
             labelnames=("slot",))
@@ -489,6 +522,10 @@ class ShardedEvaluator:
     def resizes(self) -> int:
         return int(self._c_resizes.value())
 
+    @property
+    def quota_rerouted(self) -> int:
+        return int(self._c_quota_rerouted.value())
+
     # -- identity / protocol surface -----------------------------------
     @property
     def workloads(self) -> Tuple[str, ...]:
@@ -510,6 +547,11 @@ class ShardedEvaluator:
     def evaluate(self, request: EvalRequest) -> PPAReport:
         idx = np.atleast_2d(np.asarray(request.idx, dtype=np.int32))
         n = idx.shape[0]
+        if self.membership is not None:
+            # lease-driven fleets grow/shrink between requests: sync the
+            # pool's slot view and shard to the CURRENT worker count
+            self._raw_pool._sync_membership()
+            self.workers = max(1, self._raw_pool.workers)
         n_shards = min(self.workers, max(1, n // self.min_shard_rows))
         self._c_dispatches.inc()
         tr = self.tracer
@@ -620,6 +662,7 @@ class ShardedEvaluator:
         spans: Dict[Future, object] = {}
         speculated: set = set()
         durations: List[float] = []
+        quota_reroutes: Dict[int, int] = {}
         parent_ctx = tr.current_ctx()          # the sharded.evaluate span
 
         def submit(i: int, attempt: int) -> None:
@@ -655,6 +698,17 @@ class ShardedEvaluator:
 
         def fail(i: int, attempt: int, slot: int, exc: Optional[BaseException],
                  what: str) -> None:
+            if isinstance(exc, QuotaExceeded) and \
+                    quota_reroutes.get(i, 0) < max(1, self.workers):
+                # the worker refused by POLICY — it is healthy and the
+                # shard is fine: reroute to the next slot at the same
+                # attempt, no backoff, no retry budget, no eviction
+                # (bounded per shard so an all-refusing fleet still
+                # falls through to the normal retry/raise path)
+                quota_reroutes[i] = quota_reroutes.get(i, 0) + 1
+                self._c_quota_rerouted.inc()
+                submit(i, attempt)
+                return
             self._on_worker_failure(
                 slot, sum(1 for r in results if r is None))
             if attempt >= policy.max_retries:

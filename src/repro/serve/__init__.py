@@ -3,37 +3,51 @@
 Turns the in-process evaluation stack into an always-on service in
 three layers, each riding an existing contract unchanged:
 
-* **Transport** (:mod:`~repro.serve.wire`, :mod:`~repro.serve.worker`,
-  :mod:`~repro.serve.pool`) — the PR 4 pickled-spec + ``ShardPayload ->
-  PPAReport`` wire format over length-prefixed TCP frames.  Run
-  ``python -m repro.serve.worker --host H --port P`` on any machine;
-  point a :class:`~repro.distributed.sharded.ShardedEvaluator` at the
-  fleet with ``mode='socket', addresses=[(H, P), ...]`` (or
-  :func:`~repro.serve.pool.connect_evaluator`) and the retry / timeout /
-  straggler / elastic / chaos machinery drives remote workers exactly as
-  it drives local pools.
+* **Transport** (:mod:`~repro.serve.wire`, :mod:`~repro.serve.codec`,
+  :mod:`~repro.serve.worker`, :mod:`~repro.serve.pool`) — the PR 4
+  pickled-spec + ``ShardPayload -> PPAReport`` exchange over
+  length-prefixed TCP frames, carried by a schema-restricted binary
+  codec with optional HMAC frame signing, replay rejection and TLS
+  (legacy pickle only behind ``insecure=True``).  Run
+  ``python -m repro.serve.worker --host H --port P --key id=secret`` on
+  any machine; point a :class:`~repro.distributed.sharded.
+  ShardedEvaluator` at the fleet with ``mode='socket'`` plus either a
+  static ``addresses=[(H, P), ...]`` list or a live ``membership=``
+  view workers announce to (:mod:`~repro.serve.membership`), and the
+  retry / timeout / straggler / elastic / chaos machinery drives remote
+  workers exactly as it drives local pools.  Workers enforce their own
+  quotas (rows/dispatch, concurrency, deadline, per-peer rate) and the
+  evaluator reroutes refusals instead of hammering.
 * **QoS** — :meth:`EvalService.submit(..., tier=...)
   <repro.distributed.service.EvalService.submit>` with weighted-deficit
   tier drain and an anti-starvation floor (lives in
   :mod:`repro.distributed.service`; re-exported here).
 * **Admission control** (:mod:`~repro.serve.gateway`) — per-tenant row
   budgets, queue-depth backpressure with drain-ETA retry hints, fleet
-  telemetry.
+  telemetry down to membership leases.
 
-See ``examples/serve_cluster.py`` for the two-worker loopback cluster
-walkthrough and the README "DSE-as-a-service" section for deployment.
+See ``examples/serve_cluster.py`` for the authenticated two-worker
+loopback cluster walkthrough and the README "DSE-as-a-service" section
+(incl. the security model) for deployment.
 """
 
 from repro.distributed.service import (DEFAULT_TIER_WEIGHTS, QOS_TIERS,
                                        EvalService)
+from repro.serve.codec import (AuthError, Channel, CodecError, FrameTooLarge,
+                               Keyring, restricted_loads, spec_digest)
 from repro.serve.gateway import Gateway, RetryAfter, TenantAccount
+from repro.serve.membership import MembershipView, Registrar
 from repro.serve.pool import SocketPool, connect_evaluator
 from repro.serve.wire import WIRE_VERSION, ConnectionClosed, WireError
-from repro.serve.worker import (WorkerHandle, WorkerServer,
+from repro.serve.worker import (WorkerHandle, WorkerOptions, WorkerServer,
                                 start_worker_process)
 
 __all__ = ["EvalService", "QOS_TIERS", "DEFAULT_TIER_WEIGHTS",
            "Gateway", "RetryAfter", "TenantAccount",
            "SocketPool", "connect_evaluator",
-           "WorkerServer", "WorkerHandle", "start_worker_process",
+           "WorkerServer", "WorkerHandle", "WorkerOptions",
+           "start_worker_process",
+           "Keyring", "Channel", "AuthError", "CodecError", "FrameTooLarge",
+           "restricted_loads", "spec_digest",
+           "MembershipView", "Registrar",
            "WIRE_VERSION", "WireError", "ConnectionClosed"]

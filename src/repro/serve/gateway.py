@@ -251,6 +251,11 @@ class Gateway:
             out["fleet"] = registry.snapshot()
             out["fleet"]["mode"] = getattr(ev, "mode", None)
             out["fleet"]["workers"] = getattr(ev, "workers", None)
+            membership = getattr(ev, "membership", None)
+            if membership is not None:
+                # lease-level fleet view: who holds membership right now,
+                # not just which sockets happen to be open
+                out["fleet"]["leases"] = membership.snapshot()
             ev_metrics = getattr(ev, "metrics", None)
             if ev_metrics is not None:
                 rtt = ev_metrics.get("heartbeat_rtt")

@@ -9,15 +9,35 @@ wrapping — drives a cross-machine fleet *unchanged*.
 One :class:`_Connection` per worker address: a Hello/Ready handshake
 ships the pickled evaluator spec, then dispatches multiplex over the
 connection keyed by ``seq`` (a reader thread resolves the matching
-futures as results land, out of order is fine).  Liveness is the pool's
-own :class:`~repro.distributed.faults.WorkerRegistry`: a heartbeat
-thread pings every worker each ``heartbeat_s``; pongs and results beat
-the registry; a connection that dies (EOF, send failure, silent past
-``heartbeat_timeout_s``) fails all its in-flight futures with
-:class:`~repro.distributed.faults.WorkerFault` — which lands in the
-ShardedEvaluator retry path — and is marked dead + evicted.  Submits
-round-robin over live connections and lazily reconnect dead addresses
-(under a cooldown), re-registering the slot on success.
+futures as results land, out of order is fine).  Traffic rides a
+:class:`~repro.serve.codec.Channel` — the schema-restricted binary
+codec by default, HMAC-signed + replay-protected when a ``keyring`` is
+given, TLS-wrapped when an ``ssl_context`` is given; the legacy pickle
+transport needs an explicit ``insecure=True``.  A frame the channel
+refuses (tampered, replayed, unsigned) is counted
+(``pool_auth_rejected{reason}``) and kills the connection without ever
+being decoded.
+
+Liveness is the pool's own :class:`~repro.distributed.faults.
+WorkerRegistry`: a heartbeat thread pings every worker each
+``heartbeat_s``; pongs and results beat the registry; a connection that
+dies (EOF, send failure, silent past ``heartbeat_timeout_s``) fails all
+its in-flight futures with :class:`~repro.distributed.faults.
+WorkerFault` — which lands in the ShardedEvaluator retry path — and is
+marked dead + evicted.  A worker-side quota reject
+(``ErrorMsg(code="quota.*")``) instead resolves the future with
+:class:`~repro.distributed.faults.QuotaExceeded`: the worker is fine,
+the dispatch must go elsewhere.  Submits round-robin over live
+connections and lazily reconnect dead addresses (under a cooldown),
+re-registering the slot on success.
+
+Topology comes from either a static ``addresses=[...]`` list (PR 7) or
+a live :class:`~repro.serve.membership.MembershipView` (``membership=``):
+the pool syncs against the view's version counter on every submit and
+heartbeat tick — new leases append worker slots (slot ids are stable:
+the address list only grows), lapsed leases disable their slot and fail
+its in-flight work into the retry path, and a rejoin re-enables the
+slot with a cleared redial cooldown.
 """
 from __future__ import annotations
 
@@ -28,9 +48,11 @@ import time
 from concurrent.futures import Future, InvalidStateError
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.distributed.faults import WorkerFault, WorkerRegistry
+from repro.distributed.faults import (QuotaExceeded, WorkerFault,
+                                      WorkerRegistry)
 from repro.obs.metrics import Clock, MetricsRegistry
 from repro.obs.trace import NOOP, Span
+from repro.serve import codec as _codec
 from repro.serve import wire
 
 
@@ -43,14 +65,25 @@ class _Connection:
         self.pool = pool
         self.slot = slot
         self.address = address
-        self.sock = wire.connect(address, timeout_s=pool.connect_timeout_s)
+        self.sock = wire.connect(address, timeout_s=pool.connect_timeout_s,
+                                 ssl_context=pool.ssl_context)
         # handshake under a deadline: a worker that accepts but never
         # answers Ready must not wedge pool construction
         self.sock.settimeout(pool.handshake_timeout_s)
-        wire.send_msg(self.sock, wire.Hello(pool.spec))
-        ready = wire.recv_msg(self.sock)
+        self.ch = _codec.Channel(
+            self.sock,
+            codec=_codec.CODEC_PICKLE if pool.insecure
+            else _codec.CODEC_BINARY,
+            keyring=None if pool.insecure else pool.keyring,
+            key_id=pool.key_id,
+            max_frame_bytes=pool.max_frame_bytes)
+        self.ch.send(wire.Hello(pool.spec))
+        ready = self.ch.recv()
         if isinstance(ready, wire.ErrorMsg):
             self.sock.close()
+            code = getattr(ready, "code", "")
+            if code.startswith("auth."):
+                pool._c_auth_rejected.inc(reason=code[5:])
             raise WorkerFault(f"worker {address} refused: {ready.message}")
         if not isinstance(ready, wire.Ready):
             self.sock.close()
@@ -93,6 +126,15 @@ class _Connection:
             self._pending[seq] = (fut, span)
         try:
             self._send(wire.Dispatch(seq, payload, ctx))
+        except _codec.FrameTooLarge:
+            # the frame never left this process: the connection is fine,
+            # the DISPATCH is impossible — surface it to the caller
+            # without tearing anything down
+            with self._lock:
+                self._pending.pop(seq, None)
+            if span is not None:
+                tr.lose(span, "dispatch frame over the size bound")
+            raise
         except (OSError, wire.WireError) as exc:
             self.die(f"send failed: {exc}")
             raise WorkerFault(
@@ -110,13 +152,13 @@ class _Connection:
 
     def _send(self, msg: object) -> None:
         with self._send_lock:
-            wire.send_msg(self.sock, msg)
+            self.ch.send(msg)
 
     # -- reader ----------------------------------------------------------
     def _read_loop(self) -> None:
         try:
             while True:
-                msg = wire.recv_msg(self.sock, self.pool.max_message_bytes)
+                msg = self.ch.recv()
                 if isinstance(msg, wire.ResultMsg):
                     fut, span = self._pop(msg.seq)
                     self.pool._on_activity(self)
@@ -130,22 +172,32 @@ class _Connection:
                         except InvalidStateError:
                             pass               # receiver abandoned the twin
                 elif isinstance(msg, wire.ErrorMsg):
+                    code = getattr(msg, "code", "")
                     if msg.seq < 0:
+                        if code.startswith("auth."):
+                            self.pool._c_auth_rejected.inc(reason=code[5:])
                         raise wire.WireError(f"protocol error from "
                                              f"{self.address}: {msg.message}")
-                    # the WORKER is alive — the evaluation failed; surface
-                    # it without tearing the connection down
+                    # the WORKER is alive — the evaluation failed or was
+                    # refused; surface it without tearing the wire down
                     fut, span = self._pop(msg.seq)
                     self.pool._on_activity(self)
                     self.pool.tracer.adopt(getattr(msg, "spans", ()))
                     if span is not None:
                         span.attrs["error"] = msg.message
                         self.pool.tracer.finish(span, status="error")
+                    if code.startswith("quota."):
+                        self.pool._c_quota_rejected.inc(kind=code[6:])
+                        exc: WorkerFault = QuotaExceeded(
+                            f"worker {self.address} refused the dispatch: "
+                            f"{msg.message}", code)
+                    else:
+                        exc = WorkerFault(
+                            f"remote evaluation on {self.address} "
+                            f"failed: {msg.message}")
                     if fut is not None and not fut.cancelled():
                         try:
-                            fut.set_exception(WorkerFault(
-                                f"remote evaluation on {self.address} "
-                                f"failed: {msg.message}"))
+                            fut.set_exception(exc)
                         except InvalidStateError:
                             pass
                 elif isinstance(msg, wire.Pong):
@@ -159,6 +211,11 @@ class _Connection:
                     raise wire.WireError(f"unexpected "
                                          f"{type(msg).__name__} "
                                          f"from {self.address}")
+        except _codec.AuthError as exc:
+            # a frame that fails MAC/replay/signing checks is counted and
+            # the connection dropped — its contents are never decoded
+            self.pool._c_auth_rejected.inc(reason=exc.reason)
+            self.die(str(exc))
         except (wire.WireError, OSError) as exc:
             self.die(str(exc))
 
@@ -209,19 +266,44 @@ class SocketPool:
     mode = "socket"
 
     def __init__(self, base, workers: Optional[int] = None, *,
-                 addresses: Sequence[Tuple[str, int]],
+                 addresses: Optional[Sequence[Tuple[str, int]]] = None,
+                 membership=None,
+                 membership_wait_s: float = 10.0,
                  spec: Optional[bytes] = None,
+                 insecure: bool = False,
+                 keyring: Optional[_codec.Keyring] = None,
+                 key_id: Optional[str] = None,
+                 ssl_context=None,
                  connect_timeout_s: float = 10.0,
                  handshake_timeout_s: float = 300.0,
                  heartbeat_s: float = 1.0,
                  heartbeat_timeout_s: float = 30.0,
                  reconnect_cooldown_s: float = 0.25,
+                 max_frame_bytes: Optional[int] = None,
                  max_message_bytes: int = wire.MAX_MESSAGE_BYTES,
                  metrics: Optional[MetricsRegistry] = None,
                  tracer=None,
                  clock: Optional[Clock] = None):
+        self.membership = membership
+        self.insecure = bool(insecure)
+        self.keyring = keyring
+        self.key_id = key_id
+        self.ssl_context = ssl_context
+        self.max_frame_bytes = int(max_frame_bytes if max_frame_bytes
+                                   is not None else max_message_bytes)
+        # legacy alias (PR 7 name) so old call sites keep working
+        self.max_message_bytes = self.max_frame_bytes
+        if membership is not None:
+            if addresses:
+                raise ValueError("pass addresses= OR membership=, not both")
+            membership.wait_for(1, timeout_s=membership_wait_s)
+            addresses = membership.live()
+            if not addresses:
+                raise RuntimeError(
+                    f"no worker leased membership within "
+                    f"{membership_wait_s}s")
         self.addresses: List[Tuple[str, int]] = [
-            (str(h), int(p)) for h, p in addresses]
+            (str(h), int(p)) for h, p in (addresses or ())]
         if not self.addresses:
             raise ValueError("SocketPool needs at least one address")
         if spec is None:
@@ -236,20 +318,31 @@ class SocketPool:
         self.heartbeat_s = float(heartbeat_s)
         self.heartbeat_timeout_s = float(heartbeat_timeout_s)
         self.reconnect_cooldown_s = float(reconnect_cooldown_s)
-        self.max_message_bytes = int(max_message_bytes)
         self.clock: Clock = clock if clock is not None else time.monotonic
         self.tracer = tracer if tracer is not None else NOOP
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._c_reconnects = self.metrics.counter(
             "pool_reconnects", "worker connections re-established")
+        self._c_auth_rejected = self.metrics.counter(
+            "pool_auth_rejected",
+            "worker frames rejected by client-side authentication",
+            labelnames=("reason",))
+        self._c_quota_rejected = self.metrics.counter(
+            "pool_quota_rejected",
+            "dispatches refused by worker quotas", labelnames=("kind",))
         self._h_rtt = self.metrics.histogram(
             "heartbeat_rtt", "Ping->Pong round-trip (s) per worker slot",
             labelnames=("worker",))
         self.registry = WorkerRegistry(timeout_s=self.heartbeat_timeout_s,
                                        now=self.clock)
         self._conns: Dict[int, _Connection] = {}
+        self._topology_lock = threading.Lock()
         self._slot_locks = [threading.Lock() for _ in self.addresses]
         self._last_attempt = [-math.inf] * len(self.addresses)
+        self._addr_slot: Dict[Tuple[str, int], int] = {
+            a: s for s, a in enumerate(self.addresses)}
+        self._disabled: set = set()
+        self._mver = -1                # force a sync on first submit
         self._rr = itertools.count()
         self._closed = False
         errors: List[str] = []
@@ -267,8 +360,64 @@ class SocketPool:
     def reconnects(self) -> int:
         return int(self._c_reconnects.value())
 
+    @property
+    def auth_rejected(self) -> int:
+        return int(self._c_auth_rejected.total())
+
+    @property
+    def quota_rejected(self) -> int:
+        return int(self._c_quota_rejected.total())
+
     def _observe_rtt(self, slot: int, rtt_s: float) -> None:
         self._h_rtt.observe(rtt_s, worker=slot)
+
+    # -- membership sync --------------------------------------------------
+    def _sync_membership(self) -> None:
+        """Reconcile slots against the live lease set; O(1) when the
+        view's version has not moved.  Slot ids are stable — the address
+        list only grows; lapsed leases disable their slot (failing its
+        in-flight work into the retry path), rejoins re-enable it with
+        the redial cooldown cleared."""
+        if self.membership is None:
+            return
+        v = self.membership.version()
+        if v == self._mver:
+            return
+        to_close: List[_Connection] = []
+        with self._topology_lock:
+            v = self.membership.version()
+            if v == self._mver:
+                return
+            live = set(self.membership.live())
+            for addr in sorted(live):
+                if addr not in self._addr_slot:
+                    self._addr_slot[addr] = len(self.addresses)
+                    self.addresses.append(addr)
+                    self._slot_locks.append(threading.Lock())
+                    self._last_attempt.append(-math.inf)
+            enabled = 0
+            for addr, slot in self._addr_slot.items():
+                if addr in live:
+                    if slot in self._disabled:
+                        self._disabled.discard(slot)
+                        self._last_attempt[slot] = -math.inf
+                    enabled += 1
+                elif slot not in self._disabled:
+                    self._disabled.add(slot)
+                    conn = self._conns.pop(slot, None)
+                    if conn is not None:
+                        to_close.append(conn)
+            self.workers = max(1, enabled)
+            self._mver = v
+        for conn in to_close:      # outside the lock: die() fans out
+            conn.close()
+
+    def _enabled_slots(self) -> List[int]:
+        if self.membership is None:
+            return list(range(max(1, self.workers)))
+        with self._topology_lock:
+            return [s for s in range(len(self.addresses))
+                    if s not in self._disabled]
 
     # -- pool protocol ----------------------------------------------------
     def submit(self, payload) -> Future:
@@ -276,27 +425,32 @@ class SocketPool:
             fut: Future = Future()
             fut.set_exception(WorkerFault("pool is closed"))
             return fut
-        n = max(1, self.workers)
+        self._sync_membership()
+        slots = self._enabled_slots()
         start = next(self._rr)
-        for off in range(n):
-            slot = (start + off) % n
+        for off in range(len(slots)):
+            slot = slots[(start + off) % len(slots)]
             conn = self._ensure(slot)
             if conn is None:
                 continue
             try:
                 return conn.submit(payload)
+            except _codec.FrameTooLarge:
+                raise                          # caller error, fail loud
             except WorkerFault:
                 continue                       # slot died mid-submit
         fut = Future()
         fut.set_exception(WorkerFault(
-            f"no live worker among {n} socket slots "
-            f"({self.addresses[:n]})"))
+            f"no live worker among {len(slots)} socket slots"))
         return fut
 
     def resize(self, workers: int) -> None:
-        """Clamp to the address list; shrinking closes the trailing
-        connections, growing clears their reconnect cooldown so the next
-        submit redials immediately."""
+        """Static topology: clamp to the address list; shrinking closes
+        the trailing connections, growing clears their reconnect cooldown
+        so the next submit redials immediately.  Under membership the
+        lease set IS the topology, so resize is a no-op."""
+        if self.membership is not None:
+            return
         workers = max(1, min(int(workers), len(self.addresses)))
         if workers == self.workers:
             return
@@ -321,7 +475,9 @@ class SocketPool:
     def _ensure(self, slot: int,
                 errors: Optional[List[str]] = None) -> Optional[_Connection]:
         """The slot's live connection, redialing if dead and out of
-        cooldown; None while the slot stays down."""
+        cooldown; None while the slot stays down (or its lease lapsed)."""
+        if slot in self._disabled:
+            return None
         with self._slot_locks[slot]:
             conn = self._conns.get(slot)
             if conn is not None and conn.alive:
@@ -359,6 +515,7 @@ class SocketPool:
                                self.heartbeat_timeout_s / 3.0))
         while not self._closed:
             time.sleep(period)
+            self._sync_membership()
             now = self.clock()
             for conn in list(self._conns.values()):
                 if not conn.alive:

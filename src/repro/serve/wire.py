@@ -1,33 +1,39 @@
-"""Length-prefixed pickle wire protocol for the cross-machine eval fabric.
+"""Length-prefixed wire framing + message vocabulary for ``repro.serve``.
 
-The PR 4 process pool established the wire format: a worker is anything
+The PR 4 process pool established the contract: a worker is anything
 that can rebuild an evaluator from a pickled spec and answer
 :class:`~repro.distributed.sharded.ShardPayload` dispatches with
 :class:`~repro.perfmodel.evaluator.PPAReport` payloads.  This module
-carries exactly that contract over a TCP socket:
+carries that contract over a TCP socket:
 
-* **Framing** — every message is an 8-byte big-endian length prefix
-  followed by a pickle (``pickle.HIGHEST_PROTOCOL``) of one of the
-  dataclasses below.  :func:`send_msg` / :func:`recv_msg` are the entire
-  codec; ``recv_msg`` rejects frames above ``max_bytes`` before reading
-  them (a corrupt or hostile length prefix cannot OOM the receiver).
-* **Messages** — ``Hello`` (the evaluator spec bytes: the handshake that
-  turns a bare worker daemon into THIS evaluator's worker), ``Ready``
-  (spec digest ack), ``Dispatch``/``ResultMsg``/``ErrorMsg`` (one shard
-  request/response, correlated by ``seq`` so many dispatches ride one
-  connection), ``Ping``/``Pong`` (heartbeats carried over the same wire,
-  answered while evaluations are in flight), ``Bye`` (graceful close).
+* **Framing** — every frame is an 8-byte big-endian length prefix
+  followed by the frame bytes.  :func:`send_frame` / :func:`recv_frame`
+  are the transport; ``recv_frame`` rejects frames above ``max_bytes``
+  before reading them (a corrupt or hostile length prefix cannot OOM
+  the receiver).  What's INSIDE the frame is the codec's business:
+  :mod:`repro.serve.codec` provides the default schema-restricted
+  binary codec (optionally HMAC-signed, replay-protected) and the
+  legacy pickle shim behind ``insecure=True``.
+* **Messages** — ``Hello`` (the evaluator spec bytes: the handshake
+  that turns a bare worker daemon into THIS evaluator's worker),
+  ``Ready`` (spec digest ack), ``Dispatch``/``ResultMsg``/``ErrorMsg``
+  (one shard request/response, correlated by ``seq`` so many dispatches
+  ride one connection; ``ErrorMsg.code`` carries typed reject hints
+  like ``quota.rows``), ``Ping``/``Pong`` (heartbeats answered while
+  evaluations are in flight), ``Bye`` (graceful close), and the
+  membership pair ``Announce``/``LeaseAck`` (workers leasing a slot in
+  the gateway's registrar, see :mod:`repro.serve.membership`).
 
-Trust model: pickle-over-socket assumes the same trust domain as the PR 4
-process pool (your own fleet behind your own firewall) — it is a cluster
-transport, not an internet-facing API.  :class:`~repro.serve.gateway.
-Gateway` is where multi-tenant admission control lives.
+Trust model: the binary codec + keyring makes the fabric safe to expose
+beyond one trust domain (see README "Security model"); the legacy
+pickle mode assumes the same trust domain as the PR 4 process pool and
+stays available only behind an explicit ``insecure=True``.
 """
 from __future__ import annotations
 
 import dataclasses
-import pickle
 import socket
+import ssl as _ssl
 import struct
 from typing import Optional, Tuple
 
@@ -37,7 +43,8 @@ WIRE_VERSION = 1
 _HEADER = struct.Struct(">Q")
 
 # refuse frames above this before allocating (a flipped length bit cannot
-# ask the receiver to materialize petabytes)
+# ask the receiver to materialize petabytes); endpoints can tighten it
+# per-connection via ``max_frame_bytes``
 MAX_MESSAGE_BYTES = 1 << 31
 
 
@@ -57,7 +64,10 @@ class ConnectionClosed(WireError):
 class Hello:
     """Client handshake: the pickled evaluator spec this connection serves
     (the same bytes :func:`~repro.distributed.sharded._worker_spec`
-    feeds the process pool's initializer)."""
+    feeds the process pool's initializer).  Secure-mode workers
+    deserialize it through the allowlisted constructor table
+    (:func:`repro.serve.codec.restricted_loads`) and may additionally
+    require its digest to be pre-approved."""
     spec: bytes
     wire_version: int = WIRE_VERSION
 
@@ -97,9 +107,16 @@ class ResultMsg:
 
 @dataclasses.dataclass(frozen=True)
 class ErrorMsg:
+    """One failed request (``seq >= 0``) or a connection-fatal protocol
+    error (``seq < 0``).  ``code`` is a typed machine hint: empty for
+    plain evaluation failures, ``quota.*`` for worker-side quota rejects
+    (the client reroutes instead of retrying the same worker), ``auth.*``
+    for authentication rejects.  Read via ``getattr(msg, "code", "")``
+    for old-peer compatibility."""
     seq: int
     message: str
     spans: Tuple = ()
+    code: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,14 +134,34 @@ class Bye:
     reason: str = ""
 
 
+@dataclasses.dataclass(frozen=True)
+class Announce:
+    """Worker -> registrar: lease (or renew) a membership slot.
+
+    ``address`` is where the worker's dispatch port listens, ``digests``
+    the spec digests it already serves (empty = will build anything its
+    own allowlist accepts), ``capacity`` an advisory concurrent-eval
+    count for placement."""
+    address: Tuple[str, int]
+    digests: Tuple[str, ...] = ()
+    capacity: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LeaseAck:
+    """Registrar -> worker: the lease is held for ``ttl_s`` more seconds;
+    renew (re-Announce) before it lapses or the membership view drops
+    the worker."""
+    ttl_s: float
+
+
 # ---------------------------------------------------------------------------
-# codec
+# framing
 # ---------------------------------------------------------------------------
 
-def send_msg(sock: socket.socket, msg: object) -> None:
-    """Frame + send one message (callers serialize access per socket)."""
-    payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
-    sock.sendall(_HEADER.pack(len(payload)) + payload)
+def send_frame(sock: socket.socket, frame: bytes) -> None:
+    """Length-prefix + send one raw frame (callers serialize per socket)."""
+    sock.sendall(_HEADER.pack(len(frame)) + frame)
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
@@ -137,15 +174,31 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     return bytes(buf)
 
 
-def recv_msg(sock: socket.socket,
-             max_bytes: int = MAX_MESSAGE_BYTES) -> object:
-    """Receive one framed message (blocking; raises ConnectionClosed on
-    EOF, WireError on an oversized frame)."""
+def recv_frame(sock: socket.socket,
+               max_bytes: int = MAX_MESSAGE_BYTES) -> bytes:
+    """Receive one raw frame (blocking; raises ConnectionClosed on EOF,
+    WireError on an oversized frame)."""
     (n,) = _HEADER.unpack(_recv_exact(sock, _HEADER.size))
     if n > max_bytes:
         raise WireError(f"frame of {n} bytes exceeds the {max_bytes}-byte "
                         "message bound")
-    return pickle.loads(_recv_exact(sock, n))
+    return _recv_exact(sock, n)
+
+
+def send_msg(sock: socket.socket, msg: object) -> None:
+    """LEGACY single-trust-domain path: frame + send one pickled message
+    (callers serialize access per socket).  New code should speak through
+    :class:`repro.serve.codec.Channel` instead."""
+    import pickle
+    send_frame(sock, pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL))
+
+
+def recv_msg(sock: socket.socket,
+             max_bytes: int = MAX_MESSAGE_BYTES) -> object:
+    """LEGACY single-trust-domain path: receive one pickled message
+    (deserialized through the codec module's sanctioned shim)."""
+    from repro.serve import codec
+    return codec.legacy_loads(recv_frame(sock, max_bytes))
 
 
 def check_hello(msg: object) -> Hello:
@@ -159,10 +212,15 @@ def check_hello(msg: object) -> Hello:
 
 
 def connect(address: Tuple[str, int], *,
-            timeout_s: Optional[float] = 10.0) -> socket.socket:
+            timeout_s: Optional[float] = 10.0,
+            ssl_context: Optional[_ssl.SSLContext] = None) -> socket.socket:
     """TCP connect with TCP_NODELAY (small request/response frames should
-    not wait on Nagle) and the timeout cleared after establishment."""
+    not wait on Nagle) and the timeout cleared after establishment.
+    With ``ssl_context`` the socket is TLS-wrapped (the handshake runs
+    under the connect timeout)."""
     sock = socket.create_connection(address, timeout=timeout_s)
     sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    if ssl_context is not None:
+        sock = ssl_context.wrap_socket(sock, server_hostname=address[0])
     sock.settimeout(None)
     return sock

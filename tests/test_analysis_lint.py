@@ -189,6 +189,31 @@ RAW_TELEMETRY_CLEAN = """
 """
 
 
+# pickle-outside-codec is serve/-scoped: deserializing attacker-reachable
+# bytes belongs in codec.py's restricted loader, nowhere else
+PICKLE_BAD = """
+    import pickle
+    from pickle import loads
+
+    def read_spec(raw):
+        return pickle.loads(raw)
+
+    class Handler:
+        def on_frame(self, data):
+            return loads(data)
+"""
+
+PICKLE_CLEAN = """
+    import pickle
+
+    def write_spec(obj):
+        return pickle.dumps(obj)            # serializing is fine
+
+    def read_spec(raw, loads):
+        return loads(raw)                   # injected restricted loader
+"""
+
+
 def _write(tmp_path, name, text):
     p = tmp_path / name
     p.parent.mkdir(parents=True, exist_ok=True)
@@ -244,9 +269,35 @@ def test_raw_telemetry_dict_out_of_scope(tmp_path):
     assert lint_file(p) == []
 
 
+def test_pickle_outside_codec_fires_in_scope(tmp_path):
+    p = _write(tmp_path, "src/serve/worker.py", PICKLE_BAD)
+    findings = lint_file(p)
+    assert {f.rule for f in findings} == {"pickle-outside-codec"}
+    assert {f.symbol for f in findings} == {"read_spec", "Handler.on_frame"}
+
+
+def test_pickle_outside_codec_exempts_the_codec_itself(tmp_path):
+    # codec.py IS the trust boundary: its legacy shim is the one
+    # sanctioned deserialization site
+    p = _write(tmp_path, "src/serve/codec.py", PICKLE_BAD)
+    assert lint_file(p) == []
+
+
+def test_pickle_outside_codec_quiet_on_dumps_and_injected(tmp_path):
+    p = _write(tmp_path, "src/serve/spec.py", PICKLE_CLEAN)
+    assert lint_file(p) == []
+
+
+def test_pickle_outside_codec_out_of_scope(tmp_path):
+    # single-trust-domain pickle outside serve/ is not this rule's business
+    p = _write(tmp_path, "src/perfmodel/cachefile.py", PICKLE_BAD)
+    assert lint_file(p) == []
+
+
 def test_every_rule_has_a_fixture():
     assert set(RULE_NAMES) == set(CORPUS) | {"unlocked-shared-write",
-                                             "raw-telemetry-dict"}
+                                             "raw-telemetry-dict",
+                                             "pickle-outside-codec"}
 
 
 def test_syntax_error_is_reported_not_raised(tmp_path):

@@ -1,0 +1,309 @@
+"""Dynamic worker membership: TTL leases, the registrar announce plane,
+and elastic pool resize driven by join/leave/expiry.
+
+Covers the PR 10 membership invariants: leases age out on the injected
+clock with renewal NOT bumping the topology version (the O(1) sync
+contract); the registrar grants/renews/withdraws leases over the
+authenticated codec and refuses unauthenticated announcers; a
+ShardedEvaluator pointed at a MembershipView stays bit-identical while
+a worker's lease lapses mid-stream and again when it rejoins; gateway
+telemetry surfaces the lease table; and admission RetryAfter hints stay
+bounded and positive while the fleet churns underneath the queue.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.distributed import ShardedEvaluator
+from repro.obs.metrics import ManualClock, MetricsRegistry
+from repro.perfmodel import EvalRequest, ModelEvaluator, get_evaluator
+from repro.perfmodel.designspace import SPACE
+from repro.serve import (Gateway, Keyring, MembershipView, Registrar,
+                         RetryAfter, WorkerOptions, WorkerServer, wire)
+from repro.serve import codec as codec_mod
+
+RNG = np.random.default_rng(11)
+KEYS = {"k1": b"membership-secret"}
+
+
+def _fresh(tier: str = "proxy") -> ModelEvaluator:
+    return ModelEvaluator(get_evaluator(tier).models, tier=tier)
+
+
+def _assert_reports_identical(a, b):
+    assert a.workloads == b.workloads and a.detail == b.detail
+    assert np.array_equal(a.area, b.area)
+    for w in a.workloads:
+        assert np.array_equal(a.latency[w], b.latency[w])
+        if a.detail == "stalls":
+            assert np.array_equal(a.stall[w], b.stall[w])
+
+
+# --------------------------------------------------------------- leases
+def test_lease_lifecycle_on_manual_clock():
+    """Join bumps the version; renewals do NOT; expiry and Bye do — and
+    every transition lands in the membership counters."""
+    clock = ManualClock()
+    reg = MetricsRegistry()
+    view = MembershipView(ttl_s=5.0, clock=clock, metrics=reg)
+    assert view.live() == [] and view.version() == 0
+
+    view.announce(("10.0.0.1", 7001), digests=("d1",), capacity=2)
+    v_joined = view.version()
+    assert view.live() == [("10.0.0.1", 7001)] and v_joined == 1
+    assert reg.get("membership_joins").total() == 1
+    assert reg.get("membership_live").value() == 1
+
+    clock.advance(4.0)                      # renew inside the TTL window
+    view.announce(("10.0.0.1", 7001), digests=("d1", "d2"))
+    assert view.version() == v_joined       # renewal: topology unchanged
+    assert reg.get("membership_renewals").total() == 1
+    assert view.snapshot()["10.0.0.1:7001"]["digests"] == ["d1", "d2"]
+
+    clock.advance(4.9)                      # renewed lease still alive
+    assert len(view) == 1
+    clock.advance(0.2)                      # ...and now past its TTL
+    assert view.live() == []
+    assert view.version() == v_joined + 1
+    assert reg.get("membership_expirations").total() == 1
+    assert reg.get("membership_live").value() == 0
+
+    view.announce(("10.0.0.2", 7002))       # graceful leave path
+    assert view.remove(("10.0.0.2", 7002)) is True
+    assert view.remove(("10.0.0.2", 7002)) is False
+    assert reg.get("membership_leaves").total() == 1
+
+
+def test_lease_snapshot_reports_ttl_remaining():
+    clock = ManualClock()
+    view = MembershipView(ttl_s=10.0, clock=clock)
+    view.announce(("h", 1), capacity=3)
+    clock.advance(4.0)
+    snap = view.snapshot()["h:1"]
+    assert snap["capacity"] == 3 and snap["renewals"] == 0
+    assert snap["ttl_remaining_s"] == pytest.approx(6.0)
+
+
+# ------------------------------------------------------------ registrar
+def test_registrar_grants_renews_and_withdraws_over_codec():
+    """End to end over the wire: a signed Announce gets a LeaseAck with
+    the view's TTL, renewals keep the lease, Bye withdraws it."""
+    ring = Keyring(KEYS)
+    view = MembershipView(ttl_s=2.0)
+    reg = Registrar(view, keyring=ring).start()
+    try:
+        sock = wire.connect(reg.address)
+        ch = codec_mod.Channel(sock, keyring=ring)
+        ch.send(wire.Announce(("10.9.9.9", 4242), ("dig",), 2))
+        ack = ch.recv()
+        assert isinstance(ack, wire.LeaseAck)
+        assert ack.ttl_s == pytest.approx(2.0)
+        assert view.live() == [("10.9.9.9", 4242)]
+        ch.send(wire.Announce(("10.9.9.9", 4242), ("dig",), 2))
+        assert isinstance(ch.recv(), wire.LeaseAck)
+        assert view.snapshot()["10.9.9.9:4242"]["renewals"] == 1
+        ch.send(wire.Bye("draining"))
+        sock.close()
+        deadline = time.monotonic() + 10
+        while view.live() and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert view.live() == []
+    finally:
+        reg.close()
+
+
+def test_registrar_refuses_unauthenticated_announcers():
+    """An unsigned announcer cannot join the fleet (counted, no lease);
+    neither can a legacy pickle client without insecure=True."""
+    ring = Keyring(KEYS)
+    view = MembershipView()
+    reg = Registrar(view, keyring=ring).start()
+    try:
+        sock = wire.connect(reg.address)
+        ch = codec_mod.Channel(sock)            # no keyring: unsigned
+        ch.send(wire.Announce(("evil", 666)))
+        sock.close()                            # server just drops us
+        deadline = time.monotonic() + 10
+        while reg.auth_rejected < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert reg.auth_rejected == 1
+        assert view.live() == []                # never joined
+
+        sock = wire.connect(reg.address)
+        wire.send_msg(sock, wire.Announce(("evil", 667)))   # legacy pickle
+        sock.close()
+        deadline = time.monotonic() + 10
+        while reg.auth_rejected < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert view.live() == []
+    finally:
+        reg.close()
+
+
+def test_worker_announcer_joins_and_leaves_registrar():
+    """A WorkerServer pointed at a registrar announces itself (with its
+    served spec digests), renews, and withdraws with Bye on close."""
+    ring = Keyring(KEYS)
+    view = MembershipView(ttl_s=2.0)
+    reg = Registrar(view, keyring=ring).start()
+    srv = WorkerServer(options=WorkerOptions(
+        keys=KEYS, registrar=reg.address, announce_interval_s=0.1))
+    srv.start()
+    try:
+        assert view.wait_for(1, timeout_s=10.0)
+        assert view.live() == [(srv.host, srv.port)]
+        deadline = time.monotonic() + 10        # the heartbeat renews
+        key = f"{srv.host}:{srv.port}"
+        while (view.snapshot().get(key, {}).get("renewals", 0) < 2
+               and time.monotonic() < deadline):
+            time.sleep(0.02)
+        assert view.snapshot()[key]["renewals"] >= 2
+    finally:
+        srv.close()
+        reg.close()
+    deadline = time.monotonic() + 10
+    while view.live() and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert view.live() == []                    # Bye beat the TTL
+
+
+# ----------------------------------------------- membership-driven pool
+def test_sharded_evaluator_follows_membership_churn():
+    """Acceptance: lease expiry shrinks the fleet mid-stream and a
+    rejoin grows it back — reports stay bit-identical throughout, and
+    the pool never dials a lapsed worker."""
+    ring = Keyring(KEYS)
+    view = MembershipView(ttl_s=1.0)
+    reg = Registrar(view, keyring=ring).start()
+    opts = WorkerOptions(keys=KEYS, registrar=reg.address,
+                         announce_interval_s=0.1)
+    s1 = WorkerServer(options=opts)
+    s2 = WorkerServer(options=opts)
+    s1.start()
+    s2.start()
+    ev = None
+    try:
+        assert view.wait_for(2, timeout_s=10.0)
+        idx = SPACE.sample(RNG, 21)
+        want = _fresh().evaluate(EvalRequest(idx, "stalls"))
+        ev = ShardedEvaluator(_fresh(), mode="socket", membership=view,
+                              keyring=ring)
+        assert ev.workers == 2
+        _assert_reports_identical(ev.evaluate(EvalRequest(idx, "stalls")),
+                                  want)
+
+        s2.close()                              # silent death: TTL ages it out
+        deadline = time.monotonic() + 10
+        while len(view) > 1 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert view.live() == [(s1.host, s1.port)]
+        _assert_reports_identical(ev.evaluate(EvalRequest(idx, "stalls")),
+                                  want)
+        assert ev.workers == 1                  # fleet shrank under us
+
+        s3 = WorkerServer(options=opts)         # rejoin on a fresh port
+        s3.start()
+        try:
+            assert view.wait_for(2, timeout_s=10.0)
+            _assert_reports_identical(
+                ev.evaluate(EvalRequest(idx, "stalls")), want)
+            assert ev.workers == 2              # ...and grew back
+        finally:
+            s3.close()
+    finally:
+        if ev is not None:
+            ev.close()
+        s1.close()
+        s2.close()
+        reg.close()
+
+
+def test_gateway_telemetry_shows_membership_leases():
+    ring = Keyring(KEYS)
+    view = MembershipView(ttl_s=5.0)
+    reg = Registrar(view, keyring=ring).start()
+    srv = WorkerServer(options=WorkerOptions(
+        keys=KEYS, registrar=reg.address, announce_interval_s=0.1,
+        capacity=4))
+    srv.start()
+    gw = None
+    try:
+        assert view.wait_for(1, timeout_s=10.0)
+        sharded = ShardedEvaluator(_fresh(), mode="socket", membership=view,
+                                   keyring=ring)
+        gw = Gateway(sharded)
+        idx = SPACE.sample(RNG, 5)
+        assert np.array_equal(gw.objectives(idx), _fresh().objectives(idx))
+        key = f"{srv.host}:{srv.port}"
+        # the Ready handshake hands the spec digest to the announcer,
+        # which carries it on its NEXT renewal — wait that beat out
+        deadline = time.monotonic() + 10
+        leases = gw.telemetry()["fleet"]["leases"]
+        while (not leases.get(key, {}).get("digests")
+               and time.monotonic() < deadline):
+            time.sleep(0.05)
+            leases = gw.telemetry()["fleet"]["leases"]
+        assert key in leases
+        assert leases[key]["capacity"] == 4
+        assert leases[key]["ttl_remaining_s"] > 0
+        assert leases[key]["digests"]           # Ready registered the digest
+    finally:
+        if gw is not None:
+            gw.close()
+        srv.close()
+        reg.close()
+
+
+def test_retry_after_hints_bounded_under_membership_churn():
+    """Satellite: drain-ETA hints stay positive and bounded while
+    workers join and leave under the gateway's queue — never negative,
+    never unbounded."""
+    ring = Keyring(KEYS)
+    view = MembershipView(ttl_s=0.5)
+    reg = Registrar(view, keyring=ring).start()
+    opts = WorkerOptions(keys=KEYS, registrar=reg.address,
+                         announce_interval_s=0.1)
+    s1 = WorkerServer(options=opts)
+    s1.start()
+    gw = None
+    stop = threading.Event()
+
+    def churn():
+        # a flapping second worker: join, lapse, rejoin...
+        while not stop.is_set():
+            w = WorkerServer(options=opts)
+            w.start()
+            time.sleep(0.15)
+            w.close()
+            time.sleep(0.15)
+
+    t = threading.Thread(target=churn, daemon=True)
+    try:
+        assert view.wait_for(1, timeout_s=10.0)
+        sharded = ShardedEvaluator(_fresh(), mode="socket", membership=view,
+                                   keyring=ring)
+        gw = Gateway(sharded, max_queued_rows=3)
+        t.start()
+        idx = SPACE.sample(RNG, 40)             # fresh rows every round:
+        hints = []                              # the row cache must not
+        for r in range(8):                      # short-circuit the queue
+            base = r * 5
+            for i in range(3):                  # fill the backlog, no ticks
+                gw.submit(EvalRequest(idx[base + i:base + i + 1]),
+                          tenant=f"t{i}")
+            with pytest.raises(RetryAfter) as ei:
+                gw.submit(EvalRequest(idx[base + 3:base + 5]), tenant="late")
+            hints.append(ei.value.retry_after_s)
+            gw.tick()                           # drain between rounds
+            time.sleep(0.05)
+        for h in hints:
+            assert 0 < h <= 60.0, f"unbounded/negative drain ETA: {h}"
+    finally:
+        stop.set()
+        t.join(timeout=10)
+        if gw is not None:
+            gw.close()
+        s1.close()
+        reg.close()

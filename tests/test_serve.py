@@ -29,8 +29,11 @@ from repro.distributed.sharded import _worker_spec, evaluator_from_spec
 from repro.perfmodel import (EvalRequest, ModelEvaluator, OracleEvaluator,
                              get_evaluator)
 from repro.perfmodel.designspace import SPACE
-from repro.serve import (Gateway, RetryAfter, SocketPool, WIRE_VERSION,
-                         WorkerServer, start_worker_process, wire)
+from repro.distributed.faults import QuotaExceeded
+from repro.serve import (Gateway, Keyring, RetryAfter, SocketPool,
+                         WIRE_VERSION, WorkerOptions, WorkerServer,
+                         start_worker_process, wire)
+from repro.serve import codec as codec_mod
 
 RNG = np.random.default_rng(7)
 
@@ -463,3 +466,457 @@ def test_sweep_result_save_load_guards(tmp_path):
         load_sweep_result(path, key="some-other-study")
     with pytest.raises(FileNotFoundError):
         load_sweep_result(str(tmp_path / "missing.npz"))
+
+
+# ------------------------------------------------- trusted wire (PR 10)
+KEYS = {"k1": b"alpha-secret", "k2": b"beta-secret"}
+
+
+def _keyring(active="k1"):
+    return Keyring(KEYS, active=active)
+
+
+def test_codec_value_roundtrip_restricted_types():
+    """The binary codec round-trips exactly the frame vocabulary's types,
+    arrays bit-identically across the dtype allowlist."""
+    cases = [
+        None, True, False, 0, -1, 2**40, -(2**70), 1.5, float("inf"),
+        "héllo", b"\x00\xff raw", (1, "two", None), [1.0, [2, 3]],
+        {"k": (1, 2), "nested": {"x": b"y"}}, (),
+    ]
+    for v in cases:
+        assert codec_mod.decode_value(codec_mod.encode_value(v)) == v
+    for dtype in sorted(codec_mod.ALLOWED_DTYPES):
+        arr = (RNG.random((3, 4)) * 100).astype(dtype)
+        back = codec_mod.decode_value(codec_mod.encode_value(arr))
+        assert back.dtype == arr.dtype and np.array_equal(back, arr)
+    # NaN payloads survive bit-exactly too (array path is raw bytes)
+    arr = np.array([np.nan, 1.0, -np.inf])
+    back = codec_mod.decode_value(codec_mod.encode_value(arr))
+    assert arr.tobytes() == back.tobytes()
+
+
+def test_codec_rejects_offschema():
+    """Anything outside the schema is a typed CodecError, never an
+    object: bad dtypes, non-str dict keys, arbitrary classes, trailing
+    or truncated bytes, unknown tags."""
+    with pytest.raises(codec_mod.CodecError, match="dtype"):
+        codec_mod.encode_value(np.array([object()]))
+    with pytest.raises(codec_mod.CodecError, match="keys"):
+        codec_mod.encode_value({1: "x"})
+    with pytest.raises(codec_mod.CodecError, match="not wire-encodable"):
+        codec_mod.encode_value(Keyring(KEYS))
+    with pytest.raises(codec_mod.CodecError, match="unknown value tag"):
+        codec_mod.decode_value(b"Z")
+    with pytest.raises(codec_mod.CodecError, match="truncated"):
+        codec_mod.decode_value(codec_mod.encode_value("hello")[:-2])
+    with pytest.raises(codec_mod.CodecError, match="trailing"):
+        codec_mod.decode_value(codec_mod.encode_value(1) + b"junk")
+
+
+def test_codec_message_roundtrip_every_type():
+    idx = SPACE.sample(RNG, 5)
+    payload = ShardPayload(idx, "stalls", ("ttft", "tpot"))
+    report = _fresh().evaluate(EvalRequest(idx, "stalls"))
+    span = {"name": "worker.eval", "trace_id": "t", "span_id": "s",
+            "parent_id": None, "proc": "w:1", "thread": "serve-eval",
+            "t_start": 0.1, "t_end": 0.2, "status": "ok",
+            "attrs": {"rows": 5}}
+    msgs = [wire.Hello(b"spec-bytes"), wire.Ready("digest", ("a", "b")),
+            wire.Dispatch(7, payload, ("tid", "sid")),
+            wire.ResultMsg(7, report, (span,)),
+            wire.ErrorMsg(7, "boom", (), "quota.rows"),
+            wire.ErrorMsg(-1, "fatal"),
+            wire.Ping(3), wire.Pong(3), wire.Bye("done"),
+            wire.Announce(("10.0.0.7", 9707), ("d1", "d2"), 4),
+            wire.LeaseAck(2.5)]
+    for msg in msgs:
+        back = codec_mod.decode_msg(codec_mod.encode_msg(msg))
+        assert type(back) is type(msg)
+        if isinstance(msg, wire.Dispatch):
+            assert back.seq == msg.seq and back.trace_ctx == msg.trace_ctx
+            assert np.array_equal(back.payload.idx, payload.idx)
+            assert back.payload.detail == payload.detail
+            assert back.payload.workloads == payload.workloads
+        elif isinstance(msg, wire.ResultMsg):
+            _assert_reports_identical(back.report, report)
+            assert back.spans == (span,)
+        else:
+            assert back == msg
+
+
+def test_auth_sign_verify_rotation_and_rejects():
+    """Frames are HMAC-signed with the key id in the header (so rings
+    rotate without downtime); unsigned / unknown-key / tampered /
+    replayed frames raise typed AuthErrors before any decoding."""
+    ring = _keyring("k1")
+    body = codec_mod.encode_msg(wire.Ping(1))
+    # signing key rotates per-frame via key_id; both verify on one ring
+    for kid in ("k1", "k2"):
+        frame = codec_mod.seal_frame(body, ring, seq=0, key_id=kid)
+        assert codec_mod.open_frame(frame, ring, expected_seq=0) == body
+    # unsigned frame against a keyed receiver
+    with pytest.raises(codec_mod.AuthError, match="unsigned"):
+        codec_mod.open_frame(codec_mod.seal_frame(body, None, 0), ring, 0)
+    # unknown key id
+    other = Keyring({"k9": b"stranger"})
+    with pytest.raises(codec_mod.AuthError, match="unknown_key"):
+        codec_mod.open_frame(codec_mod.seal_frame(body, other, 0), ring, 0)
+    # tampered body (bit flip after sealing)
+    frame = bytearray(codec_mod.seal_frame(body, ring, 0))
+    frame[-1] ^= 0x01
+    with pytest.raises(codec_mod.AuthError, match="tamper"):
+        codec_mod.open_frame(bytes(frame), ring, 0)
+    # replay: stale sequence number, valid MAC
+    frame = codec_mod.seal_frame(body, ring, seq=0)
+    assert codec_mod.open_frame(frame, ring, 0) == body
+    with pytest.raises(codec_mod.AuthError, match="replay"):
+        codec_mod.open_frame(frame, ring, 1)
+
+
+def test_restricted_loads_blocks_gadgets_allows_spec():
+    """The allowlisted constructor table rebuilds real evaluator specs
+    but refuses pickle gadgets before construction."""
+    import pickle
+    spec = _worker_spec(_fresh())
+    rebuilt = evaluator_from_spec(spec, loads=codec_mod.restricted_loads)
+    idx = SPACE.sample(RNG, 6)
+    _assert_reports_identical(
+        rebuilt.evaluate(EvalRequest(idx, "objectives")),
+        _fresh().evaluate(EvalRequest(idx, "objectives")))
+
+    class Gadget:                       # classic reduce-to-call payload
+        def __reduce__(self):
+            return (os.system, ("true",))
+
+    evil = pickle.dumps(Gadget())
+    with pytest.raises(codec_mod.CodecError, match="not allowlisted"):
+        codec_mod.restricted_loads(evil)
+    evil2 = pickle.dumps(pytest.raises)  # callable outside repro/numpy
+    with pytest.raises(codec_mod.CodecError, match="not allowlisted"):
+        codec_mod.restricted_loads(evil2)
+
+
+@pytest.mark.parametrize("tier", ["proxy", "target"])
+def test_secure_socket_bit_identical_both_tiers(tier):
+    """Acceptance: codec + HMAC end-to-end — a keyed 2-worker fleet is
+    bit-identical to in-process on both fidelity tiers, with zero auth
+    or quota noise."""
+    s1 = WorkerServer(options=WorkerOptions(keys=KEYS))
+    s2 = WorkerServer(options=WorkerOptions(keys=KEYS))
+    s1.start()
+    s2.start()
+    ev = None
+    try:
+        idx = SPACE.sample(RNG, 23)
+        local = _fresh(tier)
+        ev = ShardedEvaluator(_fresh(tier), mode="socket",
+                              addresses=[(s1.host, s1.port),
+                                         (s2.host, s2.port)],
+                              keyring=_keyring())
+        for detail in ("objectives", "stalls"):
+            req = EvalRequest(idx, detail=detail)
+            _assert_reports_identical(ev.evaluate(req), local.evaluate(req))
+        assert s1.auth_rejected() == 0 and s2.auth_rejected() == 0
+        assert ev.quota_rerouted == 0
+    finally:
+        if ev is not None:
+            ev.close()
+        s1.close()
+        s2.close()
+
+
+def test_secure_worker_refuses_legacy_pickle_and_unsigned():
+    """A hardened worker refuses the pickle codec outright and, when
+    keyed, refuses unsigned binary frames — both counted, neither
+    evaluated."""
+    srv = WorkerServer(options=WorkerOptions(keys=KEYS))
+    srv.start()
+    try:
+        # legacy pickle client (insecure pool) against a secure worker
+        with pytest.raises(RuntimeError, match="binary codec"):
+            SocketPool(_fresh(), addresses=[(srv.host, srv.port)],
+                       insecure=True)
+        assert srv.auth_rejected("pickle_codec") == 1
+        # unsigned binary client against a keyed worker
+        with pytest.raises(RuntimeError, match="no repro.serve worker"):
+            SocketPool(_fresh(), addresses=[(srv.host, srv.port)])
+        assert srv.auth_rejected("unsigned") >= 1
+        assert srv.dispatches_served == 0
+    finally:
+        srv.close()
+
+
+def test_insecure_flag_restores_legacy_pickle_mode():
+    """insecure=True on both ends keeps the PR 7 single-trust-domain
+    transport working (explicitly opted into, never default)."""
+    srv = WorkerServer(options=WorkerOptions(insecure=True))
+    srv.start()
+    ev = None
+    try:
+        idx = SPACE.sample(RNG, 8)
+        ev = ShardedEvaluator(_fresh(), mode="socket",
+                              addresses=[(srv.host, srv.port)],
+                              insecure=True)
+        _assert_reports_identical(
+            ev.evaluate(EvalRequest(idx, "objectives")),
+            _fresh().evaluate(EvalRequest(idx, "objectives")))
+    finally:
+        if ev is not None:
+            ev.close()
+        srv.close()
+
+
+def test_wire_tamper_and_replay_counted_never_evaluated():
+    """Acceptance: a tampered or replayed frame on a live connection is
+    rejected + counted by the worker and the dispatch never evaluates."""
+    srv = WorkerServer(options=WorkerOptions(keys=KEYS))
+    srv.start()
+    try:
+        ring = _keyring()
+        # --- tampered Dispatch ------------------------------------------
+        sock = wire.connect((srv.host, srv.port))
+        ch = codec_mod.Channel(sock, keyring=ring)
+        ch.send(wire.Hello(_worker_spec(_fresh())))
+        assert isinstance(ch.recv(), wire.Ready)
+        dispatch = wire.Dispatch(0, ShardPayload(SPACE.sample(RNG, 2),
+                                                 "objectives", None))
+        frame = bytearray(codec_mod.seal_frame(
+            codec_mod.encode_msg(dispatch), ring, seq=1))
+        frame[-3] ^= 0xFF                        # corrupt the body
+        wire.send_frame(sock, bytes(frame))
+        reply = ch.recv()
+        assert isinstance(reply, wire.ErrorMsg) and reply.code == "auth.tamper"
+        sock.close()
+        deadline = time.monotonic() + 10
+        while srv.auth_rejected("tamper") < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert srv.auth_rejected("tamper") == 1
+        # --- replayed Dispatch ------------------------------------------
+        sock = wire.connect((srv.host, srv.port))
+        ch = codec_mod.Channel(sock, keyring=ring)
+        ch.send(wire.Hello(_worker_spec(_fresh())))
+        assert isinstance(ch.recv(), wire.Ready)
+        good = codec_mod.seal_frame(codec_mod.encode_msg(dispatch), ring,
+                                    seq=1)
+        wire.send_frame(sock, good)
+        first = ch.recv()
+        assert isinstance(first, wire.ResultMsg)  # the original lands
+        wire.send_frame(sock, good)               # verbatim replay
+        reply = ch.recv()
+        assert isinstance(reply, wire.ErrorMsg) and reply.code == "auth.replay"
+        sock.close()
+        deadline = time.monotonic() + 10
+        while srv.auth_rejected("replay") < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert srv.auth_rejected("replay") == 1
+        assert srv.dispatches_served == 1         # replay never evaluated
+    finally:
+        srv.close()
+
+
+# ------------------------------------------------- frame-size satellite
+def test_max_frame_bytes_oversized_dispatch_integration():
+    """The frame bound is configurable end to end: an oversized Dispatch
+    is refused client-side BEFORE it hits the wire (loud, connection
+    intact), and small dispatches keep flowing."""
+    srv = WorkerServer(options=WorkerOptions(keys=KEYS))
+    srv.start()
+    try:
+        pool = SocketPool(_fresh(), addresses=[(srv.host, srv.port)],
+                          keyring=_keyring(), max_frame_bytes=1 << 15)
+        with pytest.raises(codec_mod.FrameTooLarge, match="frame bound"):
+            pool.submit(ShardPayload(SPACE.sample(RNG, 3000),
+                                     "objectives", None))
+        idx = SPACE.sample(RNG, 4)               # small one still flows
+        rep = pool.submit(ShardPayload(idx, "objectives", None)) \
+            .result(timeout=60)
+        _assert_reports_identical(
+            rep, _fresh().evaluate(EvalRequest(idx, "objectives")))
+        assert pool.live_workers() == 1 and pool.reconnects == 0
+        pool.close()
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------- worker quotas
+def test_quota_rows_rerouted_not_hammered():
+    """A worker refusing shards by rows-quota gets rerouted around, not
+    retried-at: the merged report stays bit-identical, the refusal is
+    counted on both ends, and the refusing worker is NOT evicted."""
+    tight = WorkerServer(options=WorkerOptions(
+        keys=KEYS, max_rows_per_dispatch=4))
+    open_ = WorkerServer(options=WorkerOptions(keys=KEYS))
+    tight.start()
+    open_.start()
+    ev = None
+    try:
+        idx = SPACE.sample(RNG, 30)             # 15-row shards: over quota
+        ev = ShardedEvaluator(_fresh(), mode="socket",
+                              addresses=[(tight.host, tight.port),
+                                         (open_.host, open_.port)],
+                              keyring=_keyring(), retries=1)
+        rep = ev.evaluate(EvalRequest(idx, "stalls"))
+        _assert_reports_identical(
+            rep, _fresh().evaluate(EvalRequest(idx, "stalls")))
+        assert tight.quota_rejected("rows") >= 1
+        assert ev.quota_rerouted >= 1
+        assert ev.retried == 0                  # reroute consumed NO budget
+        snap = ev.registry.snapshot()
+        assert sorted(snap["live"]) == [0, 1]   # refusing worker not evicted
+    finally:
+        if ev is not None:
+            ev.close()
+        tight.close()
+        open_.close()
+
+
+def test_quota_rate_limit_token_bucket():
+    """Per-peer token bucket: burst dispatches above the rate come back
+    as typed QuotaExceeded, worker healthy throughout."""
+    srv = WorkerServer(options=WorkerOptions(
+        keys=KEYS, rate_limit=0.001, rate_burst=2))
+    srv.start()
+    try:
+        pool = SocketPool(_fresh(), addresses=[(srv.host, srv.port)],
+                          keyring=_keyring())
+        payload = ShardPayload(SPACE.sample(RNG, 2), "objectives", None)
+        futs = [pool.submit(payload) for _ in range(4)]
+        outcomes = []
+        for f in futs:
+            try:
+                f.result(timeout=60)
+                outcomes.append("ok")
+            except QuotaExceeded as exc:
+                assert exc.code == "quota.rate"
+                outcomes.append("quota")
+        assert outcomes.count("ok") == 2        # the burst allowance
+        assert outcomes.count("quota") == 2
+        assert srv.quota_rejected("rate") == 2
+        assert pool.quota_rejected == 2
+        assert pool.live_workers() == 1         # refusals keep the wire up
+        pool.close()
+    finally:
+        srv.close()
+
+
+def test_quota_deadline_rejects_long_dispatch():
+    """A dispatch past the wall-clock deadline answers with
+    quota.deadline (typed, counted) instead of hanging the client."""
+    srv = WorkerServer(options=WorkerOptions(keys=KEYS, deadline_s=1e-4))
+    srv.start()
+    try:
+        pool = SocketPool(_fresh(), addresses=[(srv.host, srv.port)],
+                          keyring=_keyring())
+        fut = pool.submit(ShardPayload(SPACE.sample(RNG, 64),
+                                       "stalls", None))
+        with pytest.raises(QuotaExceeded, match="deadline"):
+            fut.result(timeout=60)
+        assert srv.quota_rejected("deadline") == 1
+        assert pool.live_workers() == 1
+        pool.close()
+    finally:
+        srv.close()
+
+
+def test_quota_concurrency_admission_is_checked_before_eval():
+    """max_concurrent_evals admits on the reader thread: the semaphore
+    refuses the N+1th in-flight dispatch deterministically."""
+    srv = WorkerServer(options=WorkerOptions(max_concurrent_evals=1))
+    payload = ShardPayload(SPACE.sample(RNG, 2), "objectives", None)
+    d1, d2 = wire.Dispatch(0, payload), wire.Dispatch(1, payload)
+    assert srv._check_quota(d1, "peer") is None          # takes the slot
+    kind, detail = srv._check_quota(d2, "peer")
+    assert kind == "concurrency" and "max_concurrent_evals=1" in detail
+    srv._eval_slots.release()                            # eval finished
+    assert srv._check_quota(d2, "peer") is None
+    srv._eval_slots.release()
+    srv.close()
+
+
+# ------------------------------------------------------------------ TLS
+def _make_tls_certs(tmp_path):
+    import shutil
+    import subprocess
+    if shutil.which("openssl") is None:
+        pytest.skip("openssl CLI not available for test certs")
+    cert, key = str(tmp_path / "cert.pem"), str(tmp_path / "key.pem")
+    subprocess.run(
+        ["openssl", "req", "-x509", "-newkey", "rsa:2048", "-nodes",
+         "-keyout", key, "-out", cert, "-days", "1", "-subj",
+         "/CN=127.0.0.1"],
+        check=True, capture_output=True)
+    return cert, key
+
+
+def test_tls_wrapped_socket_bit_identical(tmp_path):
+    """Optional TLS: worker wraps its accept loop, client wraps its
+    dials, reports stay bit-identical over the encrypted wire."""
+    import ssl
+    cert, key = _make_tls_certs(tmp_path)
+    srv = WorkerServer(options=WorkerOptions(keys=KEYS, certfile=cert,
+                                             keyfile=key))
+    srv.start()
+    ev = None
+    try:
+        ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_CLIENT)
+        ctx.check_hostname = False
+        ctx.verify_mode = ssl.CERT_NONE         # self-signed test cert
+        idx = SPACE.sample(RNG, 10)
+        ev = ShardedEvaluator(_fresh(), mode="socket",
+                              addresses=[(srv.host, srv.port)],
+                              keyring=_keyring(), ssl_context=ctx)
+        _assert_reports_identical(
+            ev.evaluate(EvalRequest(idx, "stalls")),
+            _fresh().evaluate(EvalRequest(idx, "stalls")))
+    finally:
+        if ev is not None:
+            ev.close()
+        srv.close()
+
+
+def test_secure_fabric_survives_chaos_and_sigkill():
+    """Acceptance: the full hardened stack (codec + HMAC, spawned worker
+    processes) stays bit-identical through chaos crash/hang and a
+    SIGKILL mid-stream."""
+    opts = WorkerOptions(keys=KEYS)
+    w1 = start_worker_process(options=opts)
+    w2 = start_worker_process(options=opts)
+    ev = None
+    try:
+        idx = SPACE.sample(RNG, 32)
+        want = _fresh().evaluate(EvalRequest(idx, "stalls"))
+        plan = FaultPlan([FaultEvent(0, 0, "crash"),
+                          FaultEvent(1, 1, "hang")])
+        ev = ShardedEvaluator(_fresh(), mode="socket",
+                              addresses=[w1.address, w2.address],
+                              keyring=_keyring(), fault_plan=plan,
+                              shard_timeout_s=5.0, speculate=False,
+                              elastic=True)
+        reports, errors = [], []
+
+        def stream():
+            try:
+                for _ in range(12):
+                    reports.append(ev.evaluate(EvalRequest(idx, "stalls")))
+            except Exception as exc:            # noqa: BLE001 — reraised
+                errors.append(exc)
+
+        t = threading.Thread(target=stream)
+        t.start()
+        while len(reports) < 2 and t.is_alive():
+            time.sleep(0.01)
+        w2.kill()                               # SIGKILL, no goodbye
+        t.join(timeout=300)
+        assert not t.is_alive()
+        assert not errors, errors
+        assert len(reports) == 12
+        for rep in reports:
+            _assert_reports_identical(rep, want)
+        assert ev.registry.snapshot()["evictions"] >= 1
+    finally:
+        if ev is not None:
+            ev.close()
+        for w in (w1, w2):
+            if w.alive():
+                w.kill()
