@@ -101,11 +101,13 @@ def run(smoke: bool = False, full: bool = False) -> List[str]:
         ring = Keyring(KEYS)
         sock = wire.connect((srv.host, srv.port))
         ch = codec.Channel(sock, keyring=ring)
+        ch.client_handshake()
         ch.send(wire.Hello(_worker_spec(_fresh())))
         assert isinstance(ch.recv(), wire.Ready)
         payload = ShardPayload(SPACE.sample(rng, 2), "objectives", None)
         frame = bytearray(codec.seal_frame(
-            codec.encode_msg(wire.Dispatch(0, payload)), ring, seq=1))
+            codec.encode_msg(wire.Dispatch(0, payload)), ring, seq=1,
+            binding=ch.binding))
         frame[-1] ^= 0xFF
         wire.send_frame(sock, bytes(frame))
         reply = ch.recv()

@@ -27,9 +27,12 @@ Three layers, all in this file so the trust boundary is one module:
 * **Frame auth** — every codec frame can be HMAC-SHA256 signed with a
   shared-secret :class:`Keyring` (key id travels in the frame header,
   so keys rotate without downtime) and carries a monotonic
-  per-connection, per-direction sequence number; a receiver with a
-  keyring rejects unsigned frames, unknown key ids, bad MACs
-  (``tamper``) and out-of-order sequence numbers (``replay``) — all as
+  per-connection, per-direction sequence number; keyed connections open
+  with a session-nonce handshake whose pair of random nonces is folded
+  into every frame MAC, so a recorded signed session cannot replay over
+  a new connection.  A receiver with a keyring rejects unsigned frames,
+  unknown key ids, bad MACs (``tamper``), out-of-order sequence numbers
+  and signed frames outside a nonce-bound session (``replay``) — all as
   typed :class:`AuthError`\\ s, counted by the caller, **before** any
   payload decoding happens.
 
@@ -49,6 +52,7 @@ from __future__ import annotations
 import hashlib
 import hmac
 import io
+import os
 import pickle
 import struct
 import threading
@@ -60,8 +64,14 @@ from repro.serve import wire
 
 MAGIC = b"RSC1"                     # codec frame marker (pickle starts 0x80)
 FLAG_SIGNED = 0x01
+FLAG_NONCE = 0x02                   # session-nonce handshake frame
 _MAC = hashlib.sha256
 _MAC_BYTES = 32
+NONCE_BYTES = 16
+
+# containers deeper than this are hostile, not ours: the frame schema
+# nests ~4 levels (message dict -> report dict -> array dict -> array)
+MAX_NESTING_DEPTH = 64
 
 _U8 = struct.Struct(">B")
 _U32 = struct.Struct(">I")
@@ -186,12 +196,15 @@ def _truncated(pos: int, data: bytes) -> CodecError:
                       f"(have {len(data)})")
 
 
-def _dec_value(data: bytes, pos: int):
+def _dec_value(data: bytes, pos: int, depth: int = 0):
     """Decode one value at ``pos``; returns ``(value, next_pos)``.
 
     Flat ``(data, pos)`` recursion instead of a cursor object: this runs
     once per field of every frame, so method-call and slice overhead here
-    is codec overhead on every dispatch.
+    is codec overhead on every dispatch.  Nesting is bounded at
+    :data:`MAX_NESTING_DEPTH` so a hostile frame of stacked container
+    headers raises :class:`CodecError`, never ``RecursionError`` (which
+    would escape the typed except clauses of reader threads).
     """
     try:
         tag = data[pos]
@@ -217,15 +230,21 @@ def _dec_value(data: bytes, pos: int):
         if tag == _T_F:
             return False, pos
         if tag == _T_U or tag == _T_L:
+            if depth >= MAX_NESTING_DEPTH:
+                raise CodecError(f"nesting deeper than {MAX_NESTING_DEPTH} "
+                                 "levels")
             (n,) = _U32.unpack_from(data, pos)
             pos += 4
             items = []
             append = items.append
             for _ in range(n):
-                v, pos = _dec_value(data, pos)
+                v, pos = _dec_value(data, pos, depth + 1)
                 append(v)
             return (tuple(items), pos) if tag == _T_U else (items, pos)
         if tag == _T_M:
+            if depth >= MAX_NESTING_DEPTH:
+                raise CodecError(f"nesting deeper than {MAX_NESTING_DEPTH} "
+                                 "levels")
             (n,) = _U32.unpack_from(data, pos)
             pos += 4
             out: Dict[str, object] = {}
@@ -236,7 +255,7 @@ def _dec_value(data: bytes, pos: int):
                 if kend > len(data):
                     raise _truncated(pos, data)
                 key = data[pos:kend].decode("utf-8")
-                out[key], pos = _dec_value(data, kend)
+                out[key], pos = _dec_value(data, kend, depth + 1)
             return out, pos
         if tag == _T_A:
             (dn,) = _U8.unpack_from(data, pos)
@@ -511,21 +530,47 @@ class Keyring:
             hmac.new(key, data, _MAC).digest(), mac)
 
 
+def make_nonce_frame() -> Tuple[bytes, bytes]:
+    """A fresh session-nonce handshake frame; returns ``(nonce, frame)``.
+    The nonce travels in the clear — it adds no secrecy, only freshness:
+    once both sides fold the pair of nonces into every frame MAC, a
+    recorded session cannot replay over a NEW connection (the responder's
+    fresh nonce changes every MAC).  A man in the middle can corrupt the
+    exchange, but that only yields a connection where nothing verifies."""
+    nonce = os.urandom(NONCE_BYTES)
+    return nonce, MAGIC + bytes([FLAG_NONCE]) + nonce
+
+
+def is_nonce_frame(data: bytes) -> bool:
+    return data[:4] == MAGIC and len(data) > 4 and bool(data[4] & FLAG_NONCE)
+
+
+def nonce_of(frame: bytes) -> bytes:
+    """The nonce carried by a handshake frame (typed error off-shape)."""
+    if not is_nonce_frame(frame) or len(frame) != 5 + NONCE_BYTES:
+        raise CodecError("malformed session nonce frame")
+    return frame[5:]
+
+
 def seal_frame(body: bytes, keyring: Optional[Keyring], seq: int,
-               key_id: Optional[str] = None) -> bytes:
+               key_id: Optional[str] = None, *,
+               binding: bytes = b"") -> bytes:
     """Wrap a message body in the codec frame header; signed when a
-    keyring is given (header covers magic, flags, key id and the
-    per-direction sequence number, so none of them can be spliced)."""
+    keyring is given (the MAC covers magic, flags, key id, the
+    per-direction sequence number and the session ``binding`` — the
+    concatenated connection nonces — so none of them can be spliced and
+    a frame from one connection never verifies on another)."""
     if keyring is None:
         return MAGIC + bytes([0]) + body
     kid = (key_id if key_id is not None else keyring.active).encode("utf-8")
     head = MAGIC + bytes([FLAG_SIGNED]) + _U8.pack(len(kid)) + kid \
         + _U64.pack(seq)
-    return head + keyring.sign(kid.decode("utf-8"), head + body) + body
+    return head + keyring.sign(kid.decode("utf-8"),
+                               binding + head + body) + body
 
 
 def open_frame(data: bytes, keyring: Optional[Keyring],
-               expected_seq: int) -> bytes:
+               expected_seq: int, *, binding: bytes = b"") -> bytes:
     """Validate + unwrap one codec frame; every failure is typed and
     happens BEFORE the body is decoded."""
     if data[:4] != MAGIC:
@@ -533,6 +578,8 @@ def open_frame(data: bytes, keyring: Optional[Keyring],
     if len(data) < 5:
         raise CodecError("truncated frame header")
     flags = data[4]
+    if flags & FLAG_NONCE:
+        raise CodecError("unexpected session nonce frame mid-stream")
     if not flags & FLAG_SIGNED:
         if keyring is not None:
             raise AuthError("unsigned", "this endpoint requires signed "
@@ -558,7 +605,7 @@ def open_frame(data: bytes, keyring: Optional[Keyring],
     if not keyring.has(kid):
         raise AuthError("unknown_key", f"key id {kid!r}")
     head = data[:5 + 1 + kid_len + 8]
-    if not keyring.verify(kid, head + body, mac):
+    if not keyring.verify(kid, binding + head + body, mac):
         raise AuthError("tamper", f"bad MAC under key {kid!r}")
     if seq != expected_seq:
         raise AuthError("replay", f"frame seq {seq}, expected "
@@ -580,11 +627,23 @@ class Channel:
     ``codec='binary'`` speaks the restricted codec (optionally signed);
     ``codec='pickle'`` is the legacy single-trust-domain transport.
     ``send`` serializes + seals under an internal lock (the signing
-    sequence number and the socket write must stay in lockstep);
+    sequence number and the socket write must stay in lockstep — and the
+    pickle path serializes the raw ``sendall`` too, so reader / eval /
+    timer threads cannot interleave a frame stream);
     ``recv``/``feed`` verify and decode, maintaining the receive-side
     replay counter.  ``max_frame_bytes`` bounds BOTH directions: an
     outbound frame above it raises :class:`FrameTooLarge` before any
     byte hits the wire.
+
+    **Session binding**: a keyed channel must run the nonce handshake
+    before any signed traffic — the connecting side calls
+    :meth:`client_handshake`, the accepting side feeds the peer's nonce
+    frame to :meth:`server_handshake`.  Both nonces are folded into
+    every frame MAC, so a recorded signed session replayed verbatim
+    over a NEW connection fails verification (the fresh responder nonce
+    changes every expected MAC).  Signed frames before the handshake
+    are ``AuthError("replay")`` — the replay window they would reopen
+    is exactly what the handshake closes.
     """
 
     def __init__(self, sock, *, codec: str = CODEC_BINARY,
@@ -602,21 +661,50 @@ class Channel:
         self.keyring = keyring
         self.key_id = key_id
         self.max_frame_bytes = int(max_frame_bytes)
+        self.binding = b""              # session nonces, folded into MACs
+        self._handshaken = codec != CODEC_BINARY or keyring is None
         self._send_seq = 0
         self._recv_seq = 0
         self._send_lock = threading.Lock()
+
+    def client_handshake(self) -> None:
+        """Run the connecting side of the session-nonce exchange (no-op
+        on unsigned or pickle channels): send our nonce, receive the
+        peer's, bind both into every subsequent frame MAC."""
+        if self.codec != CODEC_BINARY or self.keyring is None \
+                or self._handshaken:
+            return
+        local, frame = make_nonce_frame()
+        wire.send_frame(self.sock, frame)
+        peer = nonce_of(wire.recv_frame(self.sock, self.max_frame_bytes))
+        self.binding = local + peer     # initiator nonce first
+        self._handshaken = True
+
+    def server_handshake(self, peer_frame: bytes) -> None:
+        """Run the accepting side: ``peer_frame`` is the connection's
+        first frame (already sniffed as a nonce frame); answer with our
+        own nonce and bind the pair."""
+        peer = nonce_of(peer_frame)
+        local, frame = make_nonce_frame()
+        wire.send_frame(self.sock, frame)
+        self.binding = peer + local     # initiator nonce first
+        self._handshaken = True
 
     def send(self, msg) -> None:
         if self.codec == CODEC_PICKLE:
             frame = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
             if len(frame) > self.max_frame_bytes:
                 raise FrameTooLarge(len(frame), self.max_frame_bytes)
-            wire.send_frame(self.sock, frame)
+            with self._send_lock:
+                wire.send_frame(self.sock, frame)
             return
+        if not self._handshaken:
+            raise AuthError("replay", "session nonce handshake required "
+                            "before signed traffic")
         body = encode_msg(msg)
         with self._send_lock:
             frame = seal_frame(body, self.keyring, self._send_seq,
-                               self.key_id)
+                               self.key_id, binding=self.binding)
             if len(frame) > self.max_frame_bytes:
                 raise FrameTooLarge(len(frame), self.max_frame_bytes)
             self._send_seq += 1
@@ -630,7 +718,14 @@ class Channel:
         hands the first frame here after choosing the codec)."""
         if self.codec == CODEC_PICKLE:
             return legacy_loads(raw)
-        body = open_frame(raw, self.keyring, self._recv_seq)
+        if not self._handshaken and len(raw) > 4 \
+                and raw[4] & FLAG_SIGNED:
+            # a signed frame with no session handshake is indistinguishable
+            # from a cross-connection replay of a recorded session — refuse
+            raise AuthError("replay", "signed frame before the session "
+                            "nonce handshake")
+        body = open_frame(raw, self.keyring, self._recv_seq,
+                          binding=self.binding)
         self._recv_seq += 1
         return decode_msg(body)
 
@@ -669,9 +764,24 @@ _SPEC_MODULE_PREFIXES = ("repro.",)
 _SPEC_MODULES = {"numpy", "numpy.core.multiarray", "numpy._core.multiarray",
                  "numpy.core.numeric", "numpy._core.numeric", "numpy.dtypes",
                  "collections"}
+# NO builtins.getattr / builtins.object here: getattr turns ANY reachable
+# module attribute (e.g. an `os` re-exported by some repro module) into
+# an arbitrary-call gadget, which is exactly the traversal this loader
+# exists to close.  Only value constructors resolve.
 _SPEC_BUILTINS = {"dict", "list", "tuple", "set", "frozenset", "str",
-                  "bytes", "int", "float", "bool", "complex", "object",
-                  "getattr"}
+                  "bytes", "bytearray", "int", "float", "bool", "complex"}
+# the only non-class module attributes the spec format legitimately
+# references: numpy's array/scalar reconstruction functions.  Everything
+# else resolved from an allowlisted module must be a CLASS — modules
+# (re-exported `os`/`pickle`), functions and bound callables raise.
+_SPEC_FUNCTIONS = {
+    ("numpy.core.multiarray", "_reconstruct"),
+    ("numpy._core.multiarray", "_reconstruct"),
+    ("numpy.core.multiarray", "scalar"),
+    ("numpy._core.multiarray", "scalar"),
+    ("numpy.core.numeric", "_frombuffer"),
+    ("numpy._core.numeric", "_frombuffer"),
+}
 
 
 class _RestrictedUnpickler(pickle.Unpickler):
@@ -683,7 +793,12 @@ class _RestrictedUnpickler(pickle.Unpickler):
                              "allowlisted")
         if module in _SPEC_MODULES or module.startswith(
                 _SPEC_MODULE_PREFIXES):
-            return super().find_class(module, name)
+            obj = super().find_class(module, name)
+            if isinstance(obj, type) or (module, name) in _SPEC_FUNCTIONS:
+                return obj
+            raise CodecError(f"spec constructor {module}.{name} resolves "
+                             f"to a {type(obj).__name__}, not a class — "
+                             "not allowlisted")
         raise CodecError(f"spec constructor {module}.{name} is not "
                          "allowlisted")
 

@@ -262,7 +262,11 @@ class Registrar:
                 conn, codec=mode,
                 keyring=self.keyring if mode == _codec.CODEC_BINARY else None,
                 max_frame_bytes=self.max_frame_bytes)
-            msg = ch.feed(first)
+            if mode == _codec.CODEC_BINARY and _codec.is_nonce_frame(first):
+                ch.server_handshake(first)
+                msg = ch.recv()
+            else:
+                msg = ch.feed(first)
             while True:
                 if isinstance(msg, wire.Announce):
                     announced = (str(msg.address[0]), int(msg.address[1]))

@@ -77,6 +77,10 @@ class _Connection:
             keyring=None if pool.insecure else pool.keyring,
             key_id=pool.key_id,
             max_frame_bytes=pool.max_frame_bytes)
+        # keyed channels bind the session nonces into every MAC before
+        # any signed traffic (no-op unsigned/pickle); runs under the
+        # handshake timeout like the Hello/Ready exchange
+        self.ch.client_handshake()
         self.ch.send(wire.Hello(pool.spec))
         ready = self.ch.recv()
         if isinstance(ready, wire.ErrorMsg):

@@ -238,6 +238,14 @@ class WorkerServer:
         if o.rate_limit > 0:
             now = self._clock()
             with self._buckets_lock:
+                # evict buckets idle long enough to have fully refilled —
+                # indistinguishable from fresh ones, so dropping them is
+                # lossless and the dict stays bounded by ACTIVE peers
+                # instead of growing one entry per client IP forever
+                stale = [p for p, b in self._buckets.items()
+                         if p != peer and (now - b.stamp) * b.rate >= b.burst]
+                for p in stale:
+                    del self._buckets[p]
                 bucket = self._buckets.get(peer)
                 if bucket is None:
                     burst = o.rate_burst if o.rate_burst > 0 \
@@ -363,7 +371,11 @@ class WorkerServer:
                 keyring=self.keyring if mode == _codec.CODEC_BINARY
                 else None,
                 max_frame_bytes=self.max_frame_bytes)
-            hello = wire.check_hello(ch.feed(first))
+            if mode == _codec.CODEC_BINARY and _codec.is_nonce_frame(first):
+                ch.server_handshake(first)
+                hello = wire.check_hello(ch.recv())
+            else:
+                hello = wire.check_hello(ch.feed(first))
             digest = _codec.spec_digest(hello.spec)
             if self.options.spec_digests and \
                     digest not in self.options.spec_digests:
@@ -461,6 +473,7 @@ class _Announcer(threading.Thread):
             sock = wire.connect(o.registrar, timeout_s=5.0)
             self._ch = _codec.Channel(sock, keyring=self.server.keyring,
                                       max_frame_bytes=1 << 20)
+            self._ch.client_handshake()
         with self._lock:
             digests = self._digests
         self._ch.send(wire.Announce((self.server.host, self.server.port),

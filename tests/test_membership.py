@@ -96,6 +96,7 @@ def test_registrar_grants_renews_and_withdraws_over_codec():
     try:
         sock = wire.connect(reg.address)
         ch = codec_mod.Channel(sock, keyring=ring)
+        ch.client_handshake()
         ch.send(wire.Announce(("10.9.9.9", 4242), ("dig",), 2))
         ack = ch.recv()
         assert isinstance(ack, wire.LeaseAck)

@@ -514,6 +514,22 @@ def test_codec_rejects_offschema():
         codec_mod.decode_value(codec_mod.encode_value(1) + b"junk")
 
 
+def test_codec_bounds_nesting_depth():
+    """A hostile frame of stacked container headers is a typed
+    CodecError, never a RecursionError that would escape the reader
+    threads' typed except clauses."""
+    import struct as struct_mod
+    one = struct_mod.pack(">I", 1)
+    # schema-depth structures stay well inside the bound
+    v = {"a": [( {"b": [1]}, )]}
+    assert codec_mod.decode_value(codec_mod.encode_value(v)) == v
+    for header in (b"L" + one, b"U" + one,
+                   b"M" + one + struct_mod.pack(">I", 1) + b"k"):
+        hostile = header * (codec_mod.MAX_NESTING_DEPTH + 8) + b"N"
+        with pytest.raises(codec_mod.CodecError, match="nesting deeper"):
+            codec_mod.decode_value(hostile)
+
+
 def test_codec_message_roundtrip_every_type():
     idx = SPACE.sample(RNG, 5)
     payload = ShardPayload(idx, "stalls", ("ttft", "tpot"))
@@ -572,6 +588,14 @@ def test_auth_sign_verify_rotation_and_rejects():
     assert codec_mod.open_frame(frame, ring, 0) == body
     with pytest.raises(codec_mod.AuthError, match="replay"):
         codec_mod.open_frame(frame, ring, 1)
+    # session binding: a frame sealed under one connection's nonces
+    # never verifies under another's (cross-connection replay)
+    frame = codec_mod.seal_frame(body, ring, seq=0, binding=b"sess-A")
+    assert codec_mod.open_frame(frame, ring, 0, binding=b"sess-A") == body
+    with pytest.raises(codec_mod.AuthError, match="tamper"):
+        codec_mod.open_frame(frame, ring, 0, binding=b"sess-B")
+    with pytest.raises(codec_mod.AuthError, match="tamper"):
+        codec_mod.open_frame(frame, ring, 0)
 
 
 def test_restricted_loads_blocks_gadgets_allows_spec():
@@ -595,6 +619,39 @@ def test_restricted_loads_blocks_gadgets_allows_spec():
     evil2 = pickle.dumps(pytest.raises)  # callable outside repro/numpy
     with pytest.raises(codec_mod.CodecError, match="not allowlisted"):
         codec_mod.restricted_loads(evil2)
+
+
+def test_restricted_loads_blocks_module_attribute_traversal():
+    """Hand-crafted pickles cannot laterally escape the allowlist: a
+    repro module's re-exported ``os`` resolves to a module (not a
+    class) and is refused, and ``builtins.getattr`` — the gadget that
+    would turn any such module into ``os.system`` — is not allowlisted
+    at all."""
+    def su(s):                       # SHORT_BINUNICODE opcode
+        b = s.encode("utf-8")
+        return b"\x8c" + bytes([len(b)]) + b
+
+    PROTO, STACK_GLOBAL, STOP = b"\x80\x04", b"\x93", b"."
+    TUPLE2, REDUCE = b"\x86", b"R"
+    # STACK_GLOBAL('repro.runtime.fault', 'os'): an allowlisted module's
+    # top-level `import os` must not resolve through find_class
+    evil = (PROTO + su("repro.runtime.fault") + su("os")
+            + STACK_GLOBAL + STOP)
+    with pytest.raises(codec_mod.CodecError, match="not a class"):
+        codec_mod.restricted_loads(evil)
+    # the full traversal chain: getattr(<module os>, 'system')('true')
+    evil = (PROTO
+            + su("builtins") + su("getattr") + STACK_GLOBAL
+            + su("repro.runtime.fault") + su("os") + STACK_GLOBAL
+            + su("system") + TUPLE2 + REDUCE
+            + su("true") + b"\x85" + REDUCE       # TUPLE1 + call
+            + STOP)
+    with pytest.raises(codec_mod.CodecError, match="not allowlisted"):
+        codec_mod.restricted_loads(evil)
+    # plain pickled specs still cannot smuggle getattr either
+    import pickle
+    with pytest.raises(codec_mod.CodecError, match="not allowlisted"):
+        codec_mod.restricted_loads(pickle.dumps(getattr))
 
 
 @pytest.mark.parametrize("tier", ["proxy", "target"])
@@ -677,12 +734,14 @@ def test_wire_tamper_and_replay_counted_never_evaluated():
         # --- tampered Dispatch ------------------------------------------
         sock = wire.connect((srv.host, srv.port))
         ch = codec_mod.Channel(sock, keyring=ring)
+        ch.client_handshake()
         ch.send(wire.Hello(_worker_spec(_fresh())))
         assert isinstance(ch.recv(), wire.Ready)
         dispatch = wire.Dispatch(0, ShardPayload(SPACE.sample(RNG, 2),
                                                  "objectives", None))
         frame = bytearray(codec_mod.seal_frame(
-            codec_mod.encode_msg(dispatch), ring, seq=1))
+            codec_mod.encode_msg(dispatch), ring, seq=1,
+            binding=ch.binding))
         frame[-3] ^= 0xFF                        # corrupt the body
         wire.send_frame(sock, bytes(frame))
         reply = ch.recv()
@@ -695,10 +754,11 @@ def test_wire_tamper_and_replay_counted_never_evaluated():
         # --- replayed Dispatch ------------------------------------------
         sock = wire.connect((srv.host, srv.port))
         ch = codec_mod.Channel(sock, keyring=ring)
+        ch.client_handshake()
         ch.send(wire.Hello(_worker_spec(_fresh())))
         assert isinstance(ch.recv(), wire.Ready)
         good = codec_mod.seal_frame(codec_mod.encode_msg(dispatch), ring,
-                                    seq=1)
+                                    seq=1, binding=ch.binding)
         wire.send_frame(sock, good)
         first = ch.recv()
         assert isinstance(first, wire.ResultMsg)  # the original lands
@@ -711,6 +771,149 @@ def test_wire_tamper_and_replay_counted_never_evaluated():
             time.sleep(0.01)
         assert srv.auth_rejected("replay") == 1
         assert srv.dispatches_served == 1         # replay never evaluated
+    finally:
+        srv.close()
+
+
+class _RecordingSocket:
+    """Socket proxy that keeps a copy of every outbound chunk — the
+    network attacker's tape recorder."""
+
+    def __init__(self, sock):
+        self._sock = sock
+        self.sent = []
+
+    def sendall(self, data):
+        self.sent.append(bytes(data))
+        self._sock.sendall(data)
+
+    def recv(self, n):
+        return self._sock.recv(n)
+
+    def close(self):
+        self._sock.close()
+
+
+def test_recorded_session_replayed_on_new_connection_is_rejected():
+    """Cross-connection replay: record an entire valid signed session,
+    replay it verbatim over a fresh TCP connection — the worker's fresh
+    session nonce changes every expected MAC, so nothing verifies,
+    nothing evaluates, and the reject is counted."""
+    srv = WorkerServer(options=WorkerOptions(keys=KEYS))
+    srv.start()
+    try:
+        ring = _keyring()
+        rec = _RecordingSocket(wire.connect((srv.host, srv.port)))
+        ch = codec_mod.Channel(rec, keyring=ring)
+        ch.client_handshake()
+        ch.send(wire.Hello(_worker_spec(_fresh())))
+        assert isinstance(ch.recv(), wire.Ready)
+        ch.send(wire.Dispatch(0, ShardPayload(SPACE.sample(RNG, 2),
+                                              "objectives", None)))
+        assert isinstance(ch.recv(), wire.ResultMsg)
+        rec.close()
+        deadline = time.monotonic() + 10
+        # the reply races the worker-side counter inc: wait it out
+        while srv.dispatches_served < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert srv.dispatches_served == 1
+        # the attacker replays the recorded byte stream on a new socket
+        replay_sock = wire.connect((srv.host, srv.port))
+        for chunk in rec.sent:
+            try:
+                replay_sock.sendall(chunk)
+            except OSError:
+                break                 # server already dropped the replay
+        deadline = time.monotonic() + 10
+        while srv.auth_rejected() < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        replay_sock.close()
+        # replayed Hello fails its MAC under the fresh server nonce
+        assert srv.auth_rejected("tamper") >= 1
+        assert srv.dispatches_served == 1     # nothing re-evaluated
+    finally:
+        srv.close()
+
+
+def test_signed_frames_without_session_handshake_are_rejected():
+    """A keyed endpoint refuses signed traffic outside a nonce-bound
+    session (the window a handshake-stripping replay would need)."""
+    srv = WorkerServer(options=WorkerOptions(keys=KEYS))
+    srv.start()
+    try:
+        ring = _keyring()
+        sock = wire.connect((srv.host, srv.port))
+        body = codec_mod.encode_msg(wire.Hello(b"spec"))
+        wire.send_frame(sock, codec_mod.seal_frame(body, ring, seq=0))
+        deadline = time.monotonic() + 10
+        while srv.auth_rejected("replay") < 1 \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        sock.close()
+        assert srv.auth_rejected("replay") == 1
+        assert srv.dispatches_served == 0
+    finally:
+        srv.close()
+
+
+def test_pickle_channel_serializes_concurrent_sends():
+    """The legacy pickle path locks the socket write like the binary
+    path: many threads sharing one channel (reader Pong, eval Result,
+    deadline timer) never interleave the length-prefixed stream."""
+    a, b = socket_mod.socketpair()
+    try:
+        ch = codec_mod.Channel(a, codec=codec_mod.CODEC_PICKLE)
+        peer = codec_mod.Channel(b, codec=codec_mod.CODEC_PICKLE)
+        n_threads, per_thread = 8, 40
+        pad = "x" * 4096            # big enough to straddle sendall calls
+        got, errs = [], []
+
+        def reader():
+            try:
+                for _ in range(n_threads * per_thread):
+                    got.append(peer.recv().seq)
+            except Exception as exc:     # noqa: BLE001 — test harness
+                errs.append(exc)
+
+        def blast(t):
+            for i in range(per_thread):
+                ch.send(wire.ErrorMsg(t * per_thread + i, pad))
+
+        rt = threading.Thread(target=reader)
+        rt.start()
+        threads = [threading.Thread(target=blast, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        rt.join(timeout=30)
+        assert not errs and not rt.is_alive()
+        assert sorted(got) == list(range(n_threads * per_thread))
+    finally:
+        a.close()
+        b.close()
+
+
+def test_worker_prunes_idle_peer_rate_buckets():
+    """Per-peer token buckets are evicted once fully refilled, so the
+    worker does not grow one bucket per client IP forever."""
+    from repro.obs.metrics import ManualClock
+    clk = ManualClock()
+    srv = WorkerServer(options=WorkerOptions(rate_limit=10.0), clock=clk)
+    try:
+        msg = wire.Dispatch(0, ShardPayload(SPACE.sample(RNG, 1),
+                                            "objectives", None))
+        for i in range(50):
+            assert srv._check_quota(msg, f"10.0.0.{i}") is None
+        assert len(srv._buckets) == 50
+        clk.advance(60.0)              # every bucket refills (burst/rate=2s)
+        assert srv._check_quota(msg, "10.1.0.1") is None
+        assert set(srv._buckets) == {"10.1.0.1"}
+        # a still-active peer is never pruned out from under its debit
+        clk.advance(0.05)
+        assert srv._check_quota(msg, "10.1.0.1") is None
+        assert "10.1.0.1" in srv._buckets
     finally:
         srv.close()
 
